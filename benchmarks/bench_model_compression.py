@@ -1,0 +1,94 @@
+"""Paper Table II + Fig. 16: model compression CR/quality deltas, and the
+K-means quantization comparison (better ratio+accuracy, much slower)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import (dvnr_metrics, make_volume, save_result,
+                               train_dvnr)
+from repro.compress.kmeans import kmeans_decode, kmeans_encode
+from repro.compress.model_compress import compress_model, decompress_model
+from repro.configs.dvnr import DVNRConfig
+
+CFG = DVNRConfig(n_levels=3, n_features_per_level=4, log2_hashmap_size=11,
+                 base_resolution=8, per_level_scale=2.0, n_neurons=16,
+                 n_hidden_layers=2, epochs=10, batch_size=4096, n_train_min=64)
+
+
+def _metrics_with_params(cfg, state, parts, new_params):
+    class S:  # tiny adapter: dvnr_metrics reads .params
+        params = new_params
+    return dvnr_metrics(cfg, S, parts, with_ssim=True)
+
+
+def run(quick: bool = False) -> dict:
+    kinds = ["magnetic", "s3d"] if not quick else ["magnetic"]
+    rows, kmeans_rows = [], []
+    for kind in kinds:
+        parts, vols = make_volume(kind, (1, 1, 2), (16, 16, 16))
+        state, tr = train_dvnr(CFG, parts, vols)
+        base = dvnr_metrics(CFG, state, parts)
+
+        # ---- paper's SZ3/ZFP/zstd-style model compression at 3 targets ---- #
+        for r_enc, r_mlp in [(0.01, 0.005), (0.02, 0.01), (0.05, 0.02)]:
+            t0 = time.time()
+            blobs, recs = [], []
+            for p in range(len(parts)):
+                one = jax.tree.map(lambda t: t[p], state.params)
+                blob, _ = compress_model(CFG, one, r_enc=r_enc, r_mlp=r_mlp)
+                blobs.append(blob)
+                recs.append(decompress_model(CFG, blob))
+            comp_s = time.time() - t0
+            stacked = jax.tree.map(lambda *xs: np.stack(xs), *recs)
+            m = _metrics_with_params(CFG, state, parts, stacked)
+            f16 = sum(2 * sum(np.asarray(x).size for x in
+                              jax.tree.leaves(jax.tree.map(lambda t: t[p],
+                                                           state.params)))
+                      for p in range(len(parts)))
+            model_cr = f16 / max(sum(len(b) for b in blobs), 1)
+            rows.append(dict(kind=kind, r_enc=r_enc, r_mlp=r_mlp,
+                             model_cr=model_cr, comp_s=comp_s,
+                             d_psnr=m["psnr"] - base["psnr"],
+                             d_ssim=m["ssim"] - base["ssim"],
+                             d_dssim=m["dssim"] - base["dssim"]))
+            print(f"[{kind}] zfp/sz3 r_enc={r_enc}: model_CR={model_cr:.2f} "
+                  f"dPSNR={m['psnr']-base['psnr']:+.2f} t={comp_s*1e3:.0f}ms")
+
+        # ---- K-means quantization (Lu et al. extended to encodings) ------ #
+        bits_list = [4, 6, 8] if not quick else [6]
+        for bits in bits_list:
+            t0 = time.time()
+            recs, nbytes = [], 0
+            for p in range(len(parts)):
+                one = jax.tree.map(lambda t: t[p], state.params)
+                arrays = {"tables": np.asarray(one["tables"]),
+                          **{f"mlp{i}": np.asarray(w)
+                             for i, w in enumerate(one["mlp"])}}
+                blob = kmeans_encode(arrays, bits, iters=8)
+                nbytes += len(blob)
+                dec = kmeans_decode(blob)
+                recs.append({"tables": dec["tables"],
+                             "mlp": [dec[f"mlp{i}"]
+                                     for i in range(len(one["mlp"]))]})
+            comp_s = time.time() - t0
+            stacked = jax.tree.map(lambda *xs: np.stack(xs), *recs)
+            m = _metrics_with_params(CFG, state, parts, stacked)
+            f16 = sum(2 * np.asarray(x).size
+                      for x in jax.tree.leaves(state.params))
+            kmeans_rows.append(dict(kind=kind, bits=bits,
+                                    model_cr=f16 / max(nbytes, 1),
+                                    comp_s=comp_s,
+                                    d_psnr=m["psnr"] - base["psnr"]))
+            print(f"[{kind}] kmeans b={bits}: model_CR={f16/max(nbytes,1):.2f} "
+                  f"dPSNR={m['psnr']-base['psnr']:+.2f} t={comp_s:.2f}s")
+
+    out = {"zfp_sz3": rows, "kmeans": kmeans_rows}
+    save_result("model_compression", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,99 @@
+"""Paper Fig. 8: post-hoc quality-vs-ratio across datasets & model sizes.
+
+Four synthetic datasets, three DVNR model sizes each -> (ratio, PSNR, DSSIM)
+curve, plus image-space quality of DVNR renders vs ground-truth renders
+(volume renderer on the raw grid) at matched camera/TF.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (dvnr_metrics, make_volume, save_result,
+                               train_dvnr)
+from repro.compress.model_compress import compress_stacked
+from repro.configs.dvnr import DVNRConfig
+from repro.core.metrics import psnr, ssim2d
+from repro.core.render import Camera, default_tf, make_rays, render_distributed
+from repro.data.volume import sample_trilinear
+
+SIZES = {                      # log2_hashmap_size ladder (paper's model sweep)
+    "small": 7, "medium": 9, "large": 11,
+}
+
+
+def _render_ground_truth(parts, grange, cam, w, h, n_samples=32):
+    """Ray-march the raw grids directly (the Ascent-side reference)."""
+    tf = default_tf()
+    origins, dirs = make_rays(cam, w, h)
+    from repro.core.render import apply_tf, composite_depth_sort, ray_aabb
+    from repro.kernels.composite.ops import composite
+    images, depths = [], []
+    for p in parts:
+        lo = jnp.asarray(p.origin, jnp.float32)
+        hi = lo + jnp.asarray(p.extent, jnp.float32)
+        t0, t1 = ray_aabb(origins, dirs, lo, hi)
+        hit = t1 > t0
+        S = n_samples
+        dt = (t1 - t0) / S
+        ts = t0[:, None] + (jnp.arange(S) + 0.5) * dt[:, None]
+        pos = origins[:, None] + ts[..., None] * dirs[:, None]
+        local = (pos - lo) / (hi - lo)
+        vals = sample_trilinear(p.data, local.reshape(-1, 3), p.ghost)
+        vals = vals.reshape(ts.shape)
+        gmin, gmax = grange
+        vg = (vals - gmin) / max(gmax - gmin, 1e-12)
+        rgba = apply_tf(vg, tf)
+        alpha = 1.0 - jnp.exp(-rgba[..., 3] * 50.0 * dt[:, None])
+        rgba = jnp.concatenate([rgba[..., :3], alpha[..., None]], -1)
+        rgba = jnp.where(hit[:, None, None], rgba, 0.0)
+        images.append(composite(rgba, "ref"))
+        depths.append(jnp.where(hit, t0, jnp.inf))
+    from repro.core.render import composite_depth_sort
+    img = composite_depth_sort(jnp.stack(images), jnp.stack(depths))
+    return img.reshape(h, w, 4)
+
+
+def run(quick: bool = False) -> dict:
+    kinds = ["magnetic", "s3d", "nekrs", "cloverleaf"] if not quick \
+        else ["magnetic"]
+    sizes = list(SIZES.items()) if not quick else [("small", 7), ("large", 11)]
+    grid, local = (1, 1, 2), (24, 24, 24)
+    cam = Camera(eye=(1.8, 1.4, 1.6))
+    W = H = 48
+    rows = []
+    for kind in kinds:
+        parts, vols = make_volume(kind, grid, local)
+        grange = (min(p.vmin for p in parts), max(p.vmax for p in parts))
+        gt_img = _render_ground_truth(parts, grange, cam, W, H)
+        for size_name, logT in sizes:
+            cfg = DVNRConfig(n_levels=3, n_features_per_level=2,
+                             log2_hashmap_size=logT, base_resolution=6,
+                             per_level_scale=2.0, n_neurons=16,
+                             n_hidden_layers=2, epochs=10, batch_size=4096,
+                             n_train_min=64)
+            state, tr = train_dvnr(cfg, parts, vols)
+            blobs = compress_stacked(cfg, state.params)
+            m = dvnr_metrics(cfg, state, parts,
+                             model_blob_bytes=sum(len(b) for b, _ in blobs))
+            meta = [{"origin": p.origin, "extent": p.extent,
+                     "vmin": p.vmin, "vmax": p.vmax} for p in parts]
+            img = render_distributed(cfg, state.params, meta, cam, W, H,
+                                     grange, n_samples=32)
+            img_psnr = float(psnr(img[..., :3], gt_img[..., :3]))
+            img_ssim = float(ssim2d(img[..., :3], gt_img[..., :3]))
+            rows.append(dict(kind=kind, size=size_name, ratio=m["ratio"],
+                             psnr=m["psnr"], dssim=m["dssim"],
+                             image_psnr=img_psnr, image_ssim=img_ssim,
+                             train_s=tr["train_s"]))
+            print(f"[{kind}/{size_name}] CR={m['ratio']:.1f} "
+                  f"psnr={m['psnr']:.1f} dssim={m['dssim']:.4f} "
+                  f"img_psnr={img_psnr:.1f} img_ssim={img_ssim:.3f}")
+    out = {"rows": rows}
+    save_result("quality", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

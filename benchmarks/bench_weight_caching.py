@@ -1,0 +1,71 @@
+"""Paper §VI-B / Fig. 7: weight caching (warm-start from the previous
+timestep). Measures (a) steps to reach a target loss with/without caching
+(the paper's up-to-10x compression-time reduction as the simulation evolves)
+and (b) the PSNR trajectory over timesteps for both arms."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result
+from repro.configs.dvnr import DVNRConfig
+from repro.core.trainer import DVNRTrainer
+from repro.data.volume import make_partition
+
+CFG = DVNRConfig(n_levels=3, n_features_per_level=4, log2_hashmap_size=11,
+                 base_resolution=8, per_level_scale=2.0, n_neurons=16,
+                 n_hidden_layers=2, batch_size=4096, target_loss=0.02,
+                 n_train_min=10)
+
+
+def _steps_to_target(trainer, vols, cached, max_steps=400):
+    state = trainer.init(jax.random.PRNGKey(0), cached_params=cached)
+    state, hist = trainer.train(state, vols, steps=max_steps,
+                                key=jax.random.PRNGKey(1))
+    return state, int(state.step)
+
+
+def run(quick: bool = False) -> dict:
+    n_ts = 4 if quick else 6
+    dt = 0.04
+    grid, local, P = (1, 1, 2), (16, 16, 16), 2
+    rows = []
+    cached = None
+    trainer = DVNRTrainer(CFG, P)
+    for i in range(n_ts):
+        t = 0.2 + i * dt
+        parts = [make_partition("cloverleaf", p, grid, local, t)
+                 for p in range(P)]
+        vols = jnp.stack([p.normalized() for p in parts])
+
+        state_c, steps_c = _steps_to_target(trainer, vols, cached)
+        cached = state_c.params
+        ev_c = trainer.evaluate(state_c, vols, parts[0].owned_shape)
+
+        state_u, steps_u = _steps_to_target(trainer, vols, None)
+        ev_u = trainer.evaluate(state_u, vols, parts[0].owned_shape)
+
+        rows.append(dict(timestep=i, steps_cached=steps_c,
+                         steps_uncached=steps_u,
+                         psnr_cached=ev_c["psnr"], psnr_uncached=ev_u["psnr"],
+                         speedup=steps_u / max(steps_c, 1)))
+        print(f"t{i}: cached {steps_c} steps ({ev_c['psnr']:.1f}dB) vs "
+              f"uncached {steps_u} steps ({ev_u['psnr']:.1f}dB) -> "
+              f"{steps_u/max(steps_c,1):.1f}x")
+
+    later = rows[1:]
+    out = {"rows": rows,
+           "mean_speedup_after_first": float(np.mean([r["speedup"]
+                                                      for r in later])),
+           "mean_psnr_gain": float(np.mean([r["psnr_cached"]
+                                            - r["psnr_uncached"]
+                                            for r in later]))}
+    print(f"mean speedup after t0: {out['mean_speedup_after_first']:.2f}x, "
+          f"mean PSNR gain: {out['mean_psnr_gain']:+.2f}dB")
+    save_result("weight_caching", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,87 @@
+"""Roofline report generator: reads results/dryrun/<mesh>/*.json and emits
+the EXPERIMENTS.md §Roofline tables (markdown + CSV).
+
+Per (arch, shape, mesh): the three terms in seconds, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS usefulness ratio, and the roofline fraction
+(model-flops time / dominant-term time)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import save_result
+
+DRYRUN = Path(__file__).resolve().parent.parent / "results" / "dryrun"
+
+COLS = ["arch", "shape", "kind", "compute_s", "memory_s", "collective_s",
+        "dominant", "roofline_fraction", "useful_flops_ratio", "devices"]
+
+
+def load_records(mesh: str) -> list[dict]:
+    recs = []
+    for f in sorted((DRYRUN / mesh).glob("*.json")):
+        r = json.loads(f.read_text())
+        recs.append(r)
+    return recs
+
+
+def to_rows(recs):
+    rows = []
+    for r in recs:
+        if r.get("status") == "skipped":
+            rows.append(dict(arch=r["arch"], shape=r["shape"], kind="skip",
+                             note=r.get("reason", "")[:60]))
+            continue
+        t = r["roofline"]
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"],
+            kind=r.get("kind", ""),
+            compute_s=t["compute_s"], memory_s=t["memory_s"],
+            collective_s=t["collective_s"], dominant=t["dominant"],
+            roofline_fraction=t["roofline_fraction"],
+            useful_flops_ratio=r.get("useful_flops_ratio"),
+            devices=r.get("devices"),
+            peak_gib=(r.get("memory_analysis") or {}).get("peak_bytes", 0) / 2**30,
+        ))
+    return rows
+
+
+def markdown(rows, mesh) -> str:
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| roofline frac | useful flops |\n|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r.get("kind") == "skip":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | skipped "
+                         f"| — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} "
+            f"| {r['memory_s']:.3g} | {r['collective_s']:.3g} "
+            f"| {r['dominant'].replace('_s','')} "
+            f"| {r['roofline_fraction']:.3f} | {r['useful_flops_ratio']:.2f} |")
+    return f"### Roofline — {mesh} pod mesh\n\n" + hdr + "\n".join(lines) + "\n"
+
+
+def run(quick: bool = False) -> dict:
+    out = {}
+    for mesh in ("single", "multi"):
+        rows = to_rows(load_records(mesh))
+        out[mesh] = rows
+        print(markdown(rows, mesh))
+    # summary: worst / most collective-bound cells (hillclimb candidates)
+    ok = [r for r in out["single"] if r.get("kind") not in ("skip",)]
+    worst = sorted(ok, key=lambda r: r["roofline_fraction"])[:5]
+    coll = sorted(ok, key=lambda r: -r["collective_s"])[:5]
+    out["worst_fraction"] = [(r["arch"], r["shape"], r["roofline_fraction"])
+                             for r in worst]
+    out["most_collective"] = [(r["arch"], r["shape"], r["collective_s"])
+                              for r in coll]
+    print("worst roofline fractions:", out["worst_fraction"])
+    print("most collective-bound:", out["most_collective"])
+    save_result("roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run             # full suite
+  PYTHONPATH=src python -m benchmarks.run --quick     # CI-sized
+  PYTHONPATH=src python -m benchmarks.run --only compressors,kernels
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import time
+import traceback
+
+# name -> (module, paper artifact)
+SUITE = {
+    "kernels": ("benchmarks.bench_kernels", "kernel correctness + roofline"),
+    "compressors": ("benchmarks.bench_compressors", "Fig. 7 / Table I"),
+    "scaling": ("benchmarks.bench_scaling", "Fig. 6"),
+    "quality": ("benchmarks.bench_quality", "Fig. 8"),
+    "model_compression": ("benchmarks.bench_model_compression",
+                          "Table II / Fig. 16"),
+    "rendering": ("benchmarks.bench_rendering", "Fig. 10 / Fig. 11"),
+    "temporal_cache": ("benchmarks.bench_temporal_cache", "Fig. 12"),
+    "pathlines": ("benchmarks.bench_pathlines", "Fig. 13"),
+    "boundary_loss": ("benchmarks.bench_boundary_loss", "Fig. 14 / Fig. 15"),
+    "weight_caching": ("benchmarks.bench_weight_caching", "§VI-B"),
+    "roofline": ("benchmarks.roofline", "EXPERIMENTS.md §Roofline"),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args(argv)
+
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or list(SUITE)
+    failures = []
+    for name in names:
+        mod_name, artifact = SUITE[name]
+        print(f"\n===== {name} ({artifact}) =====", flush=True)
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(mod_name)
+            mod.run(quick=args.quick)
+            print(f"----- {name} ok in {time.time()-t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            print(f"----- {name} FAILED")
+    print(f"\n{len(names)-len(failures)}/{len(names)} benchmarks ok"
+          + (f"; failed: {failures}" if failures else ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

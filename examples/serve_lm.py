@@ -1,0 +1,20 @@
+"""Serve a small model with batched requests: prefill + KV-cache decode.
+
+Demonstrates the same prefill/decode code paths the multi-pod dry-run lowers
+at 32k/500k context, at laptop scale, for three different architecture
+families (dense GQA, SSM, hybrid).
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch import serve as serve_mod
+
+
+def main():
+    for arch in ("qwen2_0_5b", "mamba2_780m", "zamba2_1_2b"):
+        print(f"\n=== {arch} ===")
+        serve_mod.main(["--arch", arch, "--smoke", "--batch", "4",
+                        "--prompt-len", "48", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

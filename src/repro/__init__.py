@@ -1,0 +1,19 @@
+"""repro: Distributed Volumetric Neural Representation (DVNR) framework in JAX.
+
+Implements Wu et al., "Distributed Neural Representation for Reactive in situ
+Visualization" (2023) as a production-grade, multi-pod JAX framework:
+
+- ``repro.core``      the paper's contribution (DVNR) as composable JAX modules
+- ``repro.compress``  error-bounded compressors (SZ3-like / ZFP-like / zstd / kmeans)
+- ``repro.reactive``  DIVA-like lazy reactive dataflow for in situ triggers
+- ``repro.insitu``    Ascent-like integration: simulations, actions, sessions
+- ``repro.models``    LM architecture zoo (dense / MoE / SSM / hybrid / enc-dec / VLM)
+- ``repro.parallel``  mesh + sharding rules (DP / FSDP / TP / EP / SP)
+- ``repro.train``     train / prefill / decode steps
+- ``repro.optim``     AdamW, schedules, compressed collectives
+- ``repro.checkpoint``fault-tolerant checkpointing
+- ``repro.kernels``   Pallas TPU kernels with pure-jnp oracles
+- ``repro.launch``    mesh construction, multi-pod dry-run, drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+from repro.checkpoint.compressed import (compress_tree, compression_report,
+                                         decompress_tree)
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager", "compress_tree", "decompress_tree",
+           "compression_report"]

@@ -1,0 +1,25 @@
+"""Error-bounded lossy compressors (in-repo reimplementations; see DESIGN.md §8):
+
+- ``interp``   : SZ3-like multilevel interpolation predictor (nD, vectorized)
+- ``blockt``   : ZFP-like orthonormal block-transform coder (1D)
+- ``quantizer``: plain error-bounded uniform quantizer
+- ``zstd_codec``: lossless baseline
+- ``model_compress``: the paper's III-D model-weight pipeline
+- ``kmeans``   : K-means weight quantization (paper VI-C comparison)
+
+All lossy codecs guarantee max |x - decode(encode(x))| <= tol (absolute mode),
+verified by hypothesis property tests.
+"""
+from repro.compress.quantizer import quant_encode, quant_decode
+from repro.compress.interp import interp_encode, interp_decode
+from repro.compress.blockt import blockt_encode, blockt_decode
+from repro.compress.zstd_codec import zstd_encode, zstd_decode
+from repro.compress.model_compress import compress_model, decompress_model
+
+__all__ = [
+    "quant_encode", "quant_decode",
+    "interp_encode", "interp_decode",
+    "blockt_encode", "blockt_decode",
+    "zstd_encode", "zstd_decode",
+    "compress_model", "decompress_model",
+]

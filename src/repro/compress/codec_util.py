@@ -1,0 +1,30 @@
+"""Shared serialization helpers for the compressor stack (msgpack framing)."""
+from __future__ import annotations
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def pack_codes(q: np.ndarray) -> dict:
+    """Store integer codes in the narrowest dtype that fits."""
+    lo, hi = (int(q.min()), int(q.max())) if q.size else (0, 0)
+    for dt in (np.int8, np.int16, np.int32, np.int64):
+        info = np.iinfo(dt)
+        if info.min <= lo and hi <= info.max:
+            return {"dtype": np.dtype(dt).str, "shape": list(q.shape),
+                    "data": q.astype(dt).tobytes()}
+    raise ValueError("codes out of int64 range")
+
+
+def unpack_codes(d: dict) -> np.ndarray:
+    return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(d["shape"]).astype(np.int64)
+
+
+def finalize(obj: dict, level: int = 6) -> bytes:
+    return zstd.ZstdCompressor(level=level).compress(
+        msgpack.packb(obj, use_bin_type=True))
+
+
+def definalize(blob: bytes) -> dict:
+    return msgpack.unpackb(zstd.ZstdDecompressor().decompress(blob), raw=False)

@@ -1,0 +1,58 @@
+"""K-means weight quantization (paper VI-C comparison, after Han et al. /
+Lu et al.): cluster each weight group with Lloyd's algorithm, store B-bit
+labels + fp16 centers. Better ratio/accuracy than transform coding but much
+slower — reproduced as a benchmark, not the default path (paper's conclusion).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress.codec_util import definalize, finalize, pack_codes, unpack_codes
+
+
+@jax.jit
+def _lloyd_step(x, centers):
+    d = jnp.abs(x[:, None] - centers[None, :])            # (N, K)
+    assign = jnp.argmin(d, axis=1)
+    onehot = jax.nn.one_hot(assign, centers.shape[0], dtype=jnp.float32)
+    counts = onehot.sum(0)
+    sums = onehot.T @ x
+    new = jnp.where(counts > 0, sums / jnp.maximum(counts, 1), centers)
+    return new, assign
+
+
+def kmeans_quantize_array(x: np.ndarray, bits: int, iters: int = 10,
+                          seed: int = 0):
+    """Returns (labels uint, centers f32, reconstructed)."""
+    flat = jnp.asarray(np.asarray(x, np.float32).ravel())
+    k = min(2**bits, flat.size)
+    qs = np.linspace(0, 100, k)
+    centers = jnp.asarray(np.percentile(np.asarray(flat), qs).astype(np.float32))
+    assign = None
+    for _ in range(iters):
+        centers, assign = _lloyd_step(flat, centers)
+    return np.asarray(assign, np.int64), np.asarray(centers, np.float32), \
+        np.asarray(centers)[np.asarray(assign)]
+
+
+def kmeans_encode(arrays: dict[str, np.ndarray], bits: int, iters: int = 10) -> bytes:
+    groups = {}
+    for name, arr in arrays.items():
+        labels, centers, _ = kmeans_quantize_array(arr, bits, iters)
+        groups[name] = {"shape": list(np.asarray(arr).shape),
+                        "labels": pack_codes(labels),
+                        "centers": centers.astype(np.float16).tobytes()}
+    return finalize({"kind": "kmeans", "bits": bits, "groups": groups})
+
+
+def kmeans_decode(blob: bytes) -> dict[str, np.ndarray]:
+    d = definalize(blob)
+    assert d["kind"] == "kmeans"
+    out = {}
+    for name, g in d["groups"].items():
+        centers = np.frombuffer(g["centers"], np.float16).astype(np.float32)
+        labels = unpack_codes(g["labels"])
+        out[name] = centers[labels].reshape(g["shape"])
+    return out

@@ -1,0 +1,20 @@
+"""Lossless zstd baseline (the paper's Zstandard comparison point)."""
+from __future__ import annotations
+
+import msgpack
+import numpy as np
+import zstandard as zstd
+
+
+def zstd_encode(x: np.ndarray, level: int = 6) -> bytes:
+    x = np.asarray(x)
+    hdr = msgpack.packb({"dtype": x.dtype.str, "shape": list(x.shape)})
+    return len(hdr).to_bytes(4, "little") + hdr + \
+        zstd.ZstdCompressor(level=level).compress(np.ascontiguousarray(x).tobytes())
+
+
+def zstd_decode(blob: bytes) -> np.ndarray:
+    n = int.from_bytes(blob[:4], "little")
+    hdr = msgpack.unpackb(blob[4:4 + n], raw=False)
+    raw = zstd.ZstdDecompressor().decompress(blob[4 + n:])
+    return np.frombuffer(raw, np.dtype(hdr["dtype"])).reshape(hdr["shape"]).copy()

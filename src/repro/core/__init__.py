@@ -1,0 +1,10 @@
+# The paper's primary contribution: Distributed Volumetric Neural Representation.
+from repro.core.inr import init_inr, inr_apply, decode_grid, param_bytes_f16
+from repro.core.trainer import DVNRTrainer, adaptive_config, train_iterations
+from repro.core.metrics import psnr, ssim3d, dssim
+
+__all__ = [
+    "init_inr", "inr_apply", "decode_grid", "param_bytes_f16",
+    "DVNRTrainer", "adaptive_config", "train_iterations",
+    "psnr", "ssim3d", "dssim",
+]

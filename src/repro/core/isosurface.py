@@ -1,0 +1,149 @@
+"""Isosurface extraction compatible with DVNR models (paper §IV-C, Fig. 11).
+
+Marching *tetrahedra* over an on-demand sampled grid: each cell is split into
+6 tets; sign changes on tet edges produce 1-2 triangles with linear edge
+interpolation. Fully vectorized (fixed-size output + validity mask) so it jits
+and runs identically on the decoded grid or directly on INR inference chunks —
+the paper's "no decoding" memory argument.
+
+Accuracy is measured as in the paper with the bidirectional Chamfer distance
+between extracted surfaces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dvnr import DVNRConfig
+from repro.core.inr import inr_apply
+
+# Cube corner offsets (x,y,z) indexed 0..7.
+_CORNERS = np.array([
+    [0, 0, 0], [1, 0, 0], [1, 1, 0], [0, 1, 0],
+    [0, 0, 1], [1, 0, 1], [1, 1, 1], [0, 1, 1],
+], np.int32)
+
+# 6-tet decomposition of the cube (consistent diagonal 0-6).
+_TETS = np.array([
+    [0, 5, 1, 6], [0, 1, 2, 6], [0, 2, 3, 6],
+    [0, 3, 7, 6], [0, 7, 4, 6], [0, 4, 5, 6],
+], np.int32)
+
+# Tet edges: pairs of local tet-vertex indices.
+_EDGES = np.array([[0, 1], [0, 2], [0, 3], [1, 2], [1, 3], [2, 3]], np.int32)
+
+# case (4-bit inside mask) -> up to 2 triangles, each 3 edge ids; -1 = unused.
+# Standard marching-tetrahedra table (orientation not normalized).
+_TRI_TABLE = np.full((16, 2, 3), -1, np.int32)
+_TRI_TABLE[0b0001] = [[0, 1, 2], [-1, -1, -1]]           # v0 inside
+_TRI_TABLE[0b0010] = [[0, 4, 3], [-1, -1, -1]]           # v1
+_TRI_TABLE[0b0100] = [[1, 3, 5], [-1, -1, -1]]           # v2
+_TRI_TABLE[0b1000] = [[2, 5, 4], [-1, -1, -1]]           # v3
+_TRI_TABLE[0b0011] = [[1, 2, 4], [1, 4, 3]]              # v0 v1
+_TRI_TABLE[0b0101] = [[0, 3, 5], [0, 5, 2]]              # v0 v2
+_TRI_TABLE[0b1001] = [[0, 1, 5], [0, 5, 4]]              # v0 v3
+_TRI_TABLE[0b0110] = [[0, 1, 5], [0, 5, 4]]              # v1 v2 (complement of v0v3)
+_TRI_TABLE[0b1010] = [[0, 3, 5], [0, 5, 2]]              # v1 v3
+_TRI_TABLE[0b1100] = [[1, 2, 4], [1, 4, 3]]              # v2 v3
+_TRI_TABLE[0b0111] = [[2, 5, 4], [-1, -1, -1]]           # all but v3
+_TRI_TABLE[0b1011] = [[1, 3, 5], [-1, -1, -1]]           # all but v2
+_TRI_TABLE[0b1101] = [[0, 4, 3], [-1, -1, -1]]           # all but v1
+_TRI_TABLE[0b1110] = [[0, 1, 2], [-1, -1, -1]]           # all but v0
+
+
+def _tet_triangles(vals, pos, iso):
+    """vals (M,4), pos (M,4,3) -> tris (M,2,3,3), valid (M,2)."""
+    inside = vals > iso                                           # (M,4)
+    case = (inside[:, 0] * 1 + inside[:, 1] * 2
+            + inside[:, 2] * 4 + inside[:, 3] * 8)                # (M,)
+
+    # interpolated crossing point on each of the 6 tet edges
+    a = _EDGES[:, 0]
+    b = _EDGES[:, 1]
+    va = vals[:, a]                                               # (M,6)
+    vb = vals[:, b]
+    t = jnp.clip((iso - va) / jnp.where(jnp.abs(vb - va) < 1e-12, 1e-12, vb - va),
+                 0.0, 1.0)
+    pa = pos[:, a]                                                # (M,6,3)
+    pb = pos[:, b]
+    pts = pa + t[..., None] * (pb - pa)                           # (M,6,3)
+
+    table = jnp.asarray(_TRI_TABLE)                               # (16,2,3)
+    tri_edges = table[case]                                       # (M,2,3)
+    valid = tri_edges[..., 0] >= 0                                # (M,2)
+    idx = jnp.maximum(tri_edges, 0)                               # (M,2,3)
+    tris = jnp.take_along_axis(pts[:, None].repeat(2, 1),
+                               idx[..., None].repeat(3, -1), axis=2)
+    return tris, valid
+
+
+def marching_tets(grid: jnp.ndarray, iso: float, origin=(0.0, 0.0, 0.0),
+                  extent=(1.0, 1.0, 1.0)):
+    """grid (nx,ny,nz) vertex samples -> (tris (K,3,3), valid (K,)).
+
+    K = (nx-1)(ny-1)(nz-1)*6*2 fixed-size; masked rows are degenerate zeros.
+    Triangle coordinates are in world space (origin + local*extent/shape).
+    """
+    nx, ny, nz = grid.shape
+    cx, cy, cz = nx - 1, ny - 1, nz - 1
+    ii, jj, kk = jnp.meshgrid(jnp.arange(cx), jnp.arange(cy), jnp.arange(cz),
+                              indexing="ij")
+    base = jnp.stack([ii, jj, kk], -1).reshape(-1, 3)             # (C,3)
+    corners = base[:, None] + jnp.asarray(_CORNERS)[None]         # (C,8,3)
+    vals8 = grid[corners[..., 0], corners[..., 1], corners[..., 2]]  # (C,8)
+    scale = jnp.asarray(extent, jnp.float32) / jnp.asarray(
+        [nx - 1, ny - 1, nz - 1], jnp.float32)
+    pos8 = jnp.asarray(origin, jnp.float32) + corners * scale     # (C,8,3)
+
+    tets = jnp.asarray(_TETS)                                     # (6,4)
+    vals_t = vals8[:, tets].reshape(-1, 4)                        # (C*6,4)
+    pos_t = pos8[:, tets].reshape(-1, 4, 3)                       # (C*6,4,3)
+    tris, valid = _tet_triangles(vals_t, pos_t, iso)
+    tris = tris.reshape(-1, 3, 3)
+    valid = valid.reshape(-1)
+    tris = jnp.where(valid[:, None, None], tris, 0.0)
+    return tris, valid
+
+
+def isosurface_from_inr(cfg: DVNRConfig, params, iso: float,
+                        shape=(64, 64, 64), origin=(0.0, 0.0, 0.0),
+                        extent=(1.0, 1.0, 1.0), impl: str = "ref",
+                        chunk: int = 1 << 16):
+    """On-demand INR inference -> marching tets, never materializing more than
+    ``chunk`` samples at once beyond the (small) vertex grid itself."""
+    nx, ny, nz = shape
+    xs = jnp.linspace(0.0, 1.0, nx)
+    ys = jnp.linspace(0.0, 1.0, ny)
+    zs = jnp.linspace(0.0, 1.0, nz)
+    X, Y, Z = jnp.meshgrid(xs, ys, zs, indexing="ij")
+    coords = jnp.stack([X, Y, Z], -1).reshape(-1, 3)
+    outs = []
+    for i in range(0, coords.shape[0], chunk):
+        outs.append(inr_apply(cfg, params, coords[i:i + chunk], impl)[..., 0])
+    grid = jnp.concatenate(outs).reshape(nx, ny, nz)
+    return marching_tets(grid, iso, origin, extent)
+
+
+def surface_points(tris, valid, max_points: int = 0):
+    """Valid triangle vertices as a point cloud (N,3) (numpy, host-side)."""
+    pts = np.asarray(tris)[np.asarray(valid)].reshape(-1, 3)
+    if max_points and pts.shape[0] > max_points:
+        idx = np.random.default_rng(0).choice(pts.shape[0], max_points, False)
+        pts = pts[idx]
+    return pts
+
+
+def chamfer_distance(a: np.ndarray, b: np.ndarray, chunk: int = 2048) -> float:
+    """Bidirectional Chamfer distance between point clouds (paper Fig. 11)."""
+    if len(a) == 0 or len(b) == 0:
+        return float("inf")
+
+    def one_way(p, q):
+        mins = []
+        for i in range(0, len(p), chunk):
+            d = np.linalg.norm(p[i:i + chunk, None] - q[None], axis=-1)
+            mins.append(d.min(axis=1))
+        return float(np.concatenate(mins).mean())
+
+    return 0.5 * (one_way(a, b) + one_way(b, a))

@@ -1,0 +1,88 @@
+"""Reconstruction-quality metrics: PSNR, SSIM (3D windowed), DSSIM, NRMSE.
+
+PSNR follows the paper: data normalized to [0,1], aggregated across partitions
+by averaging MSE first (V-B). SSIM uses a 7^3 uniform window; DSSIM = (1-SSIM)/2
+(Baker et al. floating-point variant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mse(a, b) -> jnp.ndarray:
+    return jnp.mean(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)))
+
+
+def psnr(a, b, data_range: float = 1.0) -> jnp.ndarray:
+    return 10.0 * jnp.log10(data_range**2 / jnp.maximum(mse(a, b), 1e-20))
+
+
+def psnr_from_mses(mses, data_range: float = 1.0) -> jnp.ndarray:
+    """Paper V-B: PSNR computed from the average MSE across partitions."""
+    m = jnp.mean(jnp.asarray(mses))
+    return 10.0 * jnp.log10(data_range**2 / jnp.maximum(m, 1e-20))
+
+
+def nrmse(a, b) -> jnp.ndarray:
+    rng = jnp.maximum(b.max() - b.min(), 1e-12)
+    return jnp.sqrt(mse(a, b)) / rng
+
+
+def _uniform_filter3d(x, w: int):
+    """Mean filter with a w^3 window (valid region via reduce_window)."""
+    x4 = x[None, ..., None]
+    s = jax.lax.reduce_window(x4, 0.0, jax.lax.add,
+                              (1, w, w, w, 1), (1, 1, 1, 1, 1), "VALID")
+    return (s / (w**3))[0, ..., 0]
+
+
+def ssim3d(a, b, data_range: float = 1.0, win: int = 7) -> jnp.ndarray:
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c1 = (0.01 * data_range) ** 2
+    c2 = (0.03 * data_range) ** 2
+    mu_a = _uniform_filter3d(a, win)
+    mu_b = _uniform_filter3d(b, win)
+    ex_aa = _uniform_filter3d(a * a, win)
+    ex_bb = _uniform_filter3d(b * b, win)
+    ex_ab = _uniform_filter3d(a * b, win)
+    va = ex_aa - mu_a**2
+    vb = ex_bb - mu_b**2
+    cov = ex_ab - mu_a * mu_b
+    num = (2 * mu_a * mu_b + c1) * (2 * cov + c2)
+    den = (mu_a**2 + mu_b**2 + c1) * (va + vb + c2)
+    return jnp.mean(num / den)
+
+
+def dssim(a, b, data_range: float = 1.0, win: int = 7) -> jnp.ndarray:
+    return (1.0 - ssim3d(a, b, data_range, win)) / 2.0
+
+
+def _uniform_filter2d(x, w: int):
+    """Mean filter with a w^2 window over the leading two dims."""
+    x4 = x[None, ..., None] if x.ndim == 2 else x[None]
+    s = jax.lax.reduce_window(x4, 0.0, jax.lax.add,
+                              (1, w, w, 1), (1, 1, 1, 1), "VALID")
+    out = s / (w**2)
+    return out[0, ..., 0] if x.ndim == 2 else out[0]
+
+
+def ssim2d(a, b, data_range: float = 1.0, win: int = 7) -> jnp.ndarray:
+    """Image-space SSIM (paper Fig. 8/9 rendering comparisons). a, b: (H,W)
+    or (H,W,C) in [0, data_range]; channels averaged."""
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    c1 = (0.01 * data_range) ** 2
+    c2 = (0.03 * data_range) ** 2
+    mu_a = _uniform_filter2d(a, win)
+    mu_b = _uniform_filter2d(b, win)
+    ex_aa = _uniform_filter2d(a * a, win)
+    ex_bb = _uniform_filter2d(b * b, win)
+    ex_ab = _uniform_filter2d(a * b, win)
+    va = ex_aa - mu_a**2
+    vb = ex_bb - mu_b**2
+    cov = ex_ab - mu_a * mu_b
+    num = (2 * mu_a * mu_b + c1) * (2 * cov + c2)
+    den = (mu_a**2 + mu_b**2 + c1) * (va + vb + c2)
+    return jnp.mean(num / den)

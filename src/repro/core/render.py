@@ -1,0 +1,282 @@
+"""Distributed direct volume rendering from DVNR models (paper §IV-C).
+
+Sample-streaming ray marcher (after Wu et al. [2]): coordinate generation,
+model inference and compositing are separate stages, so INR inference batches
+across all rays (GPU wavefront -> TPU batched-matmul translation). Per-partition
+partial images are combined with sort-last compositing:
+
+- ``composite_depth_sort``: gather all partials, per-ray depth ordering (exact
+  for any camera; used on a handful of partitions / tests);
+- ``binary_swap``: shard_map `lax.ppermute` binary-swap over the mesh — the
+  scalable production path (log2 P rounds, each exchanging half the image).
+
+Rendering never decodes the DVNR back to a grid: memory footprint stays at the
+model size + per-tile sample buffers (the paper's 80% GPU-memory saving).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.dvnr import DVNRConfig
+from repro.core.inr import inr_apply
+from repro.kernels.composite.ops import composite
+
+
+# --------------------------------------------------------------------------- #
+# Camera / rays
+# --------------------------------------------------------------------------- #
+@dataclass
+class Camera:
+    eye: Tuple[float, float, float]
+    center: Tuple[float, float, float] = (0.5, 0.5, 0.5)
+    up: Tuple[float, float, float] = (0.0, 0.0, 1.0)
+    fov_deg: float = 45.0
+
+
+def make_rays(cam: Camera, width: int, height: int):
+    eye = jnp.asarray(cam.eye, jnp.float32)
+    fwd = jnp.asarray(cam.center, jnp.float32) - eye
+    fwd = fwd / jnp.linalg.norm(fwd)
+    right = jnp.cross(fwd, jnp.asarray(cam.up, jnp.float32))
+    right = right / jnp.linalg.norm(right)
+    up = jnp.cross(right, fwd)
+    tan = np.tan(np.radians(cam.fov_deg) / 2)
+    xs = (jnp.arange(width) + 0.5) / width * 2 - 1
+    ys = (jnp.arange(height) + 0.5) / height * 2 - 1
+    X, Y = jnp.meshgrid(xs * tan, ys * tan * (height / width), indexing="xy")
+    dirs = fwd[None, None] + X[..., None] * right + Y[..., None] * up
+    dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    origins = jnp.broadcast_to(eye, dirs.shape)
+    return origins.reshape(-1, 3), dirs.reshape(-1, 3)
+
+
+def ray_aabb(origins, dirs, box_lo, box_hi):
+    """Slab test -> (t0, t1) per ray; t1 <= t0 means miss."""
+    inv = 1.0 / jnp.where(jnp.abs(dirs) < 1e-9, 1e-9, dirs)
+    t_lo = (box_lo - origins) * inv
+    t_hi = (box_hi - origins) * inv
+    t0 = jnp.max(jnp.minimum(t_lo, t_hi), axis=-1)
+    t1 = jnp.min(jnp.maximum(t_lo, t_hi), axis=-1)
+    return jnp.maximum(t0, 0.0), t1
+
+
+# --------------------------------------------------------------------------- #
+# Transfer function
+# --------------------------------------------------------------------------- #
+def default_tf(n: int = 64) -> jnp.ndarray:
+    """A cool-to-warm piecewise-linear RGBA table over normalized value [0,1]."""
+    t = np.linspace(0, 1, n)
+    r = np.clip(1.5 * t, 0, 1)
+    g = np.clip(1.0 - np.abs(2 * t - 1), 0, 1) * 0.8
+    b = np.clip(1.5 * (1 - t), 0, 1)
+    a = np.clip(t**2 * 0.8 + 0.02, 0, 1)
+    return jnp.asarray(np.stack([r, g, b, a], -1), jnp.float32)
+
+
+def apply_tf(values, tf_table):
+    v = jnp.clip(values, 0.0, 1.0) * (tf_table.shape[0] - 1)
+    lo = jnp.clip(jnp.floor(v).astype(jnp.int32), 0, tf_table.shape[0] - 2)
+    w = (v - lo)[..., None]
+    return tf_table[lo] * (1 - w) + tf_table[lo + 1] * w
+
+
+# --------------------------------------------------------------------------- #
+# Per-partition rendering
+# --------------------------------------------------------------------------- #
+def render_partition(cfg: DVNRConfig, params, origin, extent, vrange, grange,
+                     origins, dirs, tf_table, *, n_samples: int = 64,
+                     density: float = 50.0, impl: str = "ref"):
+    """Ray-march one partition's INR. Returns (rgba (R,4), depth (R,))."""
+    lo = jnp.asarray(origin, jnp.float32)
+    hi = lo + jnp.asarray(extent, jnp.float32)
+    t0, t1 = ray_aabb(origins, dirs, lo, hi)
+    hit = t1 > t0
+    dt = (t1 - t0) / n_samples
+    ts = t0[:, None] + (jnp.arange(n_samples) + 0.5) * dt[:, None]      # (R,S)
+    pos = origins[:, None] + ts[..., None] * dirs[:, None]              # (R,S,3)
+    local = (pos - lo) / (hi - lo)
+    R, S = ts.shape
+    v = inr_apply(cfg, params, local.reshape(-1, 3), impl).reshape(R, S)
+    # de-normalize local prediction, then re-normalize to the GLOBAL value range
+    vmin, vmax = vrange
+    gmin, gmax = grange
+    raw = v * (vmax - vmin) + vmin
+    vg = (raw - gmin) / jnp.maximum(gmax - gmin, 1e-12)
+    rgba = apply_tf(vg, tf_table)                                       # (R,S,4)
+    alpha = 1.0 - jnp.exp(-rgba[..., 3] * density * dt[:, None])
+    rgba = jnp.concatenate([rgba[..., :3], alpha[..., None]], -1)
+    rgba = jnp.where(hit[:, None, None], rgba, 0.0)
+    out = composite(rgba, impl if impl == "ref" else "pallas")
+    depth = jnp.where(hit, t0, jnp.inf)
+    return out, depth
+
+
+# --------------------------------------------------------------------------- #
+# Sort-last compositing
+# --------------------------------------------------------------------------- #
+def over(front, back):
+    """Over-operator on (…,4) rgba with premultiplied-style alpha."""
+    a_f = front[..., 3:4]
+    rgb = front[..., :3] + (1 - a_f) * back[..., :3]
+    a = a_f + (1 - a_f) * back[..., 3:4]
+    return jnp.concatenate([rgb, a], axis=-1)
+
+
+def composite_depth_sort(images, depths):
+    """images (P,R,4), depths (P,R) -> (R,4): exact per-ray depth ordering."""
+    order = jnp.argsort(depths, axis=0)                                 # (P,R)
+    sorted_imgs = jnp.take_along_axis(images, order[..., None], axis=0)
+
+    def step(carry, img):
+        return over(carry, img), None
+
+    init = jnp.zeros(images.shape[1:], images.dtype)
+    out, _ = jax.lax.scan(step, init, sorted_imgs)
+    return out
+
+
+def _swap_rounds(img, dep, axis_names, n: int):
+    """The binary-swap inner loop, usable inside any shard_map.
+
+    img (R,4) / dep (R,) are this device's full-frame partial; returns the
+    fully composited frame (R,4) (identical on every device after the final
+    tiled all-gather of owned strips) plus the depth buffer.
+    """
+    rounds = int(np.log2(n))
+    R = img.shape[0]
+    me = jax.lax.axis_index(axis_names)
+    lo, size = 0, R
+    for r in range(rounds):
+        half = size // 2
+        bit = (me >> (rounds - 1 - r)) & 1
+        # which half do I keep? bit==0 -> front half, bit==1 -> back half
+        keep_lo = lo + jnp.where(bit == 0, 0, half)
+        send_lo = lo + jnp.where(bit == 0, half, 0)
+        mine_keep = jax.lax.dynamic_slice(img, (keep_lo, 0), (half, 4))
+        mine_send = jax.lax.dynamic_slice(img, (send_lo, 0), (half, 4))
+        d_keep = jax.lax.dynamic_slice(dep, (keep_lo,), (half,))
+        d_send = jax.lax.dynamic_slice(dep, (send_lo,), (half,))
+        pairs = [(int(i), int(i) ^ (1 << (rounds - 1 - r))) for i in range(n)]
+        got = jax.lax.ppermute(mine_send, axis_names, pairs)
+        got_d = jax.lax.ppermute(d_send, axis_names, pairs)
+        front_first = d_keep <= got_d
+        merged = jnp.where(front_first[:, None],
+                           over(mine_keep, got),
+                           over(got, mine_keep))
+        d_merged = jnp.minimum(d_keep, got_d)
+        img = jax.lax.dynamic_update_slice(img, merged, (keep_lo, 0))
+        dep = jax.lax.dynamic_update_slice(dep, d_merged, (keep_lo,))
+        lo, size = keep_lo, half
+    # final gather of owned strips (one all-gather of R/P rows each)
+    strip = jax.lax.dynamic_slice(img, (lo, 0), (R // n, 4))
+    full = jax.lax.all_gather(strip, axis_names, axis=0, tiled=True)
+    return full, dep
+
+
+def binary_swap(mesh, axis_names, images, depths):
+    """Binary-swap sort-last compositing via shard_map/ppermute.
+
+    images: (P, R, 4) sharded over the flattened mesh axes. Each of the log2 P
+    rounds splits the live image region in half; peers exchange the half they
+    will NOT own and composite the half they keep (depth-ordered by partner
+    rank). Total wire bytes per device: R*(1 - 1/P)*16 — vs (P-1)*R*16 for
+    gather-to-root.
+
+    PRECONDITION (classic sort-last binary swap): partition p's box position
+    must follow p's bit pattern on a power-of-two grid (what partition_grid /
+    make_partition produce), so every swap-partner pair is separated by an
+    axis-aligned plane and the per-ray pairwise depth comparison yields the
+    global front-to-back order. For arbitrary (non-plane-separated) depth
+    fields use ``composite_depth_sort``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n = int(np.prod([mesh.shape[a] for a in axis_names]))
+    assert n & (n - 1) == 0, "binary swap needs a power-of-two device count"
+
+    def local(img, dep):
+        full, dep_out = _swap_rounds(img[0], dep[0], axis_names, n)
+        return full[None], dep_out[None]
+
+    spec = P(axis_names)
+    out, _ = shard_map(local, mesh=mesh,
+                       in_specs=(spec, spec), out_specs=(spec, spec),
+                       check_rep=False)(images, depths)
+    return out
+
+
+def make_distributed_render_step(cfg: DVNRConfig, mesh, *, n_samples: int = 64,
+                                 density: float = 50.0, impl: str = "ref"):
+    """Production render step: one shard_map program that renders every
+    partition's INR on its own device and binary-swap composites in place.
+
+    Returned fn signature (all stacked over the flattened mesh axes):
+        step(stacked_params, parts_lo, parts_ext, vranges, origins, dirs,
+             tf_table, grange) -> (P, R, 4) images (frame replicated per row)
+    parts_lo/parts_ext: (P,3) partition origin / extent in world space,
+    vranges: (P,2) per-partition value ranges, grange: (2,) global range,
+    origins/dirs: (R,3) replicated rays, tf_table: (K,4) replicated.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis_names = tuple(mesh.axis_names)
+    n = int(np.prod([mesh.shape[a] for a in axis_names]))
+    assert n & (n - 1) == 0, "binary swap needs a power-of-two device count"
+
+    def local(params, lo, ext, vr, origins, dirs, tf_table, grange):
+        params = jax.tree.map(lambda t: t[0], params)
+        img, dep = render_partition(
+            cfg, params, lo[0], ext[0], (vr[0, 0], vr[0, 1]),
+            (grange[0], grange[1]), origins, dirs, tf_table,
+            n_samples=n_samples, density=density, impl=impl)
+        full, _ = _swap_rounds(img, dep, axis_names, n)
+        return full[None]
+
+    stacked = P(axis_names)
+    rep = P()
+
+    def spec_like(tree):
+        return jax.tree.map(lambda _: stacked, tree,
+                            is_leaf=lambda x: hasattr(x, "ndim"))
+
+    def step(stacked_params, parts_lo, parts_ext, vranges, origins, dirs,
+             tf_table, grange):
+        return shard_map(
+            local, mesh=mesh,
+            in_specs=(spec_like(stacked_params), stacked, stacked, stacked,
+                      rep, rep, rep, rep),
+            out_specs=stacked, check_rep=False,
+        )(stacked_params, parts_lo, parts_ext, vranges, origins, dirs,
+          tf_table, grange)
+
+    return step
+
+
+def render_distributed(cfg, stacked_params, parts_meta, cam: Camera,
+                       width: int, height: int, grange, *, mesh=None,
+                       n_samples: int = 64, impl: str = "ref",
+                       tf_table: Optional[jnp.ndarray] = None):
+    """Render P partitions and composite. parts_meta: list of dicts with
+    origin/extent/vmin/vmax per partition (host metadata)."""
+    tf_table = default_tf() if tf_table is None else tf_table
+    origins, dirs = make_rays(cam, width, height)
+    images, depths = [], []
+    for p, meta in enumerate(parts_meta):
+        params_p = jax.tree.map(lambda t: t[p], stacked_params)
+        img, dep = render_partition(
+            cfg, params_p, meta["origin"], meta["extent"],
+            (meta["vmin"], meta["vmax"]), grange, origins, dirs, tf_table,
+            n_samples=n_samples, impl=impl)
+        images.append(img)
+        depths.append(dep)
+    images = jnp.stack(images)
+    depths = jnp.stack(depths)
+    out = composite_depth_sort(images, depths)
+    return out.reshape(height, width, 4)

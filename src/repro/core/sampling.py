@@ -1,0 +1,37 @@
+"""Training-sample generation: stochastic uniform + boundary half-Gaussian (III-C).
+
+The boundary density (paper Eq. 2) is a mixture over the 6 faces: pick an axis
+and a side uniformly, draw |N(0, sigma)| as the distance from that face, and
+uniform coordinates on the other two axes. The total loss draws
+(1-lambda)*N uniform and lambda*N boundary samples so cost is lambda-independent.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_uniform(key, n: int) -> jnp.ndarray:
+    return jax.random.uniform(key, (n, 3))
+
+
+def sample_boundary(key, n: int, sigma: float) -> jnp.ndarray:
+    k_axis, k_side, k_off, k_uni = jax.random.split(key, 4)
+    axis = jax.random.randint(k_axis, (n,), 0, 3)
+    side = jax.random.randint(k_side, (n,), 0, 2).astype(jnp.float32)
+    off = jnp.clip(jnp.abs(sigma * jax.random.normal(k_off, (n,))), 0.0, 1.0)
+    coord = side * (1.0 - off) + (1.0 - side) * off       # near 0 or near 1
+    uni = jax.random.uniform(k_uni, (n, 3))
+    onehot = jax.nn.one_hot(axis, 3)
+    return uni * (1.0 - onehot) + coord[:, None] * onehot
+
+
+def training_coords(key, n_batch: int, boundary_lambda: float, sigma: float):
+    """(1-lambda)N uniform + lambda N boundary samples, concatenated (paper III-C)."""
+    n_b = int(round(boundary_lambda * n_batch))
+    n_u = n_batch - n_b
+    k_u, k_b = jax.random.split(key)
+    if n_b == 0:
+        return sample_uniform(k_u, n_u)
+    return jnp.concatenate([sample_uniform(k_u, n_u),
+                            sample_boundary(k_b, n_b, sigma)], axis=0)

@@ -1,0 +1,107 @@
+"""Temporal model caching (paper §IV-B): sliding window of compressed DVNR
+models replacing raw-grid history buffers.
+
+Entries are keyed by (field, config); each timestep appends the newest model
+and evicts beyond the window size. Byte accounting mirrors the paper's Fig. 12
+memory study: the cache holds *compressed* models (kilobytes) instead of raw
+grids (gigabytes), enabling reactive programming over long histories.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.compress.model_compress import compress_model, decompress_model
+from repro.configs.dvnr import DVNRConfig
+
+
+@dataclass
+class CacheEntry:
+    timestep: int
+    blobs: list                 # one compressed model per partition
+    meta: dict                  # vmin/vmax per partition, config hash, ...
+
+    @property
+    def bytes(self) -> int:
+        return sum(len(b) for b in self.blobs)
+
+
+class TemporalModelCache:
+    """Sliding window over timesteps of per-partition compressed DVNR models."""
+
+    def __init__(self, cfg: DVNRConfig, window: int):
+        self.cfg = cfg
+        self.window = window
+        self._entries: deque[CacheEntry] = deque()
+
+    def append(self, timestep: int, stacked_params, meta: Optional[dict] = None,
+               compress: bool = True) -> CacheEntry:
+        P = stacked_params["tables"].shape[0]
+        blobs = []
+        for p in range(P):
+            one = jax.tree.map(lambda t: t[p], stacked_params)
+            if compress:
+                blob, _ = compress_model(self.cfg, one)
+            else:  # raw f16 serialization (ablation: "uncomp")
+                import msgpack
+                blob = msgpack.packb({
+                    "tables": np.asarray(one["tables"], np.float16).tobytes(),
+                    "mlp": [np.asarray(w, np.float16).tobytes() for w in one["mlp"]],
+                })
+            blobs.append(blob)
+        entry = CacheEntry(timestep, blobs, meta or {})
+        self._entries.append(entry)
+        while len(self._entries) > self.window:
+            self._entries.popleft()        # evict the oldest (paper IV-B)
+        return entry
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def timesteps(self) -> list[int]:
+        return [e.timestep for e in self._entries]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(e.bytes for e in self._entries)
+
+    def get(self, timestep: int, partition: int) -> dict:
+        for e in self._entries:
+            if e.timestep == timestep:
+                return decompress_model(self.cfg, e.blobs[partition])
+        raise KeyError(f"timestep {timestep} not in window {self.timesteps}")
+
+    def window_params(self, partition: int) -> list[dict]:
+        """All cached models of one partition, oldest->newest (pathline tracing)."""
+        return [decompress_model(self.cfg, e.blobs[partition]) for e in self._entries]
+
+
+class WeightCache:
+    """Paper §III-E: warm-start initialization keyed by (field, config)."""
+
+    def __init__(self, max_entries: int = 16):
+        self._store: OrderedDict[tuple, dict] = OrderedDict()
+        self.max_entries = max_entries
+
+    @staticmethod
+    def _key(field_name: str, cfg: DVNRConfig) -> tuple:
+        return (field_name, cfg.n_levels, cfg.n_features_per_level,
+                cfg.log2_hashmap_size, cfg.resolved_base_resolution,
+                cfg.n_neurons, cfg.n_hidden_layers, cfg.out_dim)
+
+    def put(self, field_name: str, cfg: DVNRConfig, stacked_params) -> None:
+        key = self._key(field_name, cfg)
+        self._store[key] = jax.tree.map(np.asarray, stacked_params)
+        self._store.move_to_end(key)
+        while len(self._store) > self.max_entries:
+            self._store.popitem(last=False)
+
+    def get(self, field_name: str, cfg: DVNRConfig):
+        import jax.numpy as jnp
+        v = self._store.get(self._key(field_name, cfg))
+        return None if v is None else jax.tree.map(jnp.asarray, v)

@@ -1,0 +1,16 @@
+from repro.data.lm import SyntheticTokens, make_lm_batch
+from repro.data.volume import (
+    VolumePartition,
+    partition_grid,
+    make_partition,
+    synthetic_field,
+)
+
+__all__ = [
+    "SyntheticTokens",
+    "make_lm_batch",
+    "VolumePartition",
+    "partition_grid",
+    "make_partition",
+    "synthetic_field",
+]

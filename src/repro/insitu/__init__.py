@@ -1,0 +1,7 @@
+from repro.insitu.actions import Action, isosurface_action, render_action
+from repro.insitu.session import InSituSession, StepRecord
+from repro.insitu.simulation import SimulationConfig, SyntheticSimulation
+
+__all__ = ["Action", "isosurface_action", "render_action",
+           "InSituSession", "StepRecord",
+           "SimulationConfig", "SyntheticSimulation"]

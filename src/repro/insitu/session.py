@@ -1,0 +1,115 @@
+"""The DIVA<->Ascent session driver (paper Fig. 5).
+
+``InSituSession`` wires a synthetic simulation into the reactive runtime:
+
+  simulation.publish(field) --> Source node --> dvnr_node (lazy training)
+        |                                          |-> SlidingWindow (temporal cache)
+        |                                          |-> render / isosurface actions
+        +--> trigger conditions (data-driven Boolean indicators)
+
+Per visualization step the session feeds the graph, the runtime updates live
+windows, and triggers fire actions. Memory accounting per step reproduces the
+paper's Fig. 12 study (DVNR cache vs raw data cache vs baseline).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.configs.dvnr import DVNRConfig
+from repro.insitu.actions import isosurface_action, render_action
+from repro.insitu.simulation import SimulationConfig, SyntheticSimulation
+from repro.reactive.dvnr import dvnr_node
+from repro.reactive.graph import Runtime
+
+
+@dataclass
+class StepRecord:
+    cycle: int
+    t: float
+    fired: Dict[str, bool]
+    cache_bytes: int
+    cache_len: int
+    raw_equiv_bytes: int
+    step_time_s: float
+    dvnr_trained: bool
+
+
+class InSituSession:
+    """One simulation + one reactive graph + an action set."""
+
+    def __init__(self, sim_cfg: SimulationConfig, dvnr_cfg: DVNRConfig, *,
+                 window: int = 8, impl: str = "ref", compress: bool = True,
+                 cache_mode: str = "dvnr"):
+        """cache_mode: 'dvnr' (compressed models), 'raw' (uncompressed grids,
+        the paper's 'Data Cache' comparison), 'off' (baseline)."""
+        self.sim = SyntheticSimulation(sim_cfg)
+        self.dvnr_cfg = dvnr_cfg
+        self.rt = Runtime()
+        self.cache_mode = cache_mode
+        self.records: List[StepRecord] = []
+
+        fname = self.sim.field_names[0]
+        self.field_src = self.rt.source(fname)
+        self.dvnr = dvnr_node(self.rt, self.field_src, dvnr_cfg,
+                              field_name=fname,
+                              n_partitions=sim_cfg.n_ranks, impl=impl,
+                              compress=compress)
+        if cache_mode == "dvnr":
+            self.window = self.dvnr.window(window)
+        elif cache_mode == "raw":
+            self.window = self.field_src.map(
+                lambda parts: _RawCopy(parts), name="raw_copy").window(window)
+        else:
+            self.window = None
+        self._triggers: Dict[str, Callable] = {}
+
+    # ------------------------------------------------------------------ #
+    def add_trigger(self, name: str, cond_fn: Callable[[list], bool],
+                    actions: Optional[List[Callable]] = None):
+        """cond_fn consumes the published partitions (cheap reduction)."""
+        cond = self.field_src.map(cond_fn, name=f"cond[{name}]")
+        trig = self.rt.trigger(name, cond)
+        for a in actions or []:
+            trig.on_fire(a)
+        return trig
+
+    def render_now(self, **kw):
+        return render_action(self.dvnr.value(), **kw)
+
+    def isosurface_now(self, **kw):
+        return isosurface_action(self.dvnr.value(), **kw)
+
+    # ------------------------------------------------------------------ #
+    def run(self, n_steps: int, *, demand_window: bool = True) -> List[StepRecord]:
+        if demand_window and self.window is not None:
+            self.window.live = True
+        for _ in range(n_steps):
+            t0 = time.time()
+            self.sim.step()
+            fname = self.sim.field_names[0]
+            evals_before = self.dvnr.evaluations
+            fired = self.rt.advance({fname: self.sim.publish(fname)})
+            cache_bytes = self.window.total_bytes if self.window is not None else 0
+            cache_len = len(self.window.buf) if self.window is not None else 0
+            self.records.append(StepRecord(
+                cycle=self.sim.cycle, t=self.sim.t, fired=fired,
+                cache_bytes=cache_bytes, cache_len=cache_len,
+                raw_equiv_bytes=self.sim.raw_bytes_per_step() * cache_len,
+                step_time_s=time.time() - t0,
+                dvnr_trained=self.dvnr.evaluations > evals_before))
+        return self.records
+
+
+class _RawCopy:
+    """Uncompressed copy of published partitions (the 'Data Cache' arm)."""
+
+    def __init__(self, parts):
+        self.arrays = [np.asarray(p.data).copy() for p in parts]
+
+    @property
+    def bytes(self) -> int:
+        return sum(a.nbytes for a in self.arrays)

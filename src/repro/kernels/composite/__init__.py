@@ -1,0 +1,3 @@
+from repro.kernels.composite.ops import composite
+
+__all__ = ["composite"]

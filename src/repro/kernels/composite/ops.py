@@ -1,0 +1,15 @@
+"""jit'd wrapper: impl dispatch for the compositing stage (no VJP needed —
+rendering is an inference-time operation in the paper)."""
+from __future__ import annotations
+
+from repro.kernels.composite import ref as _ref
+from repro.kernels.composite.kernel import composite_pallas
+
+
+def composite(rgba, impl: str = "ref"):
+    """rgba (R, S, 4) front-to-back -> (R, 4)."""
+    if impl == "pallas":
+        return composite_pallas(rgba, interpret=True)
+    if impl == "pallas_tpu":
+        return composite_pallas(rgba, interpret=False)
+    return _ref.composite_ref(rgba)

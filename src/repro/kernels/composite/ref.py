@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: front-to-back over-operator compositing of ray samples."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def composite_ref(rgba: jnp.ndarray) -> jnp.ndarray:
+    """rgba (R, S, 4) front-to-back samples -> (R, 4) composited (rgb, alpha)."""
+
+    def step(carry, sample):
+        color, trans = carry                      # (R,3), (R,1)
+        a = sample[:, 3:4]
+        color = color + trans * a * sample[:, :3]
+        trans = trans * (1.0 - a)
+        return (color, trans), None
+
+    R = rgba.shape[0]
+    init = (jnp.zeros((R, 3), rgba.dtype), jnp.ones((R, 1), rgba.dtype))
+    (color, trans), _ = jax.lax.scan(step, init, jnp.swapaxes(rgba, 0, 1))
+    return jnp.concatenate([color, 1.0 - trans], axis=-1)

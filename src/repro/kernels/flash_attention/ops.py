@@ -1,0 +1,48 @@
+"""jit'd wrapper: layout adaptation + impl dispatch + custom VJP.
+
+Forward runs the Pallas kernel (interpret on CPU, compiled on TPU); backward
+recomputes through the jnp oracle (flash-style recompute — no S x S residuals
+are saved between fwd and bwd)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import ref as _ref
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _fwd_impl(q, k, v, causal, window, impl):
+    if impl == "ref":
+        return _ref.attention_ref(q, k, v, causal=causal, window=window)
+    interp = impl != "pallas_tpu"
+    qt = q.transpose(0, 2, 1, 3)       # (B,H,S,dh)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               interpret=interp)
+    return out.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None, impl: str = "pallas"):
+    """q (B,Sq,Hq,dh); k,v (B,Sk,Hkv,dh) -> (B,Sq,Hq,dh)."""
+    return _fwd_impl(q, k, v, causal, window, impl)
+
+
+def _vjp_fwd(q, k, v, causal, window, impl):
+    return _fwd_impl(q, k, v, causal, window, impl), (q, k, v)
+
+
+def _vjp_bwd(causal, window, impl, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q_, k_, v_: _ref.attention_ref(
+        q_, k_, v_, causal=causal, window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

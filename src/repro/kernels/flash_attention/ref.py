@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for flash attention: materialized-scores GQA attention.
+
+Matches repro.models.attention.sdpa's math (f32 softmax, -1e30 masking) but is
+self-contained so the kernel package has no model-layer dependency."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None) -> jnp.ndarray:
+    """q (B,Sq,Hq,dh); k,v (B,Sk,Hkv,dh) -> (B,Sq,Hq,dh)."""
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, g, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    q_pos = (Sk - Sq) + jnp.arange(Sq)[:, None]          # right-aligned
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(B, Sq, Hq, dh)

@@ -1,0 +1,3 @@
+from repro.kernels.fused_mlp.ops import fused_mlp
+
+__all__ = ["fused_mlp"]

@@ -1,0 +1,57 @@
+"""jit'd wrapper for the fused MLP with custom VJP (fwd + bwd kernels)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fused_mlp import ref as _ref
+from repro.kernels.fused_mlp.kernel import fused_mlp_bwd_pallas, fused_mlp_fwd_pallas
+
+
+def _stack(weights):
+    """[w_in, h1..h_{H-1}, w_out] -> (w_in, (max(H-1,1),W,W), w_out, n_hidden).
+
+    An all-zero dummy hidden slab keeps BlockSpecs non-empty when H == 1; the
+    kernel's static layer unroll (n_hidden) never touches it.
+    """
+    w_in, *hid, w_out = weights
+    n_hidden = len(hid) + 1
+    w_hid = jnp.stack(hid) if hid else jnp.zeros((1, w_in.shape[1], w_in.shape[1]),
+                                                 w_in.dtype)
+    return w_in, w_hid, w_out, n_hidden
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fused_mlp(x, weights, impl: str = "ref"):
+    """x (N, D_in); weights [w_in, hidden..., w_out] -> (N, D_out)."""
+    return _fwd_impl(x, weights, impl)
+
+
+def _fwd_impl(x, weights, impl):
+    if impl.startswith("pallas"):
+        w_in, w_hid, w_out, n_hidden = _stack(weights)
+        return fused_mlp_fwd_pallas(x, w_in, w_hid, w_out, n_hidden=n_hidden,
+                                    interpret=(impl != "pallas_tpu"))
+    return _ref.fused_mlp_ref(x, weights)
+
+
+def _fwd(x, weights, impl):
+    return _fwd_impl(x, weights, impl), (x, weights)
+
+
+def _bwd(impl, res, g):
+    x, weights = res
+    if impl.startswith("pallas"):
+        w_in, w_hid, w_out, n_hidden = _stack(weights)
+        dx, dw_in, dw_hid, dw_out = fused_mlp_bwd_pallas(
+            x, w_in, w_hid, w_out, g, n_hidden=n_hidden,
+            interpret=(impl != "pallas_tpu"))
+        dws = [dw_in] + [dw_hid[i] for i in range(n_hidden - 1)] + [dw_out]
+        return dx, dws
+    _, vjp = jax.vjp(lambda xx, ww: _ref.fused_mlp_ref(xx, ww), x, weights)
+    return vjp(g)
+
+
+fused_mlp.defvjp(_fwd, _bwd)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the fused tiny-MLP (tiny-cuda-nn analogue).
+
+Bias-free ReLU MLP: x (N, D_in) -> hidden W (D_in, W0), (W0, W0) x n_hidden-1,
+out (W0, D_out). All hidden widths equal (tcnn constraint).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fused_mlp_ref(x: jnp.ndarray, weights: list[jnp.ndarray]) -> jnp.ndarray:
+    h = x
+    for w in weights[:-1]:
+        h = jnp.maximum(h @ w, 0.0)
+    return h @ weights[-1]

@@ -1,0 +1,3 @@
+from repro.kernels.hash_encoding.ops import hash_encode
+
+__all__ = ["hash_encode"]

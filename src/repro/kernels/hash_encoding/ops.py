@@ -1,0 +1,83 @@
+"""jit'd wrapper for hash encoding: impl dispatch + custom VJP.
+
+Forward: Pallas kernel (TPU) or pure-jnp oracle (CPU / default).
+Backward: scatter-add of the blended cotangents into the 8 corners per level —
+expressed as ``.at[].add`` which XLA:TPU lowers to its native combining scatter
+(the CUDA analogue is atomicAdd; see DESIGN.md hardware-adaptation notes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hash_encoding import ref as _ref
+from repro.kernels.hash_encoding.kernel import hash_encode_pallas
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def hash_encode(coords, tables, resolutions: Sequence[int], impl: str = "ref"):
+    """coords (N,3) in [0,1]; tables (L,T,F) -> (N, L*F). Differentiable in tables."""
+    return _fwd_impl(coords, tables, resolutions, impl)
+
+
+def _fwd_impl(coords, tables, resolutions, impl):
+    if impl == "pallas":
+        return hash_encode_pallas(coords, tables,
+                                  jnp.asarray(resolutions, jnp.int32),
+                                  interpret=True)
+    if impl == "pallas_tpu":
+        return hash_encode_pallas(coords, tables,
+                                  jnp.asarray(resolutions, jnp.int32),
+                                  interpret=False)
+    if impl == "fused":
+        return _ref.hash_encode_fused(coords, tables, resolutions)
+    return _ref.hash_encode_ref(coords, tables, resolutions)
+
+
+def _fwd(coords, tables, resolutions, impl):
+    if impl == "fused":
+        # store the (small) corner indices/weights as residuals: the backward
+        # scatter reuses them instead of recomputing the whole index chain
+        # (EXPERIMENTS.md §Perf DVNR iteration C2)
+        idx, ww = _ref.fused_corners(coords, resolutions, tables.shape[1])
+        out = _ref._combine_fused(idx, ww, tables)
+        return out, (coords, tables.shape, idx, ww)
+    return _fwd_impl(coords, tables, resolutions, impl), \
+        (coords, tables.shape, None, None)
+
+
+def _bwd(resolutions, impl, res, g):
+    coords, tshape, idx, ww = res
+    L, T, F = tshape
+    N = coords.shape[0]
+    if impl == "fused":
+        # level-vectorized combining scatter (one batched scatter-add)
+        gl = g.reshape(N, L, F).transpose(1, 0, 2)                # (L,N,F)
+        upd = ww.astype(g.dtype)[..., None] * gl[:, :, None, :]   # (L,N,8,F)
+        dt = jax.vmap(lambda i, u_: jnp.zeros((T, F), g.dtype)
+                      .at[i.reshape(-1)].add(u_.reshape(-1, F)))(idx, upd)
+        return jnp.zeros_like(coords), dt
+
+    g = g.reshape(N, L, F)
+    dt = jnp.zeros(tshape, g.dtype)
+    for l in range(L):
+        r = int(resolutions[l])
+        pos = coords * r
+        lo = jnp.clip(jnp.floor(pos), 0, max(r - 1, 0)).astype(jnp.int32)
+        w = pos - lo
+        for dx in (0, 1):
+            for dy in (0, 1):
+                for dz in (0, 1):
+                    corner = lo + jnp.array([dx, dy, dz], jnp.int32)
+                    idx = _ref.corner_indices(corner, r, T)
+                    ww = (jnp.where(dx, w[:, 0], 1 - w[:, 0])
+                          * jnp.where(dy, w[:, 1], 1 - w[:, 1])
+                          * jnp.where(dz, w[:, 2], 1 - w[:, 2]))
+                    dt = dt.at[l, idx].add(ww[:, None].astype(g.dtype) * g[:, l, :])
+    return jnp.zeros_like(coords), dt
+
+
+hash_encode.defvjp(_fwd, _bwd)

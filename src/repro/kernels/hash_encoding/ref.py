@@ -1,0 +1,109 @@
+"""Pure-jnp oracle for multi-resolution hash encoding (instant-ngp style).
+
+Layout: every level l owns a table slice ``tables[l] : (T, F)``. Levels whose
+dense grid fits the table ((R_l+1)^3 <= T) are indexed *densely* (injective
+layout in the first (R_l+1)^3 slots); larger levels use the instant-ngp spatial
+hash  idx = (x * p0 ^ y * p1 ^ z * p2) mod T.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_PRIMES = np.array([1, 2_654_435_761, 805_459_861], dtype=np.uint32)
+
+
+def corner_indices(ijk: jnp.ndarray, res: int, table_size: int) -> jnp.ndarray:
+    """ijk (..., 3) int32 corner coords in [0, res] -> (...,) int32 table index."""
+    n_dense = (res + 1) ** 3
+    u = ijk.astype(jnp.uint32)
+    if n_dense <= table_size:
+        idx = u[..., 0] + (res + 1) * (u[..., 1] + (res + 1) * u[..., 2])
+    else:
+        idx = (u[..., 0] * _PRIMES[0]) ^ (u[..., 1] * _PRIMES[1]) ^ (u[..., 2] * _PRIMES[2])
+        idx = idx % jnp.uint32(table_size)
+    return idx.astype(jnp.int32)
+
+
+def encode_level(coords: jnp.ndarray, table: jnp.ndarray, res: int) -> jnp.ndarray:
+    """coords (N,3) in [0,1]; table (T,F) -> (N,F) trilinearly blended features."""
+    T = table.shape[0]
+    pos = coords * res                                  # [0, res]
+    lo = jnp.clip(jnp.floor(pos), 0, max(res - 1, 0)).astype(jnp.int32)
+    w = pos - lo                                        # (N,3) in [0,1]
+    out = jnp.zeros((coords.shape[0], table.shape[1]), table.dtype)
+    for dx in (0, 1):
+        for dy in (0, 1):
+            for dz in (0, 1):
+                corner = lo + jnp.array([dx, dy, dz], jnp.int32)
+                idx = corner_indices(corner, res, T)
+                ww = (jnp.where(dx, w[:, 0], 1 - w[:, 0])
+                      * jnp.where(dy, w[:, 1], 1 - w[:, 1])
+                      * jnp.where(dz, w[:, 2], 1 - w[:, 2]))
+                out = out + ww[:, None].astype(table.dtype) * table[idx]
+    return out
+
+
+def hash_encode_ref(coords: jnp.ndarray, tables: jnp.ndarray,
+                    resolutions) -> jnp.ndarray:
+    """coords (N,3) in [0,1]; tables (L,T,F) -> (N, L*F)."""
+    feats = [encode_level(coords, tables[l], int(resolutions[l]))
+             for l in range(tables.shape[0])]
+    return jnp.concatenate(feats, axis=-1)
+
+
+# Corner offsets (8,3), shared by the fused path.
+_OFFSETS = np.stack(np.meshgrid([0, 1], [0, 1], [0, 1],
+                                indexing="ij"), -1).reshape(8, 3)
+
+
+def fused_corners(coords: jnp.ndarray, resolutions, table_size: int):
+    """Shared fwd/bwd helper: (idx (L,N,8) int32, ww (L,N,8) weights)."""
+    res = jnp.asarray(np.asarray(resolutions, np.int32))          # (L,)
+    resf = res.astype(coords.dtype)
+    pos = coords[None] * resf[:, None, None]                      # (L,N,3)
+    lo = jnp.clip(jnp.floor(pos), 0,
+                  jnp.maximum(resf - 1, 0)[:, None, None]).astype(jnp.int32)
+    w = pos - lo                                                  # (L,N,3)
+
+    off = jnp.asarray(_OFFSETS, jnp.int32)                        # (8,3)
+    corner = lo[:, :, None, :] + off[None, None]                  # (L,N,8,3)
+    u = corner.astype(jnp.uint32)
+    # dense vs hashed indexing, selected per level (static booleans).
+    # NOTE §Perf DVNR C3: a static dense-prefix/hashed-suffix split was tried
+    # and REGRESSED 5% (the concat materializes an extra index copy that this
+    # select fuses away); the select form is kept deliberately.
+    r1 = (res + 1).astype(jnp.uint32)[:, None, None]
+    dense_idx = u[..., 0] + r1 * (u[..., 1] + r1 * u[..., 2])
+    hash_idx = ((u[..., 0] * _PRIMES[0]) ^ (u[..., 1] * _PRIMES[1])
+                ^ (u[..., 2] * _PRIMES[2])) % jnp.uint32(table_size)
+    is_dense = jnp.asarray([(int(r) + 1) ** 3 <= table_size
+                            for r in np.asarray(resolutions)])[:, None, None]
+    idx = jnp.where(is_dense, dense_idx, hash_idx).astype(jnp.int32)  # (L,N,8)
+    wsel = jnp.where(off[None, None].astype(coords.dtype) == 1,
+                     w[:, :, None, :], 1.0 - w[:, :, None, :])    # (L,N,8,3)
+    ww = wsel[..., 0] * wsel[..., 1] * wsel[..., 2]               # (L,N,8)
+    return idx, ww
+
+
+def hash_encode_fused(coords: jnp.ndarray, tables: jnp.ndarray,
+                      resolutions) -> jnp.ndarray:
+    """Level-vectorized encode: ONE batched gather over all (level, corner)
+    pairs instead of 8L separate gather+lerp chains. Same math as
+    ``hash_encode_ref`` (EXPERIMENTS.md §Perf DVNR iteration C1: fewer
+    materialization boundaries -> ~2x less HBM traffic in the lowered HLO).
+    """
+    L, T, F = tables.shape
+    N = coords.shape[0]
+    idx, ww = fused_corners(coords, resolutions, T)
+    return _combine_fused(idx, ww, tables)
+
+
+def _combine_fused(idx, ww, tables):
+    L, T, F = tables.shape
+    N = idx.shape[1]
+    feats = jnp.take_along_axis(tables[:, :, None, :],
+                                idx.reshape(L, N * 8, 1, 1), axis=1)
+    feats = feats.reshape(L, N, 8, F)
+    out = jnp.einsum("lnc,lncf->lnf", ww.astype(tables.dtype), feats)
+    return out.transpose(1, 0, 2).reshape(N, L * F)

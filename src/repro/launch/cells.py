@@ -1,0 +1,158 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> jit-able fn + abstract args
++ shardings + analytic meta. Shared by dryrun.py and benchmarks/roofline.py.
+
+No device allocation happens here: params/opt/cache shapes come from
+``jax.eval_shape``; inputs are ShapeDtypeStructs from ``model.input_specs``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, cell_is_applicable, get_config
+from repro.models import build_model
+from repro.optim import OptConfig
+from repro.parallel.sharding import Sharder, param_shardings
+from repro.train import make_train_step
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable
+    args: Tuple[Any, ...]
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    meta: dict
+
+
+def _batch_shardings(batch_sds: dict, sharder: Sharder) -> dict:
+    out = {}
+    for k, v in batch_sds.items():
+        if k == "positions":                       # (3, B, S)
+            spec = sharder.spec(None, "batch", None)
+        elif v.ndim >= 1:
+            spec = sharder.spec("batch", *([None] * (v.ndim - 1)))
+        else:
+            spec = P()
+        out[k] = NamedSharding(sharder.mesh, spec)
+    return out
+
+
+def _cache_shardings(cache_sds, sharder: Sharder, global_batch: int):
+    """Decode caches shard over BOTH the batch axes (dim 1) and the model axis.
+
+    The model-axis dim is the largest interior dim divisible by the axis size —
+    the sequence axis of attention KV ((L,B,S,H,dh): flash-decoding-style
+    seq-sharded cache) or the head axis of SSM states ((L,B,NH,hd,state)).
+    The last dim (head_dim / state) is never sharded: splitting the QK
+    contraction produces partial scores that must be all-reduced at S x S cost
+    (the failure mode fixed in §Perf iteration B1). Without the model-axis
+    sharding the KV cache replicates 16x and decode_32k cells exceed v5e HBM
+    (66 GiB/device for grok — §Perf iteration D1).
+    """
+    batch_shardable = sharder.axis_map.get("batch", ())
+    model_size = sharder.axis_size("model")
+
+    def assign(leaf):
+        shp = leaf.shape
+        if len(shp) < 3:
+            return NamedSharding(sharder.mesh, P())
+        dims: list = [None] * len(shp)
+        if batch_shardable and shp[1] == global_batch:
+            dims[1] = "batch"
+        best_ax, best_size = None, 0
+        for ax in range(2, len(shp) - 1):          # interior dims only
+            if model_size > 1 and shp[ax] % model_size == 0 \
+                    and shp[ax] >= model_size and shp[ax] > best_size:
+                best_ax, best_size = ax, shp[ax]
+        if best_ax is not None:
+            dims[best_ax] = "seq"                   # logical seq -> "model"
+        return NamedSharding(sharder.mesh, sharder.spec(*dims))
+
+    return jax.tree.map(assign, cache_sds)
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS (global): 6*N*D train, 2*N*D inference."""
+    n_active = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def build_cell(arch: str, shape_name: str, mesh, *,
+               opt_overrides: Optional[dict] = None,
+               moe_dispatch: str = "scatter",
+               extra_constraints: bool = True) -> Cell:
+    shape = SHAPES[shape_name]
+    ok, reason = cell_is_applicable(arch, shape_name)
+    if not ok:
+        raise ValueError(f"cell ({arch},{shape_name}) skipped: {reason}")
+    cfg = get_config(arch)
+    model = build_model(cfg, moe_dispatch)
+    sharder = Sharder(mesh, shape.global_batch)
+
+    params_sds = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    pshard = param_shardings(params_sds, cfg, sharder)
+    batch_sds = model.input_specs(shape)
+    bshard = _batch_shardings(batch_sds, sharder)
+
+    n_devices = mesh.size
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "devices": n_devices,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "model_flops_global": model_flops(cfg, shape),
+        "tokens_global": shape.global_batch * shape.seq_len,
+    }
+
+    if shape.kind == "train":
+        opt_kw = dict(lr=3e-4, schedule="cosine", clip_norm=1.0)
+        if cfg.param_dtype == "bfloat16":
+            opt_kw["moments_dtype"] = "bfloat16"
+        if opt_overrides:
+            opt_kw.update(opt_overrides)
+        step = make_train_step(model, OptConfig(**opt_kw), sharder, impl="xla")
+        opt_sds = jax.eval_shape(step.optimizer.init, params_sds)
+        oshard = param_shardings(opt_sds, cfg, sharder)
+        oshard["step"] = NamedSharding(mesh, P())
+        return Cell(arch, shape_name, "train", step,
+                    (params_sds, opt_sds, batch_sds),
+                    (pshard, oshard, bshard),
+                    (pshard, oshard, None),
+                    (0, 1), meta)
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, shape.seq_len, sharder, "xla")
+
+        return Cell(arch, shape_name, "prefill", prefill_fn,
+                    (params_sds, batch_sds),
+                    (pshard, bshard), None, (), meta)
+
+    # decode
+    cache_sds = jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cshard = _cache_shardings(cache_sds, sharder, shape.global_batch)
+
+    def decode_fn(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, sharder)
+
+    tok_sds = batch_sds["tokens"]
+    tok_shard = NamedSharding(mesh, sharder.spec("batch", None))
+    meta["cache_bytes_global"] = sum(
+        s.size * jnp.dtype(s.dtype).itemsize for s in jax.tree.leaves(cache_sds))
+    return Cell(arch, shape_name, "decode", decode_fn,
+                (params_sds, cache_sds, tok_sds),
+                (pshard, cshard, tok_shard),
+                (None, cshard), (1,), meta)

@@ -1,0 +1,50 @@
+"""Elastic restart: resume a run on a different mesh shape.
+
+The checkpoint stores *global* (host-gathered) arrays; restoring places each
+leaf with the TARGET mesh's shardings, so losing a pod (512 -> 256 chips) or
+gaining one (256 -> 512) is a restore + relower, not a migration. DVNR adds a
+second, cheaper safety net: per-timestep compressed models (kilobytes) are
+themselves checkpoints — a failed rank's partition retrains from the weight
+cache in seconds (paper §III-E).
+
+``plan_restart`` is the control-plane helper: given surviving device count it
+picks the new mesh and returns the shardings to restore with.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.launch.mesh import make_mesh_for
+from repro.parallel.sharding import Sharder, param_shardings
+
+
+@dataclass
+class RestartPlan:
+    mesh: Any
+    sharder: Sharder
+    devices: int
+    note: str
+
+
+def plan_restart(surviving_devices: int, global_batch: int, *,
+                 model_parallel: int = 16, pods: int = 1) -> RestartPlan:
+    """Largest power-of-two device count <= survivors, re-meshed."""
+    n = 1
+    while n * 2 <= surviving_devices:
+        n *= 2
+    mesh = make_mesh_for(n, model_parallel=min(model_parallel, n), pods=pods)
+    return RestartPlan(mesh, Sharder(mesh, global_batch), n,
+                       f"remeshed {surviving_devices} survivors -> {n} devices "
+                       f"{dict(mesh.shape)}")
+
+
+def elastic_restore(mgr: CheckpointManager, example_tree, cfg, plan: RestartPlan,
+                    step: Optional[int] = None):
+    """Restore a checkpoint onto the new mesh's shardings."""
+    shardings = param_shardings(jax.eval_shape(lambda: example_tree), cfg,
+                                plan.sharder)
+    return mgr.restore(example_tree, step, shardings=shardings)

@@ -1,0 +1,130 @@
+"""End-to-end LM training driver.
+
+Runs any zoo architecture on whatever devices exist: the production mesh when
+512 placeholder (or real) devices are present, a 1-device mesh on a laptop.
+Fault tolerance is first-class: atomic async checkpoints every ``--ckpt-every``
+steps, automatic resume from the newest checkpoint (``--resume``), and restore
+works across mesh shapes (elastic restart; see launch/elastic.py).
+
+Examples:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_0_5b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ck --resume
+  PYTHONPATH=src python -m repro.launch.train --arch olmo_1b --smoke --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.launch.mesh import make_mesh_for
+from repro.models import build_model
+from repro.optim import OptConfig
+from repro.parallel.sharding import Sharder, param_shardings
+from repro.train import make_train_step
+
+
+def synth_batch(model, shape: ShapeConfig, step: int) -> dict:
+    """Fill the model's input_specs with deterministic synthetic data — works
+    for every family (tokens, embeds, positions)."""
+    specs = model.input_specs(shape)
+    rng = np.random.default_rng(1234 + step)
+    out = {}
+    for k, s in specs.items():
+        if np.issubdtype(np.dtype(s.dtype), np.integer):
+            hi = model.config.vocab if "token" in k or "label" in k else shape.seq_len
+            out[k] = jnp.asarray(rng.integers(0, hi, s.shape), s.dtype)
+        else:
+            out[k] = jnp.asarray(rng.standard_normal(s.shape) * 0.02, s.dtype)
+    return out
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_0_5b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-friendly)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--moe-dispatch", default="scatter")
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="int8 error-feedback gradient compression")
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg, args.moe_dispatch)
+    shape = ShapeConfig("driver", "train", args.seq, args.batch)
+
+    n_dev = jax.device_count()
+    mesh = make_mesh_for(n_dev) if n_dev > 1 else None
+    sharder = Sharder(mesh, args.batch)
+
+    step_fn = make_train_step(model, OptConfig(lr=args.lr, schedule="cosine",
+                                               warmup_steps=10,
+                                               total_steps=max(args.steps, 100),
+                                               clip_norm=1.0),
+                              sharder, microbatches=args.microbatches,
+                              grad_compress=args.grad_compress)
+
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = step_fn.optimizer.init(params)
+    start = 0
+
+    mgr = None
+    if args.ckpt_dir:
+        mgr = CheckpointManager(args.ckpt_dir, keep_last=3)
+        if args.resume and mgr.latest_step() is not None:
+            (params, opt_state), meta = mgr.restore((params, opt_state))
+            start = int(meta.get("train_step", mgr.latest_step()))
+            print(f"[train] resumed from step {start}")
+
+    if mesh is not None:
+        pshard = param_shardings(jax.eval_shape(lambda: params), cfg, sharder)
+        oshard = param_shardings(jax.eval_shape(lambda: opt_state), cfg, sharder)
+        jitted = jax.jit(step_fn, in_shardings=(pshard, oshard, None),
+                         out_shardings=(pshard, oshard, None),
+                         donate_argnums=(0, 1))
+    else:
+        jitted = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    history = []
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = synth_batch(model, shape, i)
+        params, opt_state, metrics = jitted(params, opt_state, batch)
+        if (i + 1) % args.log_every == 0 or i == start:
+            loss = float(metrics["loss"])
+            history.append({"step": i + 1, "loss": loss})
+            print(f"[train] step {i+1:5d} loss {loss:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/(i-start+1):.2f}s/step)")
+        if mgr is not None and (i + 1) % args.ckpt_every == 0:
+            mgr.save(i + 1, (params, opt_state),
+                     metadata={"train_step": i + 1,
+                               "loss": float(metrics["loss"])})
+    if mgr is not None:
+        mgr.save(args.steps, (params, opt_state),
+                 metadata={"train_step": args.steps}, blocking=True)
+    result = {"arch": args.arch, "steps": args.steps, "history": history,
+              "final_loss": history[-1]["loss"] if history else None}
+    print(json.dumps({"final": result["final_loss"], "steps": args.steps}))
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Unified model API: build_model(config) -> Model with init/loss/prefill/decode.
+
+This is the single entry point used by the trainer, server, dry-run and tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm_lm, transformer
+
+
+@dataclass
+class Model:
+    config: ModelConfig
+    init: Callable[[Any], Any]                       # rng -> params
+    loss: Callable[..., tuple]                       # (params, batch, sharder) -> (loss, metrics)
+    prefill: Optional[Callable[..., tuple]]          # (params, batch, seq_len, sharder) -> (logits, cache)
+    decode_step: Optional[Callable[..., tuple]]      # (params, cache, tokens, sharder) -> (logits, cache)
+    init_cache: Optional[Callable[..., Any]]         # (batch, seq_len) -> cache
+    input_specs: Callable[[ShapeConfig], dict]       # ShapeDtypeStruct stand-ins
+
+
+def build_model(cfg: ModelConfig, moe_dispatch: str = "scatter") -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _build_transformer(cfg, moe_dispatch)
+    if fam == "ssm":
+        return _build_ssm(cfg)
+    if fam == "hybrid":
+        return _build_hybrid(cfg)
+    if fam == "encdec":
+        return _build_encdec(cfg)
+    raise ValueError(f"unknown family {fam!r}")
+
+
+# --------------------------------------------------------------------------- #
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _lm_token_specs(cfg, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"tokens": _sds((B, S), "int32"), "labels": _sds((B, S), "int32")}
+    if shape.kind == "prefill":
+        return {"tokens": _sds((B, S), "int32")}
+    return {"tokens": _sds((B, 1), "int32")}          # decode
+
+
+def _embeds_specs(cfg, shape: ShapeConfig) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    d = cfg.d_model
+    cdt = cfg.compute_dtype
+    if cfg.family == "encdec":
+        if shape.kind == "train":
+            return {"src_embeds": _sds((B, S, d), cdt),
+                    "tgt_tokens": _sds((B, S), "int32"),
+                    "labels": _sds((B, S), "int32")}
+        if shape.kind == "prefill":
+            return {"src_embeds": _sds((B, S, d), cdt),
+                    "tgt_tokens": _sds((B, 1), "int32")}
+        return {"tokens": _sds((B, 1), "int32")}
+    # vlm: precomputed patch/text embeddings + M-RoPE positions
+    if shape.kind == "train":
+        return {"embeds": _sds((B, S, d), cdt),
+                "labels": _sds((B, S), "int32"),
+                "positions": _sds((3, B, S), "int32")}
+    if shape.kind == "prefill":
+        return {"embeds": _sds((B, S, d), cdt),
+                "positions": _sds((3, B, S), "int32")}
+    return {"tokens": _sds((B, 1), "int32")}
+
+
+# --------------------------------------------------------------------------- #
+def _build_transformer(cfg, moe_dispatch):
+    t = transformer
+
+    def loss(params, batch, sharder=None, impl="xla"):
+        return t.lm_loss(cfg, params, batch, sharder, impl, moe_dispatch)
+
+    def prefill(params, batch, seq_len, sharder=None, impl="xla"):
+        return t.prefill(cfg, params, batch, seq_len, sharder, impl, moe_dispatch)
+
+    def decode_step(params, cache, tokens, sharder=None):
+        return t.decode_step(cfg, params, cache, tokens, sharder)
+
+    def init_cache(batch, seq_len):
+        return t.init_cache(cfg, batch, seq_len)
+
+    specs = (_embeds_specs if cfg.input_mode == "embeds" else _lm_token_specs)
+    return Model(cfg, lambda rng: t.init_lm(cfg, rng), loss, prefill, decode_step,
+                 init_cache, lambda s: specs(cfg, s))
+
+
+def _build_ssm(cfg):
+    m = ssm_lm
+
+    def init_cache(batch, seq_len):
+        del seq_len  # O(1) state: the SSM cache does not scale with context length
+        return m.init_ssm_cache(cfg, batch)
+
+    return Model(
+        cfg,
+        lambda rng: m.init_ssm_lm(cfg, rng),
+        lambda params, batch, sharder=None, impl="xla": m.ssm_loss(cfg, params, batch, sharder),
+        lambda params, batch, seq_len, sharder=None, impl="xla": m.ssm_prefill(cfg, params, batch, sharder),
+        lambda params, cache, tokens, sharder=None: m.ssm_decode_step(cfg, params, cache, tokens, sharder),
+        init_cache,
+        lambda s: _lm_token_specs(cfg, s),
+    )
+
+
+def _build_hybrid(cfg):
+    h = hybrid
+
+    def prefill(params, batch, seq_len, sharder=None, impl="xla"):
+        return h.hybrid_prefill(cfg, params, batch, seq_len, sharder, impl)
+
+    return Model(
+        cfg,
+        lambda rng: h.init_hybrid(cfg, rng),
+        lambda params, batch, sharder=None, impl="xla": h.hybrid_loss(cfg, params, batch, sharder, impl),
+        prefill,
+        lambda params, cache, tokens, sharder=None: h.hybrid_decode_step(cfg, params, cache, tokens, sharder),
+        lambda batch, seq_len: h.init_hybrid_cache(cfg, batch, seq_len),
+        lambda s: _lm_token_specs(cfg, s),
+    )
+
+
+def _build_encdec(cfg):
+    e = encdec
+
+    return Model(
+        cfg,
+        lambda rng: e.init_encdec(cfg, rng),
+        lambda params, batch, sharder=None, impl="xla": e.encdec_loss(cfg, params, batch, sharder, impl),
+        lambda params, batch, seq_len, sharder=None, impl="xla": e.encdec_prefill(cfg, params, batch, seq_len, sharder, impl),
+        lambda params, cache, tokens, sharder=None: e.encdec_decode_step(cfg, params, cache, tokens, sharder),
+        lambda batch, seq_len: e.init_encdec_cache(cfg, batch, seq_len),
+        lambda s: _embeds_specs(cfg, s),
+    )

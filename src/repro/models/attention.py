@@ -1,0 +1,182 @@
+"""GQA attention: full / causal / sliding-window; prefill + KV-cache decode.
+
+Weights are stored 2D-flattened ((d, Hq*dh) etc.) so tensor-parallel sharding is
+divisible on the model axis even for odd head counts (see parallel/sharding.py).
+
+``impl="pallas"`` routes the quadratic part through the flash-attention Pallas
+kernel (TPU target); ``impl="xla"`` is the pure-jnp path used on CPU and for the
+dry-run.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rope_angles
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * dh), d, dtype),
+        "wk": dense_init(ks[1], (d, hkv * dh), d, dtype),
+        "wv": dense_init(ks[2], (d, hkv * dh), d, dtype),
+        "wo": dense_init(ks[3], (hq * dh, d), hq * dh, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def qkv_proj(cfg, p, x, positions):
+    """x (B,S,D) -> q (B,S,Hq,dh), k/v (B,S,Hkv,dh), RoPE applied."""
+    B, S, _ = x.shape
+    dh = cfg.resolved_head_dim
+    cdt = x.dtype
+    q = x @ p["wq"].astype(cdt)
+    k = x @ p["wk"].astype(cdt)
+    v = x @ p["wv"].astype(cdt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cdt)
+        k = k + p["bk"].astype(cdt)
+        v = v + p["bv"].astype(cdt)
+    q = q.reshape(B, S, cfg.n_heads, dh)
+    k = k.reshape(B, S, cfg.n_kv_heads, dh)
+    v = v.reshape(B, S, cfg.n_kv_heads, dh)
+    if cfg.n_heads > 0 and positions is not None:
+        ang = rope_angles(positions, dh, cfg.rope_theta, cfg.mrope_sections)
+        q = apply_rope(q, ang)
+        k = apply_rope(k, ang)
+    return q, k, v
+
+
+def _seq_parallel_mode(sharder, Hq: int, Sq: int) -> bool:
+    """Sequence-parallel attention: when the query-head count does not divide
+    the model axis (qwen2: 14, qwen2-vl: 28, arctic: 56 on a 16-wide axis),
+    shard Sq over "model" instead. Without an explicit constraint here the
+    partitioner splits the QK contraction over head_dim and ALL-REDUCES the
+    full S x S score tensor (2.35 TB/device for qwen2 prefill_32k — see
+    EXPERIMENTS.md §Perf iteration B1)."""
+    if sharder is None or sharder.mesh is None:
+        return False
+    m = sharder.axis_size("model")
+    return m > 1 and Hq % m != 0 and Sq % m == 0 and Sq > 1
+
+
+def sdpa(q, k, v, *, causal: bool, window: Optional[int] = None,
+         q_offset=0, kv_valid_len=None, impl: str = "xla", sharder=None):
+    """Scaled dot-product attention with GQA.
+
+    q: (B, Sq, Hq, dh); k, v: (B, Sk, Hkv, dh).
+    ``q_offset``: absolute position of q[0] (decode: current pos).
+    ``kv_valid_len``: number of valid KV entries (decode with preallocated cache).
+    ``window``: sliding-window size (None = full).
+    """
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as flash_ops
+
+        return flash_ops.flash_attention(q, k, v, causal=causal, window=window)
+    B, Sq, Hq, dh = q.shape
+    _, Sk, Hkv, _ = k.shape
+    g = Hq // Hkv
+    seq_mode = _seq_parallel_mode(sharder, Hq, Sq)
+    if seq_mode:
+        q = sharder.constrain(q, "batch", "seq", None, None)
+        k = sharder.constrain(k, "batch", None, None, None)
+        v = sharder.constrain(v, "batch", None, None, None)
+    qg = q.reshape(B, Sq, Hkv, g, dh)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(dh).astype(jnp.float32)
+    if seq_mode:
+        scores = sharder.constrain(scores, "batch", None, None, "seq", None)
+
+    q_pos = q_offset + jnp.arange(Sq)[:, None]         # (Sq,1)
+    k_pos = jnp.arange(Sk)[None, :]                    # (1,Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if kv_valid_len is not None:
+        mask &= k_pos < kv_valid_len
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    if seq_mode:
+        out = sharder.constrain(out, "batch", "seq", None, None, None)
+    return out.reshape(B, Sq, Hq, dh)
+
+
+def attention_block(cfg, p, x, positions, *, causal=True, window=None,
+                    sharder=None, impl="xla"):
+    """Full self-attention block (projection + sdpa + output proj)."""
+    B, S, D = x.shape
+    q, k, v = qkv_proj(cfg, p, x, positions)
+    if sharder is not None and not _seq_parallel_mode(sharder, cfg.n_heads, S):
+        q = sharder.constrain(q, "batch", None, "model", None)
+        k = sharder.constrain(k, "batch", None, None, None)
+        v = sharder.constrain(v, "batch", None, None, None)
+    o = sdpa(q, k, v, causal=causal, window=window or cfg.sliding_window,
+             impl=impl, sharder=sharder)
+    o = o.reshape(B, S, -1)
+    return o @ p["wo"].astype(x.dtype)
+
+
+def cross_attention_block(cfg, p, x, kv_src, *, sharder=None, impl="xla"):
+    """Cross-attention (enc-dec): queries from x, keys/values from kv_src."""
+    B, S, D = x.shape
+    dh = cfg.resolved_head_dim
+    cdt = x.dtype
+    q = (x @ p["wq"].astype(cdt)).reshape(B, S, cfg.n_heads, dh)
+    k = (kv_src @ p["wk"].astype(cdt)).reshape(B, kv_src.shape[1], cfg.n_kv_heads, dh)
+    v = (kv_src @ p["wv"].astype(cdt)).reshape(B, kv_src.shape[1], cfg.n_kv_heads, dh)
+    o = sdpa(q, k, v, causal=False, impl=impl)
+    return o.reshape(B, S, -1) @ p["wo"].astype(cdt)
+
+
+# --------------------------------------------------------------------------- #
+# KV-cache decode
+# --------------------------------------------------------------------------- #
+def cache_update(cache_k, cache_v, k, v, pos, window: Optional[int] = None):
+    """Insert one step's k/v (B,1,Hkv,dh) at position ``pos``; ring buffer if SWA."""
+    idx = pos if window is None else pos % cache_k.shape[1]
+    ck = jax.lax.dynamic_update_slice(cache_k, k, (0, idx, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, v, (0, idx, 0, 0))
+    return ck, cv
+
+
+def decode_attention(cfg, p, x, cache_k, cache_v, pos, *, window=None, sharder=None):
+    """One-token decode: x (B,1,D), cache (B,Smax,Hkv,dh), pos scalar."""
+    B = x.shape[0]
+    dh = cfg.resolved_head_dim
+    positions = _decode_positions(cfg, pos, B)
+    q, k, v = qkv_proj(cfg, p, x, positions)
+    ck, cv = cache_update(cache_k, cache_v, k, v, pos, window)
+    if sharder is not None:
+        ck = sharder.constrain(ck, "batch", "seq", None, None)
+        cv = sharder.constrain(cv, "batch", "seq", None, None)
+    if window is None:
+        o = sdpa(q, ck, cv, causal=False, kv_valid_len=pos + 1, q_offset=pos)
+    else:
+        # ring buffer: entries at slot s hold absolute position p' with
+        # p' = s + floor((pos - s)/W)*W ... valid iff p' > pos - W and p' <= pos.
+        # Since the buffer holds exactly the last W positions, all slots written
+        # so far are valid; mask unwritten slots only.
+        o = sdpa(q, ck, cv, causal=False, kv_valid_len=jnp.minimum(pos + 1, ck.shape[1]))
+    o = o.reshape(B, 1, -1)
+    return o @ p["wo"].astype(x.dtype), ck, cv
+
+
+def _decode_positions(cfg, pos, B):
+    p = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        p = jnp.broadcast_to(p[None], (3, B, 1))
+    return p

@@ -1,0 +1,187 @@
+"""Encoder-decoder backbone (seamless-m4t style).
+
+Encoder consumes precomputed modality-frontend embeddings (stub per assignment);
+decoder is a standard causal stack with cross-attention. Both stacks are scanned.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_mlp, apply_norm, dense_init, embed_init, init_norm, softmax_xent,
+)
+from repro.models.transformer import (
+    _stacked_norm, compute_dtype, logits_fn, make_positions, param_dtype, remat_wrap,
+)
+from repro.parallel.sharding import padded_vocab
+
+
+def _init_stack(cfg, key, pdt, n, cross: bool):
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    ks = jax.random.split(key, 12)
+
+    def attn_p(i):
+        return {
+            "wq": dense_init(ks[i], (n, d, hq * dh), d, pdt),
+            "wk": dense_init(ks[i + 1], (n, d, hkv * dh), d, pdt),
+            "wv": dense_init(ks[i + 2], (n, d, hkv * dh), d, pdt),
+            "wo": dense_init(ks[i + 3], (n, hq * dh, d), hq * dh, pdt),
+        }
+
+    p = {
+        "attn": attn_p(0),
+        "mlp": {
+            "wi": dense_init(ks[8], (n, d, f), d, pdt),
+            "wo": dense_init(ks[9], (n, f, d), f, pdt),
+        },
+        "norm1": _stacked_norm(cfg, n, d),
+        "norm2": _stacked_norm(cfg, n, d),
+    }
+    if cfg.act == "swiglu":
+        p["mlp"]["wg"] = dense_init(ks[10], (n, d, f), d, pdt)
+    if cross:
+        p["cross"] = attn_p(4)
+        p["norm3"] = _stacked_norm(cfg, n, d)
+    return p
+
+
+def init_encdec(cfg, key) -> dict:
+    pdt = param_dtype(cfg)
+    vp = padded_vocab(cfg.vocab)
+    ks = jax.random.split(key, 5)
+    params = {
+        "embed": {"tok": embed_init(ks[0], (vp, cfg.d_model), pdt)},
+        "encoder": {"layers": _init_stack(cfg, ks[1], pdt, cfg.encoder_layers, False),
+                    "final_norm": init_norm(ks[1], cfg, cfg.d_model)},
+        "decoder": {"layers": _init_stack(cfg, ks[2], pdt, cfg.n_layers, True),
+                    "final_norm": init_norm(ks[2], cfg, cfg.d_model)},
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": dense_init(ks[3], (cfg.d_model, vp), cfg.d_model, pdt)}
+    return params
+
+
+def encode(cfg, params, src_embeds, sharder=None, impl="xla"):
+    """src_embeds (B,S,D) -> encoder hidden states."""
+    B, S, _ = src_embeds.shape
+    positions = make_positions(cfg, B, S)
+    x = src_embeds
+
+    def body(xx, lp):
+        h = apply_norm(cfg, lp["norm1"], xx)
+        xx = xx + attn.attention_block(cfg, lp["attn"], h, positions, causal=False,
+                                       sharder=sharder, impl=impl)
+        h2 = apply_norm(cfg, lp["norm2"], xx)
+        xx = xx + apply_mlp(cfg, lp["mlp"], h2, sharder)
+        if sharder is not None:
+            xx = sharder.constrain(xx, "batch", None, None)
+        return xx, None
+
+    x, _ = jax.lax.scan(remat_wrap(cfg, body), x, params["encoder"]["layers"])
+    return apply_norm(cfg, params["encoder"]["final_norm"], x)
+
+
+def decode_train(cfg, params, tgt_tokens, enc_out, sharder=None, impl="xla"):
+    cdt = compute_dtype(cfg)
+    B, S = tgt_tokens.shape
+    x = params["embed"]["tok"].astype(cdt)[tgt_tokens]
+    positions = make_positions(cfg, B, S)
+
+    def body(xx, lp):
+        h = apply_norm(cfg, lp["norm1"], xx)
+        xx = xx + attn.attention_block(cfg, lp["attn"], h, positions, causal=True,
+                                       sharder=sharder, impl=impl)
+        h2 = apply_norm(cfg, lp["norm3"], xx)
+        xx = xx + attn.cross_attention_block(cfg, lp["cross"], h2, enc_out,
+                                             sharder=sharder, impl=impl)
+        h3 = apply_norm(cfg, lp["norm2"], xx)
+        xx = xx + apply_mlp(cfg, lp["mlp"], h3, sharder)
+        if sharder is not None:
+            xx = sharder.constrain(xx, "batch", None, None)
+        return xx, None
+
+    x, _ = jax.lax.scan(remat_wrap(cfg, body), x, params["decoder"]["layers"])
+    return apply_norm(cfg, params["decoder"]["final_norm"], x)
+
+
+def encdec_loss(cfg, params, batch, sharder=None, impl="xla"):
+    cdt = compute_dtype(cfg)
+    src = batch["src_embeds"].astype(cdt)
+    if sharder is not None:
+        src = sharder.constrain(src, "batch", None, None)
+    enc_out = encode(cfg, params, src, sharder, impl)
+    h = decode_train(cfg, params, batch["tgt_tokens"], enc_out, sharder, impl)
+    logits = logits_fn(cfg, params, h)
+    loss = softmax_xent(logits, batch["labels"])
+    return loss, {"xent": loss}
+
+
+# --------------------------------------------------------------------------- #
+# Serving: prefill computes encoder output + cross-KV once; decode steps reuse.
+# --------------------------------------------------------------------------- #
+def init_encdec_cache(cfg, batch: int, seq_len: int):
+    dh = cfg.resolved_head_dim
+    cdt = compute_dtype(cfg)
+    L = cfg.n_layers
+    return {
+        "k": jnp.zeros((L, batch, seq_len, cfg.n_kv_heads, dh), cdt),
+        "v": jnp.zeros((L, batch, seq_len, cfg.n_kv_heads, dh), cdt),
+        "cross_k": jnp.zeros((L, batch, seq_len, cfg.n_kv_heads, dh), cdt),
+        "cross_v": jnp.zeros((L, batch, seq_len, cfg.n_kv_heads, dh), cdt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def encdec_prefill(cfg, params, batch, seq_len, sharder=None, impl="xla"):
+    """Encode source; precompute per-layer cross-KV; prime decoder with BOS."""
+    cdt = compute_dtype(cfg)
+    src = batch["src_embeds"].astype(cdt)
+    B = src.shape[0]
+    enc_out = encode(cfg, params, src, sharder, impl)
+    dh = cfg.resolved_head_dim
+
+    def cross_kv(lp):
+        k = (enc_out @ lp["cross"]["wk"].astype(cdt)).reshape(B, -1, cfg.n_kv_heads, dh)
+        v = (enc_out @ lp["cross"]["wv"].astype(cdt)).reshape(B, -1, cfg.n_kv_heads, dh)
+        return k, v
+
+    ck, cv = jax.vmap(cross_kv)(params["decoder"]["layers"])
+    cache = init_encdec_cache(cfg, B, seq_len)
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    logits, cache = encdec_decode_step(cfg, params, cache, batch["tgt_tokens"][:, :1],
+                                       sharder)
+    return logits, cache
+
+
+def encdec_decode_step(cfg, params, cache, tokens, sharder=None):
+    cdt = compute_dtype(cfg)
+    x = params["embed"]["tok"].astype(cdt)[tokens]
+    pos = cache["pos"]
+    dh = cfg.resolved_head_dim
+    B = x.shape[0]
+
+    def body(xx, layer):
+        lp, ck, cv, xk, xv = layer
+        h = apply_norm(cfg, lp["norm1"], xx)
+        o, ck, cv = attn.decode_attention(cfg, lp["attn"], h, ck, cv, pos,
+                                          sharder=sharder)
+        xx = xx + o
+        h2 = apply_norm(cfg, lp["norm3"], xx)
+        q = (h2 @ lp["cross"]["wq"].astype(cdt)).reshape(B, 1, cfg.n_heads, dh)
+        o2 = attn.sdpa(q, xk, xv, causal=False)
+        xx = xx + o2.reshape(B, 1, -1) @ lp["cross"]["wo"].astype(cdt)
+        h3 = apply_norm(cfg, lp["norm2"], xx)
+        xx = xx + apply_mlp(cfg, lp["mlp"], h3, sharder)
+        return xx, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(
+        body, x,
+        (params["decoder"]["layers"], cache["k"], cache["v"],
+         cache["cross_k"], cache["cross_v"]))
+    x = apply_norm(cfg, params["decoder"]["final_norm"], x)
+    logits = logits_fn(cfg, params, x)
+    new_cache = dict(cache, k=ck, v=cv, pos=pos + 1)
+    return logits, new_cache

@@ -1,0 +1,237 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block applied
+after every ``hybrid_shared_every``-th mamba layer (parameter sharing).
+
+38 layers with period 6 -> 6 shared-block applications + 2 trailing mamba layers.
+Mamba groups are scanned (stacked params); shared-block applications are
+unrolled (there are only ~6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2
+from repro.models.layers import (
+    apply_mlp, apply_norm, dense_init, embed_init, init_mlp, init_norm,
+)
+from repro.models.transformer import (
+    compute_dtype, init_norm as _unused, logits_fn, make_positions, param_dtype,
+    remat_wrap, softmax_xent, _stacked_norm,
+)
+from repro.parallel.sharding import padded_vocab
+
+
+def group_structure(cfg):
+    """(n_groups, group_size, n_tail) with n_groups*group_size + n_tail = n_layers."""
+    g = cfg.hybrid_shared_every
+    n_groups = cfg.n_layers // g
+    return n_groups, g, cfg.n_layers - n_groups * g
+
+
+def _init_mamba_stack(cfg, key, pdt, n):
+    di, nh, nst, pd, w = mamba2.dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "ssm": {
+            "in_proj": dense_init(ks[0], (n, d, 2 * di + 2 * nst + nh), d, pdt),
+            "out_proj": dense_init(ks[1], (n, di, d), di, pdt),
+            "conv_w": (0.1 * jax.random.normal(ks[2], (n, w, di + 2 * nst))).astype(pdt),
+            "A_log": jnp.tile(jnp.log(jnp.linspace(1.0, 16.0, nh)), (n, 1)).astype(jnp.float32),
+            "D": jnp.ones((n, nh), jnp.float32),
+            "dt_bias": jnp.zeros((n, nh), jnp.float32),
+            "norm_scale": jnp.ones((n, di), jnp.float32),
+        },
+        "norm1": _stacked_norm(cfg, n, d),
+    }
+
+
+def init_hybrid(cfg, key) -> dict:
+    pdt = param_dtype(cfg)
+    vp = padded_vocab(cfg.vocab)
+    n_groups, g, tail = group_structure(cfg)
+    ks = jax.random.split(key, 6)
+    d = cfg.d_model
+    kattn = jax.random.split(ks[2], 2)
+    params = {
+        "embed": {"tok": embed_init(ks[0], (vp, d), pdt)},
+        "groups": _init_mamba_stack(cfg, ks[1], pdt, n_groups * g),
+        "shared": {
+            "attn": attn.init_attention(kattn[0], cfg, pdt),
+            "mlp": init_mlp(kattn[1], cfg, d, cfg.d_ff, pdt),
+            "norm1": init_norm(ks[3], cfg, d),
+            "norm2": init_norm(ks[3], cfg, d),
+        },
+        "final_norm": init_norm(ks[4], cfg, d),
+    }
+    if tail:
+        params["tail"] = _init_mamba_stack(cfg, ks[5], pdt, tail)
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": dense_init(ks[5], (d, vp), d, pdt)}
+    return params
+
+
+def _mamba_layer(cfg, lp, x, sharder):
+    h = apply_norm(cfg, lp["norm1"], x)
+    return x + mamba2.mamba2_block(cfg, lp["ssm"], h, sharder)
+
+
+def _shared_block(cfg, sp, x, positions, sharder, impl):
+    h = apply_norm(cfg, sp["norm1"], x)
+    x = x + attn.attention_block(cfg, sp["attn"], h, positions, causal=True,
+                                 sharder=sharder, impl=impl)
+    h2 = apply_norm(cfg, sp["norm2"], x)
+    return x + apply_mlp(cfg, sp["mlp"], h2, sharder)
+
+
+def forward_hidden(cfg, params, x, positions, sharder=None, impl="xla"):
+    n_groups, g, tail = group_structure(cfg)
+    body = remat_wrap(cfg, lambda xx, lp: (_mamba_layer(cfg, lp, xx, sharder), None))
+
+    def reshape_group(t):
+        return t.reshape(n_groups, g, *t.shape[1:])
+
+    grouped = jax.tree.map(reshape_group, params["groups"])
+
+    def group_body(xx, glp):
+        xx, _ = jax.lax.scan(body, xx, glp)
+        xx = _shared_block(cfg, params["shared"], xx, positions, sharder, impl)
+        return xx, None
+
+    x, _ = jax.lax.scan(remat_wrap(cfg, group_body), x, grouped)
+    if tail:
+        x, _ = jax.lax.scan(body, x, params["tail"])
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def hybrid_loss(cfg, params, batch, sharder=None, impl="xla"):
+    cdt = compute_dtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"]["tok"].astype(cdt)[tokens]
+    positions = make_positions(cfg, B, S)
+    if sharder is not None:
+        x = sharder.constrain(x, "batch", None, None)
+    h = forward_hidden(cfg, params, x, positions, sharder, impl)
+    logits = logits_fn(cfg, params, h)
+    loss = softmax_xent(logits, batch["labels"])
+    return loss, {"xent": loss}
+
+
+# --------------------------------------------------------------------------- #
+# Prefill / Decode
+# --------------------------------------------------------------------------- #
+def hybrid_prefill(cfg, params, batch, seq_len: int, sharder=None, impl="xla"):
+    """Prompt pass with state capture: mamba states + shared-attn KV per group."""
+    cdt = compute_dtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"]["tok"].astype(cdt)[tokens]
+    positions = make_positions(cfg, B, S)
+    n_groups, g, tail = group_structure(cfg)
+    dh = cfg.resolved_head_dim
+
+    def mamba_body(xx, lp):
+        h = apply_norm(cfg, lp["norm1"], xx)
+        y, s, c = mamba2.mamba2_block_state(cfg, lp["ssm"], h, sharder)
+        return xx + y, (s, c)
+
+    def reshape_group(t):
+        return t.reshape(n_groups, g, *t.shape[1:])
+
+    grouped = jax.tree.map(reshape_group, params["groups"])
+
+    def group_body(xx, glp):
+        xx, states = jax.lax.scan(mamba_body, xx, glp)
+        h = apply_norm(cfg, params["shared"]["norm1"], xx)
+        q, k, v = attn.qkv_proj(cfg, params["shared"]["attn"], h, positions)
+        o = attn.sdpa(q, k, v, causal=True, impl=impl)
+        xx = xx + o.reshape(B, S, -1) @ params["shared"]["attn"]["wo"].astype(cdt)
+        h2 = apply_norm(cfg, params["shared"]["norm2"], xx)
+        xx = xx + apply_mlp(cfg, params["shared"]["mlp"], h2, sharder)
+        return xx, (states, k, v)
+
+    x, (mstates, ks, vs) = jax.lax.scan(group_body, x, grouped)
+    ssm_states = mstates[0].reshape(n_groups * g, B, *mstates[0].shape[3:])
+    conv_states = mstates[1].reshape(n_groups * g, B, *mstates[1].shape[3:])
+    if tail:
+        x, (s_t, c_t) = jax.lax.scan(mamba_body, x, params["tail"])
+        ssm_states = jnp.concatenate([ssm_states, s_t], axis=0)
+        conv_states = jnp.concatenate([conv_states, c_t], axis=0)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_fn(cfg, params, x[:, -1:])
+    # place the prompt KV at the head of a seq_len-sized cache
+    cache = init_hybrid_cache(cfg, B, seq_len)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], ks.astype(cache["k"].dtype), (0, 0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vs.astype(cache["v"].dtype), (0, 0, 0, 0, 0))
+    cache["ssm"] = ssm_states
+    cache["conv"] = conv_states.astype(cache["conv"].dtype)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    return logits, cache
+
+
+def init_hybrid_cache(cfg, batch: int, seq_len: int):
+    n_groups, g, tail = group_structure(cfg)
+    di, nh, nst, pd, w = mamba2.dims(cfg)
+    cdt = compute_dtype(cfg)
+    dh = cfg.resolved_head_dim
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, nh, pd, nst), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, w - 1, di + 2 * nst), cdt),
+        "k": jnp.zeros((n_groups, batch, seq_len, cfg.n_kv_heads, dh), cdt),
+        "v": jnp.zeros((n_groups, batch, seq_len, cfg.n_kv_heads, dh), cdt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def hybrid_decode_step(cfg, params, cache, tokens, sharder=None):
+    cdt = compute_dtype(cfg)
+    n_groups, g, tail = group_structure(cfg)
+    x = params["embed"]["tok"].astype(cdt)[tokens]
+    pos = cache["pos"]
+
+    def mamba_body(xx, layer):
+        lp, ssm_c, conv_c = layer
+        h = apply_norm(cfg, lp["norm1"], xx)
+        y, new_c = mamba2.mamba2_decode_step(cfg, lp["ssm"], h, {"ssm": ssm_c, "conv": conv_c})
+        return xx + y, (new_c["ssm"], new_c["conv"])
+
+    def slice_layers(tree, lo, n):
+        return jax.tree.map(lambda t: jax.lax.dynamic_slice_in_dim(t, lo, n, 0), tree)
+
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    for gi in range(n_groups):
+        lo = gi * g
+        glp = slice_layers(params["groups"], lo, g)
+        x, (s_c, c_c) = jax.lax.scan(
+            mamba_body, x, (glp, cache["ssm"][lo:lo + g], cache["conv"][lo:lo + g]))
+        new_ssm.append(s_c)
+        new_conv.append(c_c)
+        h = apply_norm(cfg, params["shared"]["norm1"], x)
+        o, ck, cv = attn.decode_attention(cfg, params["shared"]["attn"], h,
+                                          cache["k"][gi], cache["v"][gi], pos,
+                                          sharder=sharder)
+        x = x + o
+        h2 = apply_norm(cfg, params["shared"]["norm2"], x)
+        x = x + apply_mlp(cfg, params["shared"]["mlp"], h2, sharder)
+        new_k.append(ck)
+        new_v.append(cv)
+    if tail:
+        x, (s_c, c_c) = jax.lax.scan(
+            mamba_body, x,
+            (params["tail"], cache["ssm"][n_groups * g:], cache["conv"][n_groups * g:]))
+        new_ssm.append(s_c)
+        new_conv.append(c_c)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_fn(cfg, params, x)
+    new_cache = {
+        "ssm": jnp.concatenate(new_ssm, axis=0),
+        "conv": jnp.concatenate(new_conv, axis=0),
+        "k": jnp.stack(new_k, axis=0),
+        "v": jnp.stack(new_v, axis=0),
+        "pos": pos + 1,
+    }
+    return logits, new_cache

@@ -1,0 +1,152 @@
+"""Shared neural-net layers: norms, activations, RoPE / M-RoPE, initializers."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------- #
+# Initializers
+# --------------------------------------------------------------------------- #
+def dense_init(key, shape, in_dim: Optional[int] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (as used by most released LMs)."""
+    if in_dim is None:
+        in_dim = shape[0]
+    std = 1.0 / np.sqrt(in_dim)
+    return (std * jax.random.truncated_normal(key, -3.0, 3.0, shape)).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (0.02 * jax.random.truncated_normal(key, -3.0, 3.0, shape)).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x, scale=None, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def layer_norm(x, scale=None, bias=None, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def init_norm(key, cfg, d: int) -> dict:
+    if cfg.norm == "nonparam_ln":
+        return {}
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(cfg, p: dict, x):
+    if cfg.norm == "nonparam_ln":
+        return layer_norm(x)
+    if cfg.norm == "layernorm":
+        return layer_norm(x, p.get("scale"), p.get("bias"))
+    return rms_norm(x, p.get("scale"))
+
+
+# --------------------------------------------------------------------------- #
+# Activations
+# --------------------------------------------------------------------------- #
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def softplus(x):
+    return jax.nn.softplus(x)
+
+
+# --------------------------------------------------------------------------- #
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float, dtype=jnp.float32):
+    half = head_dim // 2
+    return (theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)).astype(dtype)
+
+
+def rope_angles(positions, head_dim: int, theta: float,
+                mrope_sections: Optional[tuple] = None):
+    """positions: (..., S) int, or (3, ..., S) for M-RoPE. Returns (..., S, half)."""
+    half = head_dim // 2
+    freqs = rope_frequencies(head_dim, theta)
+    if mrope_sections is None:
+        return positions[..., None].astype(jnp.float32) * freqs
+    # M-RoPE: each frequency slot i takes its position from section s(i) in (t,h,w)
+    assert positions.shape[0] == 3, "M-RoPE needs (3, ..., S) positions"
+    sec = np.asarray(mrope_sections)
+    assert int(sec.sum()) == half, (mrope_sections, half)
+    sel = np.repeat(np.arange(3), sec)                       # (half,) section id per freq
+    pos_pf = jnp.take(positions, jnp.asarray(sel), axis=0)   # (half, ..., S)
+    pos_pf = jnp.moveaxis(pos_pf, 0, -1)                     # (..., S, half)
+    return pos_pf.astype(jnp.float32) * freqs
+
+
+def apply_rope(x, angles):
+    """x: (B, S, H, dh); angles: (B, S, half) -> rotate-half convention."""
+    dtype = x.dtype
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# MLP (SwiGLU / GELU)
+# --------------------------------------------------------------------------- #
+def init_mlp(key, cfg, d: int, f: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], (d, f), d, dtype), "wo": dense_init(ks[1], (f, d), f, dtype)}
+    if cfg.act == "swiglu":
+        p["wg"] = dense_init(ks[2], (d, f), d, dtype)
+    return p
+
+
+def apply_mlp(cfg, p: dict, x, sharder=None):
+    cdt = x.dtype
+    h = x @ p["wi"].astype(cdt)
+    if cfg.act == "swiglu":
+        h = silu(x @ p["wg"].astype(cdt)) * h
+    else:
+        h = jax.nn.gelu(h)
+    if sharder is not None:
+        h = sharder.constrain(h, "batch", None, "model")
+    return h @ p["wo"].astype(cdt)
+
+
+# --------------------------------------------------------------------------- #
+# Losses
+# --------------------------------------------------------------------------- #
+def softmax_xent(logits, labels, mask=None, z_loss: float = 1e-4):
+    """Cross-entropy with optional z-loss; logits (..., V) any dtype, labels int."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    if mask is not None:
+        loss = loss * mask
+        return loss.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss.mean()

@@ -1,0 +1,165 @@
+"""Mamba2 (SSD — state-space duality) block: chunked scan training/prefill +
+recurrent O(1)-state decode. [arXiv:2405.21060]
+
+Layout: d_inner = expand * d_model, H = d_inner / head_dim heads, state size N.
+Single B/C group (n_groups=1), causal depthwise conv width W over [x, B, C].
+
+Chunked SSD (training / prefill), chunk length Q:
+  a_t   = exp(dt_t * A_h)                        per-head scalar decay
+  intra = (C_q . B_k) * exp(la_q - la_k) * dt_k  for k <= q within a chunk
+  inter = carry state H_c = (prod a) H_{c-1} + sum_k decay_k B_k (dt_k x_k)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm, silu, softplus
+
+
+def dims(cfg):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    return di, nh, s.state_dim, s.head_dim, s.conv_width
+
+
+def init_mamba2(key, cfg, dtype) -> dict:
+    di, nh, n, p_, w = dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * n
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + nh), d, dtype),
+        "out_proj": dense_init(ks[1], (di, d), di, dtype),
+        "conv_w": (0.1 * jax.random.normal(ks[2], (w, conv_dim))).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, nh, n, _, _ = dims(cfg)
+    z, xc, b, c, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    return z, xc, b, c, dt
+
+
+def _causal_conv(xbc, conv_w):
+    """xbc (B,S,Cd), conv_w (W,Cd): causal depthwise conv."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * conv_w[i] for i in range(w))
+    return silu(out)
+
+
+def ssd_chunked(cfg, xh, dt, a_log, b, c):
+    """Chunked SSD scan.
+
+    xh (B,S,H,P) inputs, dt (B,S,H) discretization, a_log = dt*A (B,S,H) <= 0,
+    b,c (B,S,N). Returns y (B,S,H,P), final state (B,H,P,N).
+    """
+    B, S, H, Pd = xh.shape
+    N = b.shape[-1]
+    Q = min(cfg.ssm.chunk, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    r = lambda t: t.reshape(B, nc, Q, *t.shape[2:])
+    xh, dt, a_log, b, c = r(xh), r(dt), r(a_log), r(b), r(c)
+
+    la = jnp.cumsum(a_log, axis=2)                        # (B,nc,Q,H) log-decay from chunk start
+    # intra-chunk: y_q += sum_{k<=q} C_q.B_k * exp(la_q - la_k) * dt_k * x_k
+    g = jnp.einsum("bcqn,bckn->bcqk", c, b)               # (B,nc,Q,Q)
+    dl = la[:, :, :, None, :] - la[:, :, None, :, :]      # (B,nc,Q,Q,H) la_q - la_k
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # clamp before exp so masked (k>q) entries don't overflow -> NaN in the VJP
+    dl_safe = jnp.where(mask, dl, 0.0)
+    m = jnp.where(mask, jnp.exp(dl_safe), 0.0)
+    m = m * g[..., None]                                  # (B,nc,Q,Q,H)
+    xdt = xh * dt[..., None]                              # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", m.astype(xh.dtype), xdt)
+
+    # chunk summaries: s_c = sum_k exp(la_end - la_k) B_k (dt_k x_k)
+    decay_to_end = jnp.exp(la[:, :, -1:, :] - la)         # (B,nc,Q,H)
+    s = jnp.einsum("bckn,bckh,bckhp->bchpn", b.astype(jnp.float32),
+                   decay_to_end.astype(jnp.float32), xdt.astype(jnp.float32))
+    chunk_decay = jnp.exp(la[:, :, -1, :]).astype(jnp.float32)  # (B,nc,H)
+
+    def step(h, inp):
+        s_c, dec = inp                                    # (B,H,P,N), (B,H)
+        h_new = h * dec[:, :, None, None] + s_c
+        return h_new, h                                   # emit state BEFORE this chunk
+
+    h0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+    h_final, h_prev = jax.lax.scan(step, h0, (jnp.moveaxis(s, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                   # (B,nc,H,P,N) state entering chunk
+
+    # inter-chunk: y_q += exp(la_q) * C_q . H_prev
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", c.astype(jnp.float32), h_prev) \
+        * jnp.exp(la)[..., None].astype(jnp.float32)
+    y = (y_intra.astype(jnp.float32) + y_inter).astype(xh.dtype)
+    return y.reshape(B, S, H, Pd), h_final
+
+
+def mamba2_block_state(cfg, p, x, sharder=None):
+    """Full Mamba2 block. x (B,S,D) -> (out (B,S,D), final ssm state, conv tail)."""
+    di, nh, n, pd, w = dims(cfg)
+    B, S, D = x.shape
+    cdt = x.dtype
+    zxbcdt = x @ p["in_proj"].astype(cdt)
+    z, xc, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc_raw = jnp.concatenate([xc, b, c], axis=-1)
+    xbc = _causal_conv(xbc_raw, p["conv_w"].astype(cdt))
+    xc, b, c = jnp.split(xbc, [di, di + n], axis=-1)
+    if sharder is not None:
+        xc = sharder.constrain(xc, "batch", None, "model")
+    dt = softplus(dt.astype(jnp.float32) + p["dt_bias"])            # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                        # (H,)
+    a_log = dt * a                                                   # (B,S,H)
+    xh = xc.reshape(B, S, nh, pd)
+    y, h_final = ssd_chunked(cfg, xh, dt.astype(cdt), a_log.astype(cdt), b, c)
+    y = y + p["D"].astype(cdt)[:, None] * xh
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * silu(z), p["norm_scale"])
+    return y @ p["out_proj"].astype(cdt), h_final, xbc_raw[:, -(w - 1):]
+
+
+def mamba2_block(cfg, p, x, sharder=None):
+    """Training/prefill path without state capture. x (B,S,D) -> (B,S,D)."""
+    return mamba2_block_state(cfg, p, x, sharder)[0]
+
+
+# --------------------------------------------------------------------------- #
+# Recurrent decode
+# --------------------------------------------------------------------------- #
+def init_mamba_cache(cfg, batch: int, dtype):
+    di, nh, n, pd, w = dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, nh, pd, n), jnp.float32),
+        "conv": jnp.zeros((batch, w - 1, di + 2 * n), dtype),
+    }
+
+
+def mamba2_decode_step(cfg, p, x, cache):
+    """x (B,1,D); cache {"ssm": (B,H,P,N), "conv": (B,W-1,Cd)} -> (y, cache)."""
+    di, nh, n, pd, w = dims(cfg)
+    B = x.shape[0]
+    cdt = x.dtype
+    zxbcdt = (x[:, 0] @ p["in_proj"].astype(cdt))                   # (B, ...)
+    z, xc, b, c, dt = _split_proj(cfg, zxbcdt)
+    xbc_new = jnp.concatenate([xc, b, c], axis=-1)                  # (B,Cd)
+    hist = jnp.concatenate([cache["conv"], xbc_new[:, None]], axis=1)  # (B,W,Cd)
+    conv_out = silu(jnp.einsum("bwc,wc->bc", hist, p["conv_w"].astype(cdt)))
+    xc, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = softplus(dt.astype(jnp.float32) + p["dt_bias"])            # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                          # (B,H)
+    xh = xc.reshape(B, nh, pd).astype(jnp.float32)
+    dbx = dt[:, :, None, None] * xh[..., None] * b[:, None, None, :].astype(jnp.float32)
+    h = cache["ssm"] * a[:, :, None, None] + dbx                    # (B,H,P,N)
+    y = jnp.einsum("bhpn,bn->bhp", h, c.astype(jnp.float32))
+    y = y + p["D"][:, None] * xh
+    y = y.reshape(B, di).astype(cdt)
+    y = rms_norm(y * silu(z), p["norm_scale"])
+    out = (y @ p["out_proj"].astype(cdt))[:, None]
+    return out, {"ssm": h, "conv": hist[:, 1:]}

@@ -1,0 +1,107 @@
+"""Mamba2 language model (attention-free): embed -> scanned SSD layers -> head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba2
+from repro.models.layers import dense_init, embed_init, init_norm, apply_norm, softmax_xent
+from repro.models.transformer import _stacked_norm, compute_dtype, logits_fn, param_dtype, remat_wrap
+from repro.parallel.sharding import padded_vocab
+
+
+def init_ssm_lm(cfg, key) -> dict:
+    pdt = param_dtype(cfg)
+    vp = padded_vocab(cfg.vocab)
+    di, nh, n, pd, w = mamba2.dims(cfg)
+    d, L = cfg.d_model, cfg.n_layers
+    ks = jax.random.split(key, 5)
+    params = {
+        "embed": {"tok": embed_init(ks[0], (vp, d), pdt)},
+        "layers": {
+            "ssm": {
+                "in_proj": dense_init(ks[1], (L, d, 2 * di + 2 * n + nh), d, pdt),
+                "out_proj": dense_init(ks[2], (L, di, d), di, pdt),
+                "conv_w": (0.1 * jax.random.normal(ks[3], (L, w, di + 2 * n))).astype(pdt),
+                "A_log": jnp.tile(jnp.log(jnp.linspace(1.0, 16.0, nh)), (L, 1)).astype(jnp.float32),
+                "D": jnp.ones((L, nh), jnp.float32),
+                "dt_bias": jnp.zeros((L, nh), jnp.float32),
+                "norm_scale": jnp.ones((L, di), jnp.float32),
+            },
+            "norm1": _stacked_norm(cfg, L, d),
+        },
+        "final_norm": init_norm(ks[4], cfg, d),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": dense_init(ks[4], (d, vp), d, pdt)}
+    return params
+
+
+def forward_hidden(cfg, params, x, sharder=None):
+    def body(xx, lp):
+        h = apply_norm(cfg, lp["norm1"], xx)
+        xx = xx + mamba2.mamba2_block(cfg, lp["ssm"], h, sharder)
+        if sharder is not None:
+            xx = sharder.constrain(xx, "batch", None, None)
+        return xx, None
+
+    x, _ = jax.lax.scan(remat_wrap(cfg, body), x, params["layers"])
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def ssm_loss(cfg, params, batch, sharder=None):
+    cdt = compute_dtype(cfg)
+    tokens = batch["tokens"]
+    x = params["embed"]["tok"].astype(cdt)[tokens]
+    if sharder is not None:
+        x = sharder.constrain(x, "batch", None, None)
+    h = forward_hidden(cfg, params, x, sharder)
+    logits = logits_fn(cfg, params, h)
+    loss = softmax_xent(logits, batch["labels"])
+    return loss, {"xent": loss}
+
+
+def init_ssm_cache(cfg, batch: int):
+    di, nh, n, pd, w = mamba2.dims(cfg)
+    cdt = compute_dtype(cfg)
+    L = cfg.n_layers
+    return {
+        "ssm": jnp.zeros((L, batch, nh, pd, n), jnp.float32),
+        "conv": jnp.zeros((L, batch, w - 1, di + 2 * n), cdt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def ssm_prefill(cfg, params, batch, sharder=None):
+    """Run the prompt via the chunked scan, then capture final states per layer."""
+    cdt = compute_dtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"]["tok"].astype(cdt)[tokens]
+
+    def body(xx, lp):
+        h = apply_norm(cfg, lp["norm1"], xx)
+        y, h_final, conv_tail = mamba2.mamba2_block_state(cfg, lp["ssm"], h, sharder)
+        return xx + y, (h_final, conv_tail)
+
+    x, (ssm_states, conv_states) = jax.lax.scan(body, x, params["layers"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_fn(cfg, params, x[:, -1:])
+    cache = {"ssm": ssm_states, "conv": conv_states, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def ssm_decode_step(cfg, params, cache, tokens, sharder=None):
+    cdt = compute_dtype(cfg)
+    x = params["embed"]["tok"].astype(cdt)[tokens]
+
+    def body(xx, layer):
+        lp, s_c, c_c = layer
+        h = apply_norm(cfg, lp["norm1"], xx)
+        y, new_c = mamba2.mamba2_decode_step(cfg, lp["ssm"], h, {"ssm": s_c, "conv": c_c})
+        return xx + y, (new_c["ssm"], new_c["conv"])
+
+    x, (s_c, c_c) = jax.lax.scan(body, x, (params["layers"], cache["ssm"], cache["conv"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_fn(cfg, params, x)
+    return logits, {"ssm": s_c, "conv": c_c, "pos": cache["pos"] + 1}

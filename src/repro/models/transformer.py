@@ -1,0 +1,284 @@
+"""Decoder-only transformer stack (dense / MoE / VLM families).
+
+Layers are stored *stacked* on a leading L dim and executed with ``lax.scan``
+(+ configurable remat policy) so compile time and HLO size stay bounded for the
+dry-run matrix (35-64 layer models x 40 cells x 2 meshes).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    apply_mlp, apply_norm, dense_init, embed_init, init_mlp, init_norm,
+    softmax_xent,
+)
+from repro.parallel.sharding import padded_vocab
+
+
+def compute_dtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def param_dtype(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+# --------------------------------------------------------------------------- #
+# Init
+# --------------------------------------------------------------------------- #
+def _stack(n, init_fn, key):
+    """Init a layer param tree with a leading stacked dim of size n."""
+    def reshape(leaf):
+        return leaf
+    tree = init_fn(key, n)
+    return tree
+
+
+def init_layer(cfg, key, pdt, n: int) -> dict:
+    """Stacked params for n identical decoder layers."""
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    ks = jax.random.split(key, 8)
+    p: dict = {
+        "attn": {
+            "wq": dense_init(ks[0], (n, d, hq * dh), d, pdt),
+            "wk": dense_init(ks[1], (n, d, hkv * dh), d, pdt),
+            "wv": dense_init(ks[2], (n, d, hkv * dh), d, pdt),
+            "wo": dense_init(ks[3], (n, hq * dh, d), hq * dh, pdt),
+        },
+        "norm1": _stacked_norm(cfg, n, d),
+        "norm2": _stacked_norm(cfg, n, d),
+    }
+    if cfg.qkv_bias:
+        p["attn"]["bq"] = jnp.zeros((n, hq * dh), pdt)
+        p["attn"]["bk"] = jnp.zeros((n, hkv * dh), pdt)
+        p["attn"]["bv"] = jnp.zeros((n, hkv * dh), pdt)
+    if cfg.moe is not None:
+        e = cfg.moe.num_experts
+        p["moe"] = {
+            "router": dense_init(ks[4], (n, d, e), d, jnp.float32),
+            "wi": dense_init(ks[5], (n, e, d, f), d, pdt),
+            "wo": dense_init(ks[6], (n, e, f, d), f, pdt),
+        }
+        if cfg.act == "swiglu":
+            p["moe"]["wg"] = dense_init(ks[7], (n, e, d, f), d, pdt)
+        if cfg.moe.dense_residual:
+            kd = jax.random.split(ks[7], 3)
+            p["mlp"] = {
+                "wi": dense_init(kd[0], (n, d, f), d, pdt),
+                "wg": dense_init(kd[1], (n, d, f), d, pdt),
+                "wo": dense_init(kd[2], (n, f, d), f, pdt),
+            }
+    else:
+        p["mlp"] = {
+            "wi": dense_init(ks[4], (n, d, f), d, pdt),
+            "wo": dense_init(ks[5], (n, f, d), f, pdt),
+        }
+        if cfg.act == "swiglu":
+            p["mlp"]["wg"] = dense_init(ks[6], (n, d, f), d, pdt)
+    return p
+
+
+def _stacked_norm(cfg, n, d):
+    if cfg.norm == "nonparam_ln":
+        return {}
+    p = {"scale": jnp.ones((n, d), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((n, d), jnp.float32)
+    return p
+
+
+def init_lm(cfg, key) -> dict:
+    pdt = param_dtype(cfg)
+    vp = padded_vocab(cfg.vocab)
+    k_emb, k_layers, k_head = jax.random.split(key, 3)
+    params = {
+        "embed": {"tok": embed_init(k_emb, (vp, cfg.d_model), pdt)},
+        "layers": init_layer(cfg, k_layers, pdt, cfg.n_layers),
+        "final_norm": init_norm(k_head, cfg, cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": dense_init(k_head, (cfg.d_model, vp), cfg.d_model, pdt)}
+    return params
+
+
+# --------------------------------------------------------------------------- #
+# Forward (train / prefill)
+# --------------------------------------------------------------------------- #
+def embed_tokens(cfg, params, tokens):
+    cdt = compute_dtype(cfg)
+    return params["embed"]["tok"].astype(cdt)[tokens]
+
+
+def make_positions(cfg, B, S):
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if cfg.mrope_sections is not None:
+        pos = jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def block_fn(cfg, lp, x, positions, sharder, impl, moe_dispatch="scatter"):
+    """One decoder layer. Returns (x, aux_loss)."""
+    h = apply_norm(cfg, lp["norm1"], x)
+    a = attn.attention_block(cfg, lp["attn"], h, positions, causal=True,
+                             sharder=sharder, impl=impl)
+    x = x + a
+    h2 = apply_norm(cfg, lp["norm2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.moe is not None:
+        y, aux = moe_mod.moe_block(cfg, lp["moe"], h2, sharder, moe_dispatch)
+        if cfg.moe.dense_residual:
+            y = y + apply_mlp(cfg, lp["mlp"], h2, sharder)
+    else:
+        y = apply_mlp(cfg, lp["mlp"], h2, sharder)
+    x = x + y
+    if sharder is not None:
+        x = sharder.constrain(x, "batch", None, None)
+    return x, aux
+
+
+def forward_hidden(cfg, params, x, positions, sharder=None, impl="xla",
+                   moe_dispatch="scatter"):
+    """x: (B,S,D) embeddings -> final hidden states (B,S,D)."""
+    body = lambda xx, lp: block_fn(cfg, lp, xx, positions, sharder, impl, moe_dispatch)
+    body = remat_wrap(cfg, body)
+    x, aux = jax.lax.scan(body, x, params["layers"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    return x, aux.sum()
+
+
+def logits_fn(cfg, params, h):
+    cdt = h.dtype
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"]["tok"].astype(cdt).T
+    else:
+        logits = h @ params["head"]["w"].astype(cdt)
+    vp = logits.shape[-1]
+    if vp != cfg.vocab:  # mask padded vocab entries
+        neg = (jnp.arange(vp) >= cfg.vocab) * -1e9
+        logits = logits + neg.astype(logits.dtype)
+    return logits
+
+
+def lm_loss(cfg, params, batch, sharder=None, impl="xla", moe_dispatch="scatter"):
+    cdt = compute_dtype(cfg)
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"].astype(cdt)
+        B, S, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_tokens(cfg, params, tokens)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = make_positions(cfg, B, S)
+    if sharder is not None:
+        x = sharder.constrain(x, "batch", None, None)
+    h, aux = forward_hidden(cfg, params, x, positions, sharder, impl, moe_dispatch)
+    logits = logits_fn(cfg, params, h)
+    loss = softmax_xent(logits, batch["labels"])
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------------- #
+# KV cache: prefill + decode
+# --------------------------------------------------------------------------- #
+def cache_len(cfg, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    dh = cfg.resolved_head_dim
+    S = cache_len(cfg, seq_len)
+    cdt = compute_dtype(cfg)
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, S, cfg.n_kv_heads, dh), cdt),
+        "v": jnp.zeros((cfg.n_layers, batch, S, cfg.n_kv_heads, dh), cdt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill(cfg, params, batch, seq_len: int, sharder=None, impl="xla",
+            moe_dispatch="scatter"):
+    """Run the prompt through the stack, returning last-token logits + cache."""
+    cdt = compute_dtype(cfg)
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"].astype(cdt)
+        B, S, _ = x.shape
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = embed_tokens(cfg, params, tokens)
+    positions = batch.get("positions")
+    if positions is None:
+        positions = make_positions(cfg, B, S)
+    W = cache_len(cfg, seq_len)
+
+    def body(xx, lp):
+        h = apply_norm(cfg, lp["norm1"], xx)
+        q, k, v = attn.qkv_proj(cfg, lp["attn"], h, positions)
+        o = attn.sdpa(q, k, v, causal=True, window=cfg.sliding_window, impl=impl,
+                      sharder=sharder)
+        xx = xx + o.reshape(B, S, -1) @ lp["attn"]["wo"].astype(cdt)
+        h2 = apply_norm(cfg, lp["norm2"], xx)
+        if cfg.moe is not None:
+            y, _ = moe_mod.moe_block(cfg, lp["moe"], h2, sharder, moe_dispatch)
+            if cfg.moe.dense_residual:
+                y = y + apply_mlp(cfg, lp["mlp"], h2, sharder)
+        else:
+            y = apply_mlp(cfg, lp["mlp"], h2, sharder)
+        xx = xx + y
+        if sharder is not None:
+            xx = sharder.constrain(xx, "batch", None, None)
+        return xx, (k[:, -W:], v[:, -W:])
+
+    x, (ck, cv) = jax.lax.scan(remat_wrap(cfg, body), x, params["layers"])
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_fn(cfg, params, x[:, -1:])
+    cache = {"k": ck, "v": cv, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(cfg, params, cache, tokens, sharder=None):
+    """One decode step. tokens (B,1) int32; cache from init_cache/prefill."""
+    cdt = compute_dtype(cfg)
+    x = embed_tokens(cfg, params, tokens)
+    pos = cache["pos"]
+    W = cfg.sliding_window
+
+    def body(xx, layer):
+        lp, ck, cv = layer
+        h = apply_norm(cfg, lp["norm1"], xx)
+        o, ck, cv = attn.decode_attention(cfg, lp["attn"], h, ck, cv, pos,
+                                          window=W, sharder=sharder)
+        xx = xx + o
+        h2 = apply_norm(cfg, lp["norm2"], xx)
+        if cfg.moe is not None:
+            y, _ = moe_mod.moe_block(cfg, lp["moe"], h2, sharder, "scatter")
+            if cfg.moe.dense_residual:
+                y = y + apply_mlp(cfg, lp["mlp"], h2, sharder)
+        else:
+            y = apply_mlp(cfg, lp["mlp"], h2, sharder)
+        xx = xx + y
+        return xx, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_fn(cfg, params, x)
+    return logits, {"k": ck, "v": cv, "pos": pos + 1}

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamW, OptConfig, clip_by_global_norm, make_schedule
+
+__all__ = ["AdamW", "OptConfig", "clip_by_global_norm", "make_schedule"]

@@ -1,0 +1,9 @@
+from repro.parallel.sharding import (
+    Sharder,
+    batch_axes_for,
+    lm_param_rules,
+    padded_vocab,
+    spec_for_path,
+)
+
+__all__ = ["Sharder", "batch_axes_for", "lm_param_rules", "padded_vocab", "spec_for_path"]

@@ -1,0 +1,197 @@
+"""Sharding rules: logical axes -> mesh axes, param-tree PartitionSpecs.
+
+Logical axis vocabulary
+-----------------------
+- ``batch``   data-parallel batch dim            -> ("pod", "data") (present subset)
+- ``fsdp``    weight shard dim (ZeRO-3 style)    -> "data"
+- ``model``   tensor-parallel dim                -> "model"
+- ``expert``  expert-parallel dim (MoE)          -> "model"
+- ``part``    DVNR partition dim                 -> all mesh axes (flattened)
+- ``seq``     sequence-parallel dim (SP decode)  -> "model"
+- ``None``    replicated
+
+All LM linear weights are stored **2D flattened** ((d_in, n_heads*head_dim) etc.) so the
+tensor-parallel dim is always divisible by the model axis even when the head count is
+not (arctic: 56 heads, qwen2: 14 heads). Head structure exists only on activations,
+which are constrained only when divisible.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_DEFAULTS = {
+    "batch": ("pod", "data"),
+    "fsdp": ("data",),
+    "model": ("model",),
+    "expert": ("model",),
+    "seq": ("model",),
+    "part": ("pod", "data", "model"),
+}
+
+
+def padded_vocab(vocab: int, multiple: int = 256) -> int:
+    """Pad vocab so embedding/head shards divide evenly on any reasonable mesh."""
+    return int(-(-vocab // multiple) * multiple)
+
+
+def batch_axes_for(mesh: Optional[Mesh], global_batch: int) -> tuple[str, ...]:
+    """Largest prefix of ("pod","data") present in the mesh that divides the batch."""
+    if mesh is None:
+        return ()
+    axes: list[str] = []
+    div = 1
+    for name in ("pod", "data"):
+        if name in mesh.shape:
+            n = mesh.shape[name]
+            if global_batch % (div * n) == 0:
+                axes.append(name)
+                div *= n
+    return tuple(axes)
+
+
+class Sharder:
+    """Resolves logical axis names against a concrete mesh (or no mesh for tests)."""
+
+    def __init__(self, mesh: Optional[Mesh] = None, global_batch: int = 0):
+        self.mesh = mesh
+        self.axis_map: dict[str, tuple[str, ...]] = {}
+        if mesh is not None:
+            for logical, phys in LOGICAL_DEFAULTS.items():
+                present = tuple(a for a in phys if a in mesh.shape)
+                self.axis_map[logical] = present
+            if global_batch:
+                self.axis_map["batch"] = batch_axes_for(mesh, global_batch)
+
+    # ------------------------------------------------------------------ #
+    def resolve(self, logical: Optional[str]) -> Any:
+        if logical is None or self.mesh is None:
+            return None
+        phys = self.axis_map.get(logical, ())
+        if not phys:
+            return None
+        return phys if len(phys) > 1 else phys[0]
+
+    def spec(self, *logical: Optional[str]) -> P:
+        return P(*(self.resolve(ax) for ax in logical))
+
+    def sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+    def axis_size(self, logical: str) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.axis_map.get(logical, ())] or [1]))
+
+    def constrain(self, x, *logical: Optional[str]):
+        """with_sharding_constraint that no-ops when no mesh / axis absent /
+        non-divisible dims (keeps smoke tests and odd shapes valid)."""
+        if self.mesh is None:
+            return x
+        dims: list[Any] = []
+        for d, ax in zip(x.shape, logical):
+            size = 1
+            r = self.resolve(ax)
+            if r is not None:
+                names = (r,) if isinstance(r, str) else r
+                for nm in names:
+                    size *= self.mesh.shape[nm]
+            dims.append(r if (r is not None and d % size == 0) else None)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, P(*dims)))
+
+
+# --------------------------------------------------------------------------- #
+# Parameter-tree rules
+# --------------------------------------------------------------------------- #
+# Each rule: (path regex, logical axes per dim). Missing leading dims (e.g. the
+# stacked-layer dim) are padded with None on the left.
+def lm_param_rules(config) -> list[tuple[str, tuple]]:
+    moe = getattr(config, "moe", None)
+    ep = moe is not None and moe.expert_sharding == "ep"
+    rules: list[tuple[str, tuple]] = [
+        (r".*embed/tok$", ("model", "fsdp")),
+        (r".*head/w$", ("fsdp", "model")),
+        (r".*attn/w[qkv]$", ("fsdp", "model")),
+        (r".*attn/b[qkv]$", ("model",)),
+        (r".*attn/wo$", ("model", "fsdp")),
+        (r".*mlp/w[ig]$", ("fsdp", "model")),
+        (r".*mlp/wo$", ("model", "fsdp")),
+        (r".*moe/router$", (None, None)),
+        # SSM (mamba2)
+        (r".*ssm/in_proj$", ("fsdp", "model")),
+        (r".*ssm/out_proj$", ("model", "fsdp")),
+        (r".*ssm/conv_w$", (None, "model")),
+        (r".*ssm/(A_log|D|dt_bias)$", ("model",)),
+        (r".*norm.*", (None,)),
+    ]
+    if moe is not None:
+        if ep:
+            rules[8:8] = [
+                (r".*moe/w[ig]$", ("expert", "fsdp", None)),
+                (r".*moe/wo$", ("expert", None, "fsdp")),
+            ]
+        else:  # TP inside each expert (few large experts, e.g. grok-1)
+            rules[8:8] = [
+                (r".*moe/w[ig]$", (None, "fsdp", "model")),
+                (r".*moe/wo$", (None, "model", "fsdp")),
+            ]
+    return rules
+
+
+def spec_for_path(path: str, rules: Sequence[tuple[str, tuple]], ndim: int,
+                  sharder: Sharder) -> P:
+    for pat, logical in rules:
+        if re.match(pat, path):
+            axes = (None,) * (ndim - len(logical)) + tuple(logical)
+            return sharder.spec(*axes[:ndim])
+    return P()
+
+
+def tree_paths(tree) -> list[str]:
+    paths, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return ["/".join(_key_str(k) for k in kp) for kp, _ in paths]
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return str(k.key)
+    if hasattr(k, "idx"):
+        return str(k.idx)
+    return str(k)
+
+
+def param_shardings(params_tree, config, sharder: Sharder):
+    """Map a (possibly abstract) param pytree to a pytree of NamedShardings.
+
+    Divisibility guard: any dim that does not divide evenly by its assigned axis
+    size falls back to replication for that dim.
+    """
+    rules = lm_param_rules(config)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    out = []
+    for kp, leaf in flat:
+        path = "/".join(_key_str(k) for k in kp)
+        spec = spec_for_path(path, rules, len(leaf.shape), sharder)
+        spec = _guard_divisibility(spec, leaf.shape, sharder)
+        out.append(NamedSharding(sharder.mesh, spec) if sharder.mesh else None)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _guard_divisibility(spec: P, shape, sharder: Sharder) -> P:
+    if sharder.mesh is None:
+        return spec
+    dims = []
+    for d, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            dims.append(None)
+            continue
+        names = (ax,) if isinstance(ax, str) else ax
+        size = int(np.prod([sharder.mesh.shape[n] for n in names]))
+        dims.append(ax if d % size == 0 else None)
+    return P(*dims)

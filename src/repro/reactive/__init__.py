@@ -1,0 +1,5 @@
+from repro.reactive.graph import Node, Runtime, SlidingWindow, Source, Trigger
+from repro.reactive.dvnr import DVNRValue, dvnr_node
+
+__all__ = ["Node", "Runtime", "SlidingWindow", "Source", "Trigger",
+           "DVNRValue", "dvnr_node"]

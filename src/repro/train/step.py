@@ -1,0 +1,119 @@
+"""Train / serve step factories.
+
+``make_train_step``: value_and_grad -> clip -> AdamW, with optional microbatch
+gradient accumulation (lax.scan) and an optional cross-pod gradient-compression
+hook (int8 error-feedback ring; see optim/compressed.py).
+
+``make_serve_steps``: jit-ready prefill and decode closures.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import AdamW, OptConfig, clip_by_global_norm
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state), None
+
+
+def make_train_step(model, opt_cfg: OptConfig, sharder=None, impl: str = "xla",
+                    microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None,
+                    grad_compress: bool = False):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_compress=True`` threads an int8 error-feedback residual through the
+    optimizer state (``opt_state["ef_residual"]``): gradients are quantized to
+    int8 (+EF) before the optimizer — on a multi-pod mesh the cross-pod
+    all-reduce then moves int8 wire bytes (4x less than f32; see
+    optim/compressed.py and EXPERIMENTS.md §Perf beyond-paper list)."""
+    opt = AdamW(opt_cfg)
+    if grad_compress:
+        from repro.optim.compressed import (ef_compress_decompress,
+                                            init_error_feedback)
+
+        base_init = opt.init
+
+        def init_with_ef(params):
+            st = base_init(params)
+            st = dict(st)
+            st["ef_residual"] = init_error_feedback(params)
+            return st
+
+        opt.init = init_with_ef
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, sharder, impl)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        if microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def reshape(x):
+            return x.reshape(x.shape[0] // microbatches * 0 + microbatches,
+                             x.shape[0] // microbatches, *x.shape[1:]) \
+                if x.ndim >= 1 else x
+
+        # split leading batch dim into (microbatches, B/mb)
+        def split_mb(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mb = jax.tree.map(split_mb, batch)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, b_i):
+            (loss, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b_i)
+            acc = jax.tree.map(lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+            return acc, (loss, metrics)
+
+        gsum, (losses, metrics) = jax.lax.scan(body, zeros, mb)
+        grads = jax.tree.map(lambda g, p: (g / microbatches).astype(p.dtype), gsum, params)
+        metrics = jax.tree.map(lambda m: m.mean(), metrics)
+        return losses.mean(), metrics, grads
+
+    def step(params, opt_state, batch):
+        loss, metrics, grads = grads_of(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        if grad_compress:
+            opt_state = dict(opt_state)
+            residual = opt_state.pop("ef_residual")
+            grads, residual = ef_compress_decompress(grads, residual)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = AdamW.apply_updates(params, updates)
+        if grad_compress:
+            opt_state = dict(opt_state)
+            opt_state["ef_residual"] = residual
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm,
+                       lr=opt.schedule(opt_state["step"]))
+        return params, opt_state, metrics
+
+    step.optimizer = opt
+    return step
+
+
+def make_serve_steps(model, sharder=None, impl: str = "xla", seq_len: int = 0):
+    """Returns (prefill_fn, decode_fn) closures ready for jit."""
+
+    def prefill_fn(params, batch):
+        return model.prefill(params, batch, seq_len, sharder, impl)
+
+    def decode_fn(params, cache, tokens):
+        return model.decode_step(params, cache, tokens, sharder)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,3 @@
+from repro.utils.hlo import HloAnalysis, analyze_hlo
+
+__all__ = ["HloAnalysis", "analyze_hlo"]

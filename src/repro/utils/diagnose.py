@@ -1,0 +1,131 @@
+"""Cell diagnostics for the perf loop: top collectives / dots / traffic ops of
+a compiled dry-run cell. This is the 'profiler' of the CPU-only workflow —
+everything is read from the post-SPMD HLO.
+
+  PYTHONPATH=src python -m repro.utils.diagnose --arch grok_1_314b \
+      --shape train_4k [--mesh single] [--moe-dispatch scatter]
+"""
+from __future__ import annotations
+
+import argparse
+import re
+from collections import defaultdict
+
+from repro.utils.hlo import (_CALL_ATTR_RE, _TRIP_RE, _shape_bytes,
+                             _shape_dims, analyze_hlo, parse_hlo)
+
+
+def top_dots(text: str, k: int = 15):
+    """(flops, count, result_type, lhs_type) for the k largest dot groups."""
+    comps = parse_hlo(text)
+    entry = next((c for c in comps if "main" in c), None)
+    mult = defaultdict(float)
+
+    def visit(cname, m):
+        if cname not in comps or m == 0:
+            return
+        mult[cname] += m
+        for op in comps[cname].ops.values():
+            trip = 1.0
+            if op.opcode == "while":
+                mt = _TRIP_RE.search(op.line)
+                trip = float(mt.group(1)) if mt else 1.0
+            for attr, callee in _CALL_ATTR_RE.findall(op.line):
+                if callee in comps:
+                    visit(callee, m * trip if op.opcode == "while"
+                          and attr in ("body", "condition") else m)
+
+    if entry:
+        visit(entry, 1.0)
+    groups = defaultdict(lambda: [0.0, 0.0])          # sig -> [flops, count]
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if not m:
+            continue
+        shapes = dict(comp.params)
+        for op in comp.ops.values():
+            shapes[op.name] = op.type_str
+        for op in comp.ops.values():
+            if op.opcode != "dot":
+                continue
+            res = _shape_dims(op.type_str)
+            lhs = shapes.get(op.operands[0]) if op.operands else None
+            lhs_dims = _shape_dims(lhs) if lhs else None
+            mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+            if not (res and lhs_dims and mc):
+                continue
+            kdim = 1
+            for ci in (int(x) for x in mc.group(1).split(",") if x):
+                if ci < len(lhs_dims[1]):
+                    kdim *= lhs_dims[1][ci]
+            numel = 1
+            for d in res[1]:
+                numel *= d
+            sig = f"{lhs} . ? -> {op.type_str}"
+            groups[sig][0] += 2.0 * numel * kdim * m
+            groups[sig][1] += m
+    rows = sorted(((f, c, sig) for sig, (f, c) in groups.items()), reverse=True)
+    return rows[:k]
+
+
+def report(compiled, devices: int, k: int = 15) -> str:
+    text = compiled.as_text()
+    an = analyze_hlo(text, devices)
+    lines = [f"per-device: flops={an.flops:.3e} hbm={an.hbm_bytes:.3e}B "
+             f"wire={an.collective_wire_bytes:.3e}B"]
+    lines.append("\n--- collectives (aggregated wire bytes) ---")
+    agg = defaultdict(lambda: [0.0, 0.0])
+    for c in an.collectives:
+        key = (c.kind, c.bytes_per_call, c.group_size)
+        agg[key][0] += c.wire_bytes_per_call * c.count
+        agg[key][1] += c.count
+    for (kind, b, n), (wire, cnt) in sorted(agg.items(),
+                                            key=lambda kv: -kv[1][0])[:k]:
+        lines.append(f"{kind:20s} {b/2**20:10.1f}MiB/call x{cnt:6.0f} "
+                     f"(groups of {n}) wire={wire/2**30:8.2f}GiB")
+    lines.append("\n--- top dots (per-device flops) ---")
+    for f, cnt, sig in top_dots(text, k):
+        lines.append(f"{f:.3e} flops x{cnt:6.0f}  {sig[:110]}")
+    lines.append("\n--- top HBM traffic ops ---")
+    for b, comp, opcode, shape in an.top_traffic[:k]:
+        lines.append(f"{b/2**30:8.2f}GiB {opcode:18s} {shape[:70]}")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--moe-dispatch", default="scatter")
+    ap.add_argument("--top", type=int, default=15)
+    args = ap.parse_args()
+
+    import jax
+    from repro.launch.cells import build_cell
+    from repro.launch.mesh import make_production_mesh
+
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    if args.arch == "dvnr":
+        from repro.core.dryrun_cells import build_render_cell, build_train_cell
+        build = build_train_cell if args.shape == "train" else build_render_cell
+        fn, cargs, _ = build(mesh)
+        with mesh:
+            compiled = (fn if hasattr(fn, "lower") else jax.jit(fn)) \
+                .lower(*cargs).compile()
+    else:
+        cell = build_cell(args.arch, args.shape, mesh,
+                          moe_dispatch=args.moe_dispatch)
+        with mesh:
+            compiled = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                               out_shardings=cell.out_shardings,
+                               donate_argnums=cell.donate_argnums) \
+                .lower(*cell.args).compile()
+    print(report(compiled, mesh.size, args.top))
+
+
+if __name__ == "__main__":
+    import os
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    main()

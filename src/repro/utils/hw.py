@@ -1,0 +1,10 @@
+"""TPU v5e hardware constants used by the roofline analysis.
+
+``collective term`` divides per-chip wire bytes by a SINGLE ICI link's bandwidth
+(conservative: ring collectives on one mesh axis keep one link pair busy; a
+bidirectional ring would halve the term).
+"""
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s per chip
+HBM_BW = 819e9                # B/s per chip
+ICI_BW = 50e9                 # B/s per link
+CHIP_HBM_BYTES = 16 * 2**30   # v5e: 16 GiB

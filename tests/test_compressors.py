@@ -1,0 +1,112 @@
+"""Compressor stack: error-bound properties (hypothesis), round-trips, ratios,
+and the paper's III-D model-compression pipeline."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compress import (
+    blockt_decode, blockt_encode, compress_model, decompress_model,
+    interp_decode, interp_encode, quant_decode, quant_encode,
+    zstd_decode, zstd_encode,
+)
+from repro.compress.kmeans import kmeans_decode, kmeans_encode
+from repro.configs import dvnr as dvnr_cfg
+from repro.core.inr import init_inr, inr_apply
+from repro.data.volume import make_partition
+
+
+# --------------------------------------------------------------------------- #
+# hypothesis: the error-bound invariant, the system's core compression contract
+# --------------------------------------------------------------------------- #
+@st.composite
+def _arrays3d(draw):
+    nx = draw(st.integers(3, 12))
+    ny = draw(st.integers(3, 12))
+    nz = draw(st.integers(3, 12))
+    seed = draw(st.integers(0, 2**31 - 1))
+    scale = draw(st.floats(1e-3, 1e3))
+    rng = np.random.default_rng(seed)
+    return (scale * rng.standard_normal((nx, ny, nz))).astype(np.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(_arrays3d(), st.floats(1e-4, 1.0))
+def test_interp_error_bound(x, tol):
+    rec = interp_decode(interp_encode(x, tol))
+    assert rec.shape == x.shape
+    slack = tol * 1e-5 + float(np.abs(x).max()) * 2e-7   # f32 output representation
+    assert float(np.abs(rec - x).max()) <= tol + slack
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 500), st.integers(0, 2**31 - 1), st.floats(1e-4, 1.0))
+def test_blockt_error_bound(n, seed, tol):
+    x = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+    rec = blockt_decode(blockt_encode(x, tol))
+    assert rec.shape == x.shape
+    slack = tol * 1e-5 + float(np.abs(x).max()) * 2e-7
+    assert float(np.abs(rec - x).max()) <= tol + slack
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 300), st.integers(0, 2**31 - 1), st.floats(1e-4, 1.0))
+def test_quant_error_bound(n, seed, tol):
+    x = np.random.default_rng(seed).standard_normal(n).astype(np.float32)
+    rec = quant_decode(quant_encode(x, tol))
+    slack = tol * 1e-5 + float(np.abs(x).max()) * 2e-7
+    assert float(np.abs(rec - x).max()) <= tol + slack
+
+
+def test_zstd_lossless_roundtrip():
+    x = np.random.default_rng(0).standard_normal((17, 9, 5)).astype(np.float32)
+    rec = zstd_decode(zstd_encode(x))
+    np.testing.assert_array_equal(rec, x)
+
+
+def test_lossy_codecs_beat_lossless_on_volume_data():
+    """Paper II-A/V-B ordering: error-bounded lossy codecs achieve far higher
+    ratios than lossless zstd on floating-point volume data."""
+    part = make_partition("cloverleaf", 0, (1, 1, 1), (48, 48, 48))
+    x = np.asarray(part.normalized())
+    tol = 1e-3
+    b_interp = len(interp_encode(x, tol))
+    b_quant = len(quant_encode(x, tol))
+    b_zstd = len(zstd_encode(x))
+    raw = x.size * 4
+    assert raw / b_interp > 20.0, f"interp CR too low: {raw / b_interp:.2f}"
+    assert raw / b_quant > 20.0
+    assert min(b_interp, b_quant) * 3 < b_zstd, (b_interp, b_quant, b_zstd)
+
+
+def test_model_compression_roundtrip_and_ratio():
+    """Paper III-D: 2-4.5x model CR with small accuracy loss."""
+    cfg = dvnr_cfg.SMOKE.replace(n_levels=3, log2_hashmap_size=9,
+                                 base_resolution=4)
+    params = init_inr(cfg, jax.random.PRNGKey(0))
+    blob, info = compress_model(cfg, params, r_enc=0.02, r_mlp=0.01)
+    assert info["model_cr"] > 1.5, info
+    rec = decompress_model(cfg, blob)
+    assert np.abs(np.asarray(rec["tables"]) - np.asarray(params["tables"])).max() \
+        <= 0.02 * (1 + 1e-5)
+    for a, b in zip(rec["mlp"], params["mlp"]):
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() <= 0.01 * (1 + 1e-5)
+    # the reconstructed INR evaluates close to the original
+    coords = jax.random.uniform(jax.random.PRNGKey(1), (256, 3))
+    v0 = np.asarray(inr_apply(cfg, params, coords))
+    v1 = np.asarray(inr_apply(cfg, rec, coords))
+    assert np.abs(v0 - v1).mean() < 0.05
+
+
+def test_kmeans_quantization_roundtrip():
+    rng = np.random.default_rng(0)
+    arrays = {"w0": rng.standard_normal((64, 16)).astype(np.float32),
+              "w1": rng.standard_normal((256,)).astype(np.float32)}
+    blob = kmeans_encode(arrays, bits=6, iters=8)
+    rec = kmeans_decode(blob)
+    for k in arrays:
+        assert rec[k].shape == arrays[k].shape
+        # 6-bit quantization error is bounded by cluster spread, not exact
+        assert np.abs(rec[k] - arrays[k]).mean() < 0.2
+    raw = sum(a.size * 2 for a in arrays.values())   # vs f16
+    assert raw / len(blob) > 1.5

@@ -1,0 +1,52 @@
+"""The paper's central systems claim: DVNR training requires NO inter-process
+communication. We compile the distributed (shard_map) train step on 8 fake
+devices in a subprocess and assert the post-SPMD HLO contains zero collectives.
+"""
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import re
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import Mesh, AxisType
+    from repro.configs import dvnr as dvnr_cfg
+    from repro.core.trainer import DVNRTrainer
+    from repro.data.volume import make_partition
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"),
+                axis_types=(AxisType.Auto,) * 2)
+    cfg = dvnr_cfg.SMOKE.replace(batch_size=256)
+    P = 8
+    parts = [make_partition("s3d", p, (2, 2, 2), (8, 8, 8)) for p in range(P)]
+    vols = jnp.stack([p.normalized() for p in parts])
+    tr = DVNRTrainer(cfg, n_partitions=P, mesh=mesh)
+    state = tr.init(jax.random.PRNGKey(0))
+    keys = jax.vmap(lambda p: jax.random.fold_in(jax.random.PRNGKey(1), p))(jnp.arange(P))
+    lowered = tr._step_fn.lower(state.params, state.opt, vols, keys,
+                                state.active, state.loss_ma)
+    hlo = lowered.compile().as_text()
+    colls = re.findall(r"\\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                       r"collective-permute)\\b", hlo)
+    print("COLLECTIVES:", len(colls))
+    # also verify it actually runs and decreases loss on all 8 devices
+    for i in range(20):
+        out = tr._step_fn(state.params, state.opt, vols, keys, state.active,
+                          state.loss_ma)
+        state.params, state.opt = out[0], out[1]
+    print("LOSS:", float(out[2].mean()))
+""")
+
+
+def test_distributed_train_step_has_no_collectives():
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, timeout=420)
+    assert r.returncode == 0, r.stdout + r.stderr
+    lines = dict(l.split(": ") for l in r.stdout.strip().splitlines()
+                 if ": " in l)
+    assert int(lines["COLLECTIVES"]) == 0, r.stdout
+    assert float(lines["LOSS"]) < 0.5

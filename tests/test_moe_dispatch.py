@@ -1,0 +1,117 @@
+"""MoE dispatch variants and sequence-parallel attention: numerical
+equivalence of the optimized paths against the reference semantics
+(EXPERIMENTS.md §Perf iterations A1/A2/B1)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.models.moe import (init_moe, moe_block_scatter,
+                              moe_block_scatter_global, moe_block_tp)
+
+
+def _cfg(capacity=8.0):
+    cfg = get_smoke_config("grok_1_314b")
+    return cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                               capacity_factor=capacity))
+
+
+def test_grouped_scatter_equals_global_when_capacity_nonbinding():
+    cfg = _cfg()
+    p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+    y1, a1 = moe_block_scatter(cfg, p, x)
+    y2, a2 = moe_block_scatter_global(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    assert abs(float(a1 - a2)) < 1e-6
+
+    g1 = jax.grad(lambda pp: moe_block_scatter(cfg, pp, x)[0].sum())(p)
+    g2 = jax.grad(lambda pp: moe_block_scatter_global(cfg, pp, x)[0].sum())(p)
+    for k in g1:
+        np.testing.assert_allclose(np.asarray(g1[k]), np.asarray(g2[k]),
+                                   atol=1e-4)
+
+
+_MESH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, AxisType
+from repro.configs import get_smoke_config
+from repro.models.moe import init_moe, moe_block_scatter, moe_block_tp
+from repro.models.attention import sdpa
+from repro.parallel.sharding import Sharder
+
+cfg = get_smoke_config("grok_1_314b")
+cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"),
+            axis_types=(AxisType.Auto,) * 2)
+sharder = Sharder(mesh, 4)
+p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+
+with mesh:
+    y1, _ = jax.jit(lambda pp, xx: moe_block_tp(cfg, pp, xx, sharder))(p, x)
+y2, _ = moe_block_scatter(cfg, p, x)
+assert float(jnp.abs(y1 - y2).max()) < 1e-5, "tp fwd mismatch"
+
+def l1(pp):
+    with mesh:
+        return moe_block_tp(cfg, pp, x, sharder)[0].sum()
+g1 = jax.jit(jax.grad(l1))(p)
+g2 = jax.grad(lambda pp: moe_block_scatter(cfg, pp, x)[0].sum())(p)
+for k in g1:
+    d = float(jnp.abs(jnp.asarray(g1[k]) - jnp.asarray(g2[k])).max())
+    assert d < 2e-4, (k, d)
+
+# a2a expert-parallel dispatch (arctic-style EP): fwd + grads vs scatter
+from repro.models.moe import moe_block_a2a
+cfg_ep = get_smoke_config("arctic_480b")
+cfg_ep = cfg_ep.replace(moe=dataclasses.replace(cfg_ep.moe,
+                                                capacity_factor=16.0))
+p_ep = init_moe(jax.random.PRNGKey(2), cfg_ep, jnp.float32)
+x_ep = jax.random.normal(jax.random.PRNGKey(3), (4, 16, cfg_ep.d_model))
+with mesh:
+    ya, _ = jax.jit(lambda pp, xx: moe_block_a2a(cfg_ep, pp, xx, sharder))(p_ep, x_ep)
+yb, _ = moe_block_scatter(cfg_ep, p_ep, x_ep)
+assert float(jnp.abs(ya - yb).max()) < 1e-5, \
+    f"a2a fwd mismatch {float(jnp.abs(ya-yb).max())}"
+
+def la(pp):
+    with mesh:
+        return moe_block_a2a(cfg_ep, pp, x_ep, sharder)[0].sum()
+ga = jax.jit(jax.grad(la))(p_ep)
+gb = jax.grad(lambda pp: moe_block_scatter(cfg_ep, pp, x_ep)[0].sum())(p_ep)
+for k in ga:
+    d = float(jnp.abs(jnp.asarray(ga[k]) - jnp.asarray(gb[k])).max())
+    assert d < 2e-4, ("a2a grad", k, d)
+
+# seq-parallel attention: 3 heads % 2-way model axis != 0 -> seq path
+B, S, Hq, Hkv, dh = 2, 32, 3, 3, 16
+key = jax.random.PRNGKey(0)
+q = jax.random.normal(key, (B, S, Hq, dh))
+k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, Hkv, dh))
+v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, Hkv, dh))
+ref = sdpa(q, k, v, causal=True)
+with mesh:
+    out = jax.jit(lambda q, k, v: sdpa(q, k, v, causal=True,
+                                       sharder=sharder))(q, k, v)
+assert float(jnp.abs(out - ref).max()) < 1e-5, "seq-parallel sdpa mismatch"
+print("MESH_EQUIV_OK")
+"""
+
+
+def test_tp_moe_and_seq_attention_on_mesh():
+    """moe_block_tp + seq-parallel sdpa vs reference, on 4 fake devices."""
+    import subprocess
+    import sys
+
+    r = subprocess.run([sys.executable, "-c", _MESH_SCRIPT],
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "MESH_EQUIV_OK" in r.stdout

@@ -1,0 +1,155 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.dvnr import DVNRConfig
+from repro.core.render import over
+from repro.core.sampling import training_coords
+from repro.core.trainer import adaptive_config, train_iterations
+from repro.data.volume import sample_trilinear
+from repro.reactive import Runtime
+
+
+# --------------------------------------------------------------------------- #
+# Adaptive parameters (paper §III-B)
+# --------------------------------------------------------------------------- #
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 2**28), st.integers(1, 2**28))
+def test_adaptive_table_invariants(nvox_local, nvox_global):
+    cfg = DVNRConfig(log2_hashmap_size=14, t_min_log2=6)
+    out = adaptive_config(cfg, nvox_local, max(nvox_local, nvox_global))
+    t = out.table_size
+    assert t >= 1 << cfg.t_min_log2                      # T_min floor
+    assert t & (t - 1) == 0                              # power of two
+    assert t <= 2 * cfg.table_size                       # never above ~T_ref
+    assert out.resolved_base_resolution >= 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 2**24), st.integers(1, 6))
+def test_adaptive_table_monotone_in_local_share(nvox, k):
+    cfg = DVNRConfig(log2_hashmap_size=14, t_min_log2=4)
+    big = adaptive_config(cfg, nvox, nvox)
+    small = adaptive_config(cfg, max(nvox // (2 ** k), 1), nvox)
+    assert small.table_size <= big.table_size
+    assert small.resolved_base_resolution <= big.resolved_base_resolution
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 2**24), st.integers(1, 64), st.integers(64, 65536),
+       st.integers(0, 4096))
+def test_train_iterations_properties(nvox, epochs, batch, n_min):
+    cfg = DVNRConfig(epochs=epochs, batch_size=batch, n_train_min=n_min)
+    n = train_iterations(cfg, nvox)
+    assert n >= n_min
+    assert n >= epochs                                   # >= 1 pass-equivalent
+    # enough samples for ~epochs passes over the volume
+    assert n * batch >= nvox * epochs
+
+
+# --------------------------------------------------------------------------- #
+# Boundary sampling (paper §III-C)
+# --------------------------------------------------------------------------- #
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1),
+       st.floats(0.0, 0.9), st.floats(1e-4, 0.05))
+def test_training_coords_in_unit_cube_and_count(seed, lam, sigma):
+    n = 512
+    c = training_coords(jax.random.PRNGKey(seed), n, lam, sigma)
+    assert c.shape == (n, 3)                             # cost independent of lam
+    arr = np.asarray(c)
+    assert arr.min() >= 0.0 and arr.max() <= 1.0
+
+
+def test_boundary_samples_concentrate_at_faces():
+    c = np.asarray(training_coords(jax.random.PRNGKey(0), 4096, 0.5, 0.005))
+    # with lambda=0.5, ~half the samples sit within ~3 sigma of some face
+    near = (np.minimum(c, 1 - c) < 0.02).any(axis=1).mean()
+    assert near > 0.4
+
+
+# --------------------------------------------------------------------------- #
+# Trilinear sampling
+# --------------------------------------------------------------------------- #
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_trilinear_exact_at_cell_centers(seed):
+    rng = np.random.default_rng(seed)
+    g = 1
+    n = 6
+    data = jnp.asarray(rng.standard_normal((n + 2 * g,) * 3), jnp.float32)
+    ii = rng.integers(0, n, (32, 3))
+    coords = jnp.asarray((ii + 0.5) / n, jnp.float32)
+    vals = sample_trilinear(data, coords, g)
+    ref = np.asarray(data)[ii[:, 0] + g, ii[:, 1] + g, ii[:, 2] + g]
+    np.testing.assert_allclose(np.asarray(vals), ref, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_trilinear_within_data_range(seed):
+    rng = np.random.default_rng(seed)
+    data = jnp.asarray(rng.uniform(0, 1, (8, 8, 8)), jnp.float32)
+    coords = jnp.asarray(rng.uniform(0, 1, (64, 3)), jnp.float32)
+    vals = np.asarray(sample_trilinear(data, coords, 1))
+    assert vals.min() >= float(data.min()) - 1e-6
+    assert vals.max() <= float(data.max()) + 1e-6
+
+
+# --------------------------------------------------------------------------- #
+# Over operator
+# --------------------------------------------------------------------------- #
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_over_operator_associative_and_bounded(seed):
+    rng = np.random.default_rng(seed)
+
+    def rgba():
+        a = rng.uniform(0, 1, (8, 1)).astype(np.float32)
+        rgb = rng.uniform(0, 1, (8, 3)).astype(np.float32) * a  # premultiplied
+        return jnp.asarray(np.concatenate([rgb, a], -1))
+
+    A, B, C = rgba(), rgba(), rgba()
+    left = over(over(A, B), C)
+    right = over(A, over(B, C))
+    np.testing.assert_allclose(np.asarray(left), np.asarray(right), atol=1e-5)
+    assert float(left[..., 3].max()) <= 1.0 + 1e-5
+    # transparent front is the identity
+    zero = jnp.zeros_like(A)
+    np.testing.assert_allclose(np.asarray(over(zero, A)), np.asarray(A),
+                               atol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# Reactive runtime
+# --------------------------------------------------------------------------- #
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-5, 5), min_size=1, max_size=30),
+       st.integers(1, 5))
+def test_reactive_window_and_trigger_invariants(feed, k):
+    rt = Runtime()
+    s = rt.source("x")
+    w = s.window(k)
+    w.live = True
+    trig = rt.trigger("pos", s.map(lambda v: v > 0))
+    for v in feed:
+        rt.advance({"x": v})
+    assert w.values() == feed[-k:]                       # bounded history
+    # rising edges of the boolean stream
+    bools = [v > 0 for v in feed]
+    rising = sum(1 for i, b in enumerate(bools)
+                 if b and (i == 0 or not bools[i - 1]))
+    assert len(trig.fired_at) == rising
+
+
+def test_ssim2d_identity_and_degradation():
+    from repro.core.metrics import ssim2d
+    rng = np.random.default_rng(0)
+    img = jnp.asarray(rng.uniform(0, 1, (32, 32, 3)), jnp.float32)
+    assert float(ssim2d(img, img)) > 0.999
+    noisy = jnp.clip(img + 0.3 * jnp.asarray(
+        rng.standard_normal((32, 32, 3)), jnp.float32), 0, 1)
+    assert float(ssim2d(img, noisy)) < 0.8

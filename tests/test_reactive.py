@@ -1,0 +1,86 @@
+"""Reactive runtime (DIVA-like): laziness, triggers, sliding windows, and the
+DVNR constructor node's referential transparency (paper §IV-A/B)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.dvnr import SMOKE
+from repro.data.volume import make_partition
+from repro.reactive import Runtime, dvnr_node
+
+
+def _parts(t=0.1, n=2):
+    return [make_partition("cloverleaf", p, (1, 1, 2), (8, 8, 8), t)
+            for p in range(n)]
+
+
+def test_lazy_evaluation_only_on_demand():
+    rt = Runtime()
+    s = rt.source("x")
+    heavy = s.map(lambda v: v * 10, name="heavy")
+    for v in range(5):
+        rt.advance({"x": v})
+    assert heavy.evaluations == 0          # never pulled, never computed
+    assert heavy.value() == 40
+    assert heavy.evaluations == 1
+    assert heavy.value() == 40             # memoized within the tick
+    assert heavy.evaluations == 1
+
+
+def test_trigger_rising_edge_and_actions():
+    rt = Runtime()
+    s = rt.source("x")
+    trig = rt.trigger("hot", s.map(lambda v: v > 2))
+    seen = []
+    trig.on_fire(lambda tick: seen.append(tick))
+    for v in [0, 3, 4, 1, 5]:
+        rt.advance({"x": v})
+    assert trig.fired_at == [1, 4]          # rising edges only
+    assert seen == [1, 4]
+
+
+def test_sliding_window_eviction_and_laziness():
+    rt = Runtime()
+    s = rt.source("x")
+    w = s.window(3)
+    for v in range(3):
+        rt.advance({"x": v})
+    assert w.values() == []                 # was not live during those ticks
+    for v in range(3, 8):
+        rt.advance({"x": v})
+    assert w.values() == [5, 6, 7]          # bounded, oldest evicted
+
+
+def test_dvnr_node_lazy_and_weight_cached():
+    cfg = SMOKE.replace(epochs=1, n_train_min=2, batch_size=128)
+    rt = Runtime()
+    src = rt.source("field")
+    node = dvnr_node(rt, src, cfg, field_name="field", n_partitions=2,
+                     compress=True)
+    rt.advance({"field": _parts(0.1)})
+    assert node.evaluations == 0            # lazy: no trigger pulled it
+    val = node.value()
+    assert node.evaluations == 1
+    assert val.params["tables"].shape[0] == 2
+    assert val.compressed is not None and val.bytes > 0
+    assert len(val.parts_meta) == 2
+    # next tick trains again (warm-started) when pulled
+    rt.advance({"field": _parts(0.2)})
+    val2 = node.value()
+    assert node.evaluations == 2
+    assert val2.steps >= 2
+
+
+def test_dvnr_window_holds_models_not_grids():
+    cfg = SMOKE.replace(epochs=1, n_train_min=2, batch_size=128)
+    rt = Runtime()
+    src = rt.source("field")
+    node = dvnr_node(rt, src, cfg, field_name="field", n_partitions=2)
+    w = node.window(2)
+    w.live = True
+    for i in range(4):
+        rt.advance({"field": _parts(0.1 * i)})
+    vals = w.values()
+    assert len(vals) == 2
+    raw_bytes = 2 * 10 * 10 * 10 * 4        # two 8^3+ghost partitions
+    assert w.total_bytes < raw_bytes * 4    # compressed models are small
