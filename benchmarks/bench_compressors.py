@@ -10,9 +10,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import (CODECS, compress_partitions, dvnr_metrics,
-                               make_volume, match_psnr, save_result,
-                               train_dvnr)
+from benchmarks.common import (CODECS, codec_for, compress_partitions,
+                               dvnr_metrics, make_volume, match_psnr,
+                               save_result, train_dvnr)
 from repro.compress.model_compress import compress_stacked
 from repro.configs.dvnr import DVNRConfig
 
@@ -47,8 +47,8 @@ def run(quick: bool = False) -> dict:
               f"(uncomp CR={m_unc['ratio']:.1f}) t={tr['train_s']:.1f}s")
 
         target = m["psnr"]
-        for name, (_, _, lossy) in CODECS.items():
-            r = (match_psnr(name, parts, target) if lossy
+        for name in CODECS:
+            r = (match_psnr(name, parts, target) if codec_for(name).lossy
                  else compress_partitions(name, parts, 0.0))
             rows.append(dict(kind=kind, codec=name, enc_s=r["enc_s"],
                              ratio=r["ratio"], psnr=r["psnr"],

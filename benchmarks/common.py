@@ -6,20 +6,17 @@ from __future__ import annotations
 import json
 import time
 from pathlib import Path
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compress.blockt import blockt_decode, blockt_encode
-from repro.compress.interp import interp_decode, interp_encode
-from repro.compress.quantizer import quant_decode, quant_encode
-from repro.compress.zstd_codec import zstd_decode, zstd_encode
+from repro import api
+from repro.compress.registry import get_codec
 from repro.configs.dvnr import DVNRConfig
-from repro.core.inr import decode_grid, param_bytes_f16
+from repro.core.inr import param_bytes_f16
 from repro.core.metrics import dssim, nrmse, psnr, psnr_from_mses, ssim3d
-from repro.core.trainer import DVNRTrainer, train_iterations
 from repro.data.volume import make_partition, partition_grid
 
 RESULTS = Path(__file__).resolve().parent.parent / "results" / "bench"
@@ -57,28 +54,27 @@ def assemble_global(parts, grid, local):
 
 def train_dvnr(cfg: DVNRConfig, parts, vols, *, steps: Optional[int] = None,
                key=None, impl: str = "ref", cached_params=None):
-    """Train, time, and evaluate one DVNR over the given partitions."""
-    P = vols.shape[0]
-    trainer = DVNRTrainer(cfg, P, impl=impl)
-    state = trainer.init(key or jax.random.PRNGKey(0), cached_params=cached_params)
-    nvox = int(np.prod(parts[0].owned_shape))
-    n_steps = steps if steps is not None else train_iterations(cfg, nvox)
-    t0 = time.time()
-    state, hist = trainer.train(state, vols, steps=n_steps,
-                                key=key or jax.random.PRNGKey(1))
-    jax.block_until_ready(state.params)
-    train_s = time.time() - t0
-    ev = trainer.evaluate(state, vols, parts[0].owned_shape)
-    return state, {"train_s": train_s, "steps": int(state.step),
+    """Train, time, and evaluate one DVNR via the ``repro.api`` facade.
+
+    Returns the trained :class:`repro.api.DVNRModel` (which exposes the
+    legacy ``.params`` stacked pytree) plus a stats dict.
+    """
+    model, info = api.train(parts, cfg, backend=impl, steps=steps,
+                            key=jax.random.PRNGKey(0) if key is None else key,
+                            cached_params=cached_params, volumes=vols)
+    ev = info["trainer"].evaluate(info["state"], vols, parts[0].owned_shape)
+    return model, {"train_s": info["train_time_s"], "steps": info["steps"],
                    "psnr": ev["psnr"], "mses": ev["mse_per_partition"]}
 
 
-def decode_stacked(cfg, state, parts, impl: str = "ref"):
-    """Decode every partition (normalized units) -> list of (nx,ny,nz)."""
+def decode_stacked(cfg, model, parts, impl: str = "ref"):
+    """Decode every partition (normalized units) -> list of (nx,ny,nz).
+    ``model``: a DVNRModel or anything with ``.params`` (legacy DVNRState)."""
+    if not isinstance(model, api.DVNRModel):
+        model = api.DVNRModel(cfg, model.params)
     outs = []
     for p in range(len(parts)):
-        params_p = jax.tree.map(lambda t: t[p], state.params)
-        dec = decode_grid(cfg, params_p, parts[p].owned_shape, impl)
+        dec = model.partition(p).decode_grid(parts[p].owned_shape, impl)
         if dec.ndim == 4:
             dec = dec[..., 0]
         outs.append(dec)
@@ -113,29 +109,34 @@ def dvnr_metrics(cfg, state, parts, *, with_ssim=True, model_blob_bytes=None):
 # Traditional compressor drivers (per-partition, like the paper's distributed
 # adaptation of ZFP/SZ3/...)
 # --------------------------------------------------------------------------- #
-CODECS: dict[str, tuple[Callable, Callable, bool]] = {
-    # name: (encode(x, tol) -> bytes, decode(bytes) -> x, lossy?)
-    "interp(SZ3-like)": (interp_encode, interp_decode, True),
-    "blockt(ZFP-like)": (blockt_encode, blockt_decode, True),
-    "quant": (quant_encode, quant_decode, True),
-    "zstd": (lambda x, tol: zstd_encode(x), lambda b: zstd_decode(b), False),
+CODECS: dict[str, str] = {
+    # benchmark label -> codec registry name
+    "interp(SZ3-like)": "interp",
+    "blockt(ZFP-like)": "blockt",
+    "quant": "quantizer",
+    "zstd": "zstd",
 }
+
+
+def codec_for(name: str):
+    """Registry codec for a benchmark label (or a raw registry name)."""
+    return get_codec(CODECS.get(name, name))
 
 
 def compress_partitions(name: str, parts, tol: float):
     """Apply one codec independently per partition (normalized values)."""
-    enc, dec, _ = CODECS[name]
+    codec = codec_for(name)
     g = parts[0].ghost
     t0 = time.time()
     blobs = []
     for p in parts:
         x = np.asarray(p.normalized())[g:-g or None, g:-g or None, g:-g or None]
-        blobs.append(enc(np.ascontiguousarray(x), tol))
+        blobs.append(codec.encode(np.ascontiguousarray(x), tol))
     enc_s = time.time() - t0
     mses, ssims = [], []
     for p, b in zip(parts, blobs):
         x = np.asarray(p.normalized())[g:-g or None, g:-g or None, g:-g or None]
-        r = np.asarray(dec(b), np.float32).reshape(x.shape)
+        r = np.asarray(codec.decode(b), np.float32).reshape(x.shape)
         mses.append(float(np.mean((x - r) ** 2)))
         ssims.append(float(ssim3d(jnp.asarray(x), jnp.asarray(r))))
     raw = sum(int(np.prod(p.owned_shape)) * 4 for p in parts)

@@ -1,24 +1,25 @@
-"""Quickstart: compress one distributed volume with DVNR and look at it.
+"""Quickstart: compress one distributed volume with DVNR and look at it —
+entirely through the unified ``repro.api`` facade.
 
 Five minutes on a laptop CPU:
   1. generate a 2-partition synthetic volume (each partition has ghost cells),
   2. train one INR per partition — zero communication between them,
   3. report PSNR / compression ratio (with model compression),
   4. render the distributed representation (sort-last compositing),
-  5. decode back to a grid (the legacy-tools compatibility path).
+  5. decode back to a grid (the legacy-tools compatibility path),
+  6. save / reload the model.
 
   PYTHONPATH=src python examples/quickstart.py
 """
+import tempfile
+from pathlib import Path
+
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.compress.model_compress import compress_model, decompress_model
+from repro import api
 from repro.configs.dvnr import DVNRConfig
-from repro.core.inr import decode_grid, param_bytes_f16
 from repro.core.metrics import psnr
-from repro.core.render import Camera, render_distributed
-from repro.core.trainer import DVNRTrainer, train_iterations
 from repro.data.volume import make_partition
 
 
@@ -27,51 +28,48 @@ def main():
     grid, local = (1, 1, 2), (24, 24, 24)
     parts = [make_partition("cloverleaf", r, grid, local, t=0.35)
              for r in range(2)]
-    vols = jnp.stack([p.normalized() for p in parts])
-    print(f"volume: 2 partitions x {local} (+ghosts), "
-          f"{vols.nbytes} bytes raw")
+    raw = 2 * int(np.prod(local)) * 4
+    print(f"volume: 2 partitions x {local} (+ghosts), {raw} bytes raw; "
+          f"backend={api.get_backend('auto').name}")
 
     # -- 2. train (paper III-A/B/C: per-rank INR, boundary loss, adaptive) --
     cfg = DVNRConfig(n_levels=3, n_features_per_level=4, log2_hashmap_size=9,
                      base_resolution=8, n_neurons=16, n_hidden_layers=2,
                      epochs=10, batch_size=4096, n_train_min=200,
                      boundary_lambda=0.15, boundary_sigma=0.005)
-    trainer = DVNRTrainer(cfg, n_partitions=2)
-    state = trainer.init(jax.random.PRNGKey(0))
-    steps = train_iterations(cfg, int(np.prod(local)))
-    state, _ = trainer.train(state, vols, steps=steps, key=jax.random.PRNGKey(1))
-    ev = trainer.evaluate(state, vols, local)
-    print(f"trained {steps} steps -> PSNR {ev['psnr']:.1f} dB")
+    model, info = api.train(parts, cfg, backend="auto",
+                            key=jax.random.PRNGKey(0))
+    print(f"trained {info['steps']} steps in {info['train_time_s']:.1f}s "
+          f"({model.n_partitions} partitions, "
+          f"{model.param_count} params, {model.nbytes} bytes)")
 
     # -- 3. model compression (paper III-D) --------------------------------
-    blobs = []
-    for p in range(2):
-        one = jax.tree.map(lambda t: t[p], state.params)
-        blob, rep = compress_model(cfg, one)
-        blobs.append(blob)
-    raw = 2 * int(np.prod(local)) * 4
-    f16 = 2 * param_bytes_f16(cfg)
-    comp = sum(len(b) for b in blobs)
+    blobs, cinfo = api.compress(model)
+    f16 = cinfo["f16_bytes"]
     print(f"compression ratio: {raw/f16:.1f}x (model f16) -> "
-          f"{raw/comp:.1f}x (with model compression)")
+          f"{raw/cinfo['bytes']:.1f}x (with model compression)")
 
     # -- 4. render the DVNR directly (paper IV-C) ---------------------------
-    meta = [{"origin": p.origin, "extent": p.extent,
-             "vmin": p.vmin, "vmax": p.vmax} for p in parts]
-    grange = (min(p.vmin for p in parts), max(p.vmax for p in parts))
-    img = render_distributed(cfg, state.params, meta,
-                             Camera(eye=(1.8, 1.4, 1.6)), 64, 64, grange,
-                             n_samples=48)
+    img = api.render(model, eye=(1.8, 1.4, 1.6), width=64, height=64,
+                     n_samples=48)
     print(f"rendered {img.shape} frame, mean alpha "
           f"{float(img[..., 3].mean()):.3f}")
 
     # -- 5. decode one partition back to a grid -----------------------------
-    rec = decompress_model(cfg, blobs[0])
-    dec = decode_grid(cfg, rec, local)
+    rec = api.decompress(cfg, blobs, parts_meta=parts)
+    dec = rec.partition(0).decode_grid(local)
     g = parts[0].ghost
     ref = parts[0].normalized()[g:-g, g:-g, g:-g]
     print(f"decoded grid {dec.shape}, PSNR vs reference "
           f"{float(psnr(dec[..., 0] if dec.ndim == 4 else dec, ref)):.1f} dB")
+
+    # -- 6. save / reload ---------------------------------------------------
+    with tempfile.TemporaryDirectory() as d:
+        path = Path(d) / "dvnr_model.msgpack"
+        model.save(path)
+        loaded = api.load(path)
+        print(f"saved+reloaded model: {path.stat().st_size} bytes on disk, "
+              f"{loaded.n_partitions} partitions")
     print("done.")
 
 

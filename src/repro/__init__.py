@@ -3,8 +3,13 @@
 Implements Wu et al., "Distributed Neural Representation for Reactive in situ
 Visualization" (2023) as a production-grade, multi-pod JAX framework:
 
+- ``repro.api``       THE entry point: ``DVNRModel`` + train/compress/render/
+                      isosurface/pathlines lifecycle verbs
+- ``repro.backends``  backend registry (ref / fused / pallas / pallas_tpu +
+                      ``auto`` hardware resolution); all kernel dispatch
 - ``repro.core``      the paper's contribution (DVNR) as composable JAX modules
-- ``repro.compress``  error-bounded compressors (SZ3-like / ZFP-like / zstd / kmeans)
+- ``repro.compress``  error-bounded compressors (SZ3-like / ZFP-like / zstd /
+                      kmeans) behind a named codec registry (``get_codec``)
 - ``repro.reactive``  DIVA-like lazy reactive dataflow for in situ triggers
 - ``repro.insitu``    Ascent-like integration: simulations, actions, sessions
 - ``repro.models``    LM architecture zoo (dense / MoE / SSM / hybrid / enc-dec / VLM)

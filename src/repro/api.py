@@ -1,0 +1,415 @@
+"""repro.api — the single entry point for the DVNR lifecycle.
+
+The paper's pipeline (per-partition INR training -> error-bounded weight
+compression -> decode/render for reactive triggers) used to be spread across
+free functions that each re-threaded an ``impl: str`` flag and raw
+``{"tables": ..., "mlp": [...]}`` dicts. This module bundles it:
+
+- :class:`DVNRModel` — a pytree-registered dataclass carrying the
+  :class:`~repro.configs.dvnr.DVNRConfig`, the (possibly partition-stacked)
+  params, per-partition metadata and the global value range, with
+  ``apply`` / ``decode_grid`` / ``compress`` / ``save`` / ``load`` methods;
+- lifecycle verbs — :func:`train`, :func:`render`, :func:`isosurface`,
+  :func:`trace_pathlines`, :func:`compress` / :func:`decompress`;
+- re-exports of the backend registry (:func:`get_backend`,
+  :func:`available_backends`) and codec registry (:func:`get_codec`,
+  :func:`available_codecs`), so callers never import kernel packages directly.
+
+Quickstart (CPU)::
+
+    from repro import api
+    from repro.configs.dvnr import SMOKE
+    from repro.data.volume import make_partition
+
+    parts = [make_partition("cloverleaf", p, (1, 1, 2), (16, 16, 16), t=0.3)
+             for p in range(2)]
+    model, info = api.train(parts, SMOKE, key=jax.random.PRNGKey(0))
+    image = api.render(model, width=64, height=64)
+    blobs, cinfo = api.compress(model)
+    model.save("dvnr.msgpack")
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+from repro import backends
+from repro.backends import (Backend, BackendLike, available_backends,
+                            get_backend, register_backend)
+from repro.compress.model_compress import (compress_stacked,
+                                           decompress_model)
+from repro.compress.registry import available_codecs, get_codec, register_codec
+from repro.configs.dvnr import DVNRConfig
+from repro.core.inr import (_decode_grid, _inr_apply, init_inr,
+                            param_bytes_f16, param_count)
+from repro.core.trainer import DVNRState, DVNRTrainer, train_iterations
+
+__all__ = [
+    "DVNRModel", "PartitionMeta",
+    "train", "render", "isosurface", "trace_pathlines",
+    "compress", "decompress", "save", "load",
+    "Backend", "get_backend", "register_backend", "available_backends",
+    "get_codec", "register_codec", "available_codecs",
+    "DVNRConfig", "DVNRTrainer",
+]
+
+_SAVE_KIND = "dvnr_model_v1"
+
+
+# --------------------------------------------------------------------------- #
+# Partition metadata
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class PartitionMeta:
+    """Host-side metadata of one partition: box placement + value range."""
+
+    origin: Tuple[float, float, float]
+    extent: Tuple[float, float, float]
+    vmin: float
+    vmax: float
+
+    def __getitem__(self, key: str):
+        # legacy call sites index partition metadata like a dict
+        return getattr(self, key)
+
+    def to_dict(self) -> dict:
+        return {"origin": list(self.origin), "extent": list(self.extent),
+                "vmin": self.vmin, "vmax": self.vmax}
+
+    @classmethod
+    def of(cls, obj) -> "PartitionMeta":
+        """Coerce a dict / VolumePartition / PartitionMeta."""
+        if isinstance(obj, PartitionMeta):
+            return obj
+        if isinstance(obj, dict):
+            return cls(tuple(obj["origin"]), tuple(obj["extent"]),
+                       float(obj["vmin"]), float(obj["vmax"]))
+        return cls(tuple(obj.origin), tuple(obj.extent),
+                   float(obj.vmin), float(obj.vmax))
+
+
+def _meta_tuple(parts_meta) -> Optional[Tuple[PartitionMeta, ...]]:
+    if parts_meta is None:
+        return None
+    return tuple(PartitionMeta.of(m) for m in parts_meta)
+
+
+def _grange_of(metas: Sequence[PartitionMeta]) -> Tuple[float, float]:
+    return (min(m.vmin for m in metas), max(m.vmax for m in metas))
+
+
+# --------------------------------------------------------------------------- #
+# DVNRModel
+# --------------------------------------------------------------------------- #
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class DVNRModel:
+    """One DVNR: config + INR params (+ distributed partition metadata).
+
+    ``params`` is either a single model pytree (``tables (L,T,F)``) or the
+    partition-stacked form (``tables (P,L,T,F)``) the trainer produces. The
+    params are pytree children (differentiable / jittable); everything else is
+    static aux data, so a ``DVNRModel`` can flow through ``jax.jit`` and
+    ``jax.grad`` like any array pytree.
+    """
+
+    cfg: DVNRConfig
+    params: Any
+    parts_meta: Optional[Tuple[PartitionMeta, ...]] = None
+    grange: Optional[Tuple[float, float]] = None
+
+    def __post_init__(self):
+        if self.parts_meta is not None:
+            self.parts_meta = _meta_tuple(self.parts_meta)
+            if self.grange is None:
+                self.grange = _grange_of(self.parts_meta)
+
+    # ------------------------------ pytree ----------------------------- #
+    def tree_flatten(self):
+        return (self.params,), (self.cfg, self.parts_meta, self.grange)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        cfg, parts_meta, grange = aux
+        obj = cls.__new__(cls)
+        obj.cfg, obj.params, obj.parts_meta, obj.grange = \
+            cfg, children[0], parts_meta, grange
+        return obj
+
+    # ----------------------------- construction ------------------------ #
+    @classmethod
+    def init(cls, cfg: DVNRConfig, key, n_partitions: Optional[int] = None,
+             parts_meta=None) -> "DVNRModel":
+        """Random-init a single model, or a stacked one for P partitions."""
+        if n_partitions is None:
+            return cls(cfg, init_inr(cfg, key), _meta_tuple(parts_meta))
+        keys = jax.random.split(key, n_partitions)
+        params = jax.vmap(lambda k: init_inr(cfg, k))(keys)
+        return cls(cfg, params, _meta_tuple(parts_meta))
+
+    @classmethod
+    def from_state(cls, cfg: DVNRConfig, state: DVNRState,
+                   parts_meta=None) -> "DVNRModel":
+        """Wrap a trainer state's stacked params."""
+        return cls(cfg, state.params, _meta_tuple(parts_meta))
+
+    @classmethod
+    def from_compressed(cls, cfg: DVNRConfig, blobs, parts_meta=None,
+                        grange=None) -> "DVNRModel":
+        """Rebuild a model from :meth:`compress` output (list of blobs, one
+        per partition; a single ``bytes`` blob is accepted too)."""
+        if isinstance(blobs, (bytes, bytearray)):
+            blobs = [bytes(blobs)]
+        parts = [decompress_model(cfg, b) for b in blobs]
+        if len(parts) == 1:
+            params = parts[0]
+        else:
+            params = jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+        return cls(cfg, params, _meta_tuple(parts_meta), grange)
+
+    # ------------------------------ structure --------------------------- #
+    @property
+    def stacked(self) -> bool:
+        return self.params["tables"].ndim == 4
+
+    @property
+    def n_partitions(self) -> int:
+        return int(self.params["tables"].shape[0]) if self.stacked else 1
+
+    def partition(self, p: int) -> "DVNRModel":
+        """Extract partition ``p`` as a single (unstacked) model."""
+        if not self.stacked:
+            if p != 0:
+                raise IndexError("model is not partition-stacked")
+            return self
+        params_p = jax.tree.map(lambda t: t[p], self.params)
+        meta = (self.parts_meta[p],) if self.parts_meta is not None else None
+        return DVNRModel(self.cfg, params_p, meta, self.grange)
+
+    def stacked_params(self) -> Any:
+        """Params with a leading partition axis (added if single)."""
+        if self.stacked:
+            return self.params
+        return jax.tree.map(lambda t: t[None], self.params)
+
+    @property
+    def param_count(self) -> int:
+        return self.n_partitions * param_count(self.cfg)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(np.asarray(t).nbytes for t in jax.tree.leaves(self.params))
+
+    # ------------------------------ inference --------------------------- #
+    def apply(self, coords, backend: BackendLike = "auto"):
+        """coords (N,3) in [0,1]^3 -> (N, out_dim). Single-partition models
+        only — use :meth:`partition` first on stacked models."""
+        if self.stacked:
+            raise ValueError("apply() on a stacked model: select a partition "
+                             "first (model.partition(p).apply(coords))")
+        return _inr_apply(self.cfg, self.params, coords,
+                          backends.resolve(backend))
+
+    def decode_grid(self, shape: Sequence[int], backend: BackendLike = "auto",
+                    chunk: int = 1 << 17):
+        """Decode back to a cell-centered grid (compatibility path)."""
+        if self.stacked:
+            raise ValueError("decode_grid() on a stacked model: select a "
+                             "partition first (model.partition(p))")
+        return _decode_grid(self.cfg, self.params, shape,
+                            backends.resolve(backend), chunk)
+
+    # ------------------------------ compression ------------------------- #
+    def compress(self, r_enc: Optional[float] = None,
+                 r_mlp: Optional[float] = None, **codec_kw) -> list:
+        """Error-bounded weight compression (paper III-D) of every partition.
+        Returns one blob per partition. Codec selection by name via
+        ``dense_codec=`` / ``hash_codec=`` / ``mlp_codec=``."""
+        blobs, _ = compress(self, r_enc=r_enc, r_mlp=r_mlp, **codec_kw)
+        return blobs
+
+    # ------------------------------ persistence ------------------------- #
+    def save(self, path) -> None:
+        """Serialize config + params + metadata to ``path`` (msgpack)."""
+        def arr(t):
+            a = np.asarray(t)
+            return {"dtype": a.dtype.str, "shape": list(a.shape),
+                    "data": a.tobytes()}
+
+        payload = {
+            "kind": _SAVE_KIND,
+            "cfg": dataclasses.asdict(self.cfg),
+            "tables": arr(self.params["tables"]),
+            "mlp": [arr(w) for w in self.params["mlp"]],
+            "parts_meta": ([m.to_dict() for m in self.parts_meta]
+                           if self.parts_meta is not None else None),
+            "grange": list(self.grange) if self.grange is not None else None,
+        }
+        with open(path, "wb") as f:
+            f.write(msgpack.packb(payload, use_bin_type=True))
+
+    @classmethod
+    def load(cls, path) -> "DVNRModel":
+        with open(path, "rb") as f:
+            try:
+                payload = msgpack.unpackb(f.read(), raw=False)
+            except Exception as e:
+                raise ValueError(f"{path}: not a saved DVNRModel ({e})") from e
+        if not isinstance(payload, dict) or payload.get("kind") != _SAVE_KIND:
+            raise ValueError(f"{path}: not a saved DVNRModel")
+
+        def arr(d):
+            return jnp.asarray(np.frombuffer(d["data"], np.dtype(d["dtype"]))
+                               .reshape(d["shape"]))
+
+        cfg = DVNRConfig(**payload["cfg"])
+        params = {"tables": arr(payload["tables"]),
+                  "mlp": [arr(w) for w in payload["mlp"]]}
+        meta = (_meta_tuple(payload["parts_meta"])
+                if payload["parts_meta"] is not None else None)
+        grange = tuple(payload["grange"]) if payload["grange"] else None
+        return cls(cfg, params, meta, grange)
+
+
+# --------------------------------------------------------------------------- #
+# Lifecycle verbs
+# --------------------------------------------------------------------------- #
+def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
+          mesh=None, steps: Optional[int] = None, key=None,
+          cached_params=None, trainer: Optional[DVNRTrainer] = None,
+          ghost: Optional[int] = None, volumes=None,
+          log_every: int = 0) -> Tuple[DVNRModel, dict]:
+    """Train one INR per partition (zero-communication) and return the model.
+
+    ``partitions``: sequence of :class:`~repro.data.volume.VolumePartition`
+    (anything with ``normalized()``, ``owned_shape``, ``origin``, ``extent``,
+    ``vmin``, ``vmax``, ``ghost``). ``steps`` defaults to the paper's III-B
+    adaptive iteration count. Pass a pre-built ``trainer`` to reuse its
+    compiled step across repeated calls (in situ ticks); pass ``volumes``
+    (a stacked (P, ...) normalized array) to train on data other than the
+    partitions' own; ``log_every`` > 0 records a loss curve in the info dict.
+    """
+    key = jax.random.PRNGKey(0) if key is None else key
+    k_init, k_train = jax.random.split(key)
+    P = len(partitions)
+    g = partitions[0].ghost if ghost is None else ghost
+    vols = jnp.stack([p.normalized() for p in partitions]) \
+        if volumes is None else volumes
+    if trainer is None:
+        trainer = DVNRTrainer(cfg, P, mesh=mesh, impl=backend, ghost=g)
+    state = trainer.init(k_init, cached_params=cached_params)
+    nvox = int(np.prod(partitions[0].owned_shape))
+    n_steps = train_iterations(cfg, nvox) if steps is None else steps
+    t0 = time.time()
+    state, hist = trainer.train(state, vols, steps=n_steps, key=k_train,
+                                log_every=log_every)
+    jax.block_until_ready(state.params)
+    train_time_s = time.time() - t0
+    metas = _meta_tuple(partitions)
+    model = DVNRModel(cfg, state.params, metas)
+    info = {"train_time_s": train_time_s, "steps": int(state.step),
+            "loss_history": hist.get("loss", []), "state": state,
+            "trainer": trainer}
+    return model, info
+
+
+def render(model: DVNRModel, *, camera=None, eye=(1.8, 1.4, 1.6),
+           width: int = 128, height: int = 128, n_samples: int = 64,
+           backend: BackendLike = "auto", tf_table=None, mesh=None):
+    """Sort-last direct volume rendering of the DVNR (never decodes a grid)."""
+    from repro.core.render import Camera, render_distributed
+
+    if model.parts_meta is None:
+        raise ValueError("render() needs model.parts_meta (train via "
+                         "repro.api.train or attach PartitionMeta)")
+    cam = camera if camera is not None else Camera(eye=eye)
+    return render_distributed(
+        model.cfg, model.stacked_params(), list(model.parts_meta), cam,
+        width, height, model.grange, mesh=mesh, n_samples=n_samples,
+        impl=backends.resolve(backend), tf_table=tf_table)
+
+
+def isosurface(model: DVNRModel, iso01: float = 0.5, *, resolution: int = 32,
+               backend: BackendLike = "auto") -> np.ndarray:
+    """Per-partition marching tets on the INR; returns world-space points.
+    ``iso01`` is in GLOBAL normalized units."""
+    from repro.core.isosurface import isosurface_from_inr, surface_points
+
+    if model.parts_meta is None:
+        raise ValueError("isosurface() needs model.parts_meta")
+    b = backends.resolve(backend)
+    gmin, gmax = model.grange
+    clouds = []
+    for p in range(model.n_partitions):
+        meta = model.parts_meta[p]
+        iso_raw = gmin + iso01 * (gmax - gmin)
+        denom = max(meta.vmax - meta.vmin, 1e-12)
+        iso_local = (iso_raw - meta.vmin) / denom
+        if not (0.0 <= iso_local <= 1.0):
+            continue                   # isosurface does not cross this partition
+        part = model.partition(p)
+        tris, valid = isosurface_from_inr(
+            model.cfg, part.params, float(iso_local),
+            shape=(resolution,) * 3, origin=meta.origin,
+            extent=meta.extent, impl=b)
+        pts = surface_points(tris, valid)
+        if len(pts):
+            clouds.append(pts)
+    if not clouds:
+        return np.zeros((0, 3), np.float32)
+    return np.concatenate(clouds, axis=0)
+
+
+def trace_pathlines(models: Sequence[DVNRModel], seeds, dt: float, *,
+                    substeps: int = 4, backend: BackendLike = "auto"):
+    """Backward pathline tracing over a temporal window of velocity DVNRs
+    (newest -> oldest). Returns trajectory (T*substeps+1, N, 3)."""
+    from repro.core.pathlines import trace_backward
+
+    if not models:
+        raise ValueError("empty model window")
+    if any(m.parts_meta is None for m in models):
+        raise ValueError("trace_pathlines() needs parts_meta on every model "
+                         "in the window (train via repro.api.train or attach "
+                         "PartitionMeta)")
+    cfg = models[0].cfg
+    window = [m.stacked_params() for m in models]
+    metas = [list(m.parts_meta) for m in models]
+    return trace_backward(cfg, window, metas, seeds, dt, substeps=substeps,
+                          impl=backends.resolve(backend))
+
+
+def compress(model: DVNRModel, *, r_enc: Optional[float] = None,
+             r_mlp: Optional[float] = None, **codec_kw) -> Tuple[list, dict]:
+    """Compress every partition; returns (blobs, info) where info aggregates
+    byte counts and the model compression ratio vs fp16 storage."""
+    pairs = compress_stacked(model.cfg, model.stacked_params(),
+                             r_enc=r_enc, r_mlp=r_mlp, **codec_kw)
+    blobs = [b for b, _ in pairs]
+    total = sum(len(b) for b in blobs)
+    f16 = model.n_partitions * param_bytes_f16(model.cfg)
+    info = {"bytes": total, "f16_bytes": f16,
+            "model_cr": f16 / max(total, 1),
+            "per_partition": [i for _, i in pairs]}
+    return blobs, info
+
+
+def decompress(cfg: DVNRConfig, blobs, *, parts_meta=None,
+               grange=None) -> DVNRModel:
+    """Inverse of :func:`compress`."""
+    return DVNRModel.from_compressed(cfg, blobs, parts_meta, grange)
+
+
+def save(model: DVNRModel, path) -> None:
+    model.save(path)
+
+
+def load(path) -> DVNRModel:
+    return DVNRModel.load(path)

@@ -1,0 +1,151 @@
+"""Backend registry: the single place kernel implementations are named.
+
+Every kernel package (``hash_encoding``, ``fused_mlp``, ``composite``,
+``flash_attention``) used to thread an ad-hoc ``impl: str`` flag and string-
+compare it locally. This module replaces that with registered ``Backend``
+objects carrying capability metadata:
+
+- ``ref``        pure-jnp oracle; runs everywhere (alias: ``xla``, the name the
+                 LM stack historically used for the same path)
+- ``fused``      jnp path with the fused corner-gather hash encoding (training
+                 fast path on CPU/GPU; other ops fall back to ``ref``)
+- ``pallas``     Pallas kernels in interpret mode (kernel debugging on CPU)
+- ``pallas_tpu`` compiled Pallas kernels (real TPU hardware)
+
+``resolve("auto")`` picks the highest-priority backend available on the
+current jax platform: ``ref`` on CPU/GPU, ``pallas_tpu`` on TPU.
+
+All dispatch helpers accept either a backend name or a ``Backend`` instance,
+so model objects and trainers can be parameterized by resolved backends and
+pass them straight through ``jit``/``custom_vjp`` static arguments (``Backend``
+is a frozen, hashable dataclass).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Tuple, Union
+
+import jax
+
+# Op names used in capability sets.
+OPS = ("hash_encoding", "fused_mlp", "composite", "flash_attention")
+
+
+@dataclass(frozen=True)
+class Backend:
+    """One kernel implementation family plus its capability metadata.
+
+    ``kind`` is the dispatch class the kernel wrappers branch on:
+    ``"jnp"`` (pure jax.numpy oracle), ``"fused"`` (jnp with fused gathers),
+    or ``"pallas"`` (Pallas kernels, interpreted or compiled).
+    """
+
+    name: str
+    kind: str                                     # "jnp" | "fused" | "pallas"
+    description: str = ""
+    interpret: bool = True                        # pallas interpret mode
+    platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
+    priority: int = 0                             # rank for `auto` resolution
+    capabilities: frozenset = field(default_factory=frozenset)
+
+    # ------------------------------------------------------------------ #
+    @property
+    def is_pallas(self) -> bool:
+        return self.kind == "pallas"
+
+    @property
+    def is_fused(self) -> bool:
+        return self.kind == "fused"
+
+    def supports(self, op: str) -> bool:
+        """Does this backend natively implement ``op``? (Ops fall back to the
+        jnp oracle when not — capability metadata, not a hard error.)"""
+        return op in self.capabilities
+
+    def available(self, platform: str | None = None) -> bool:
+        """Can this backend run on ``platform`` (default: current jax one)?"""
+        plat = platform or jax.default_backend()
+        return plat in self.platforms
+
+    def __repr__(self) -> str:  # keep jit cache keys / logs readable
+        return f"Backend({self.name!r})"
+
+
+BackendLike = Union[str, Backend]
+
+_REGISTRY: Dict[str, Backend] = {}
+_ALIASES: Dict[str, str] = {}
+
+
+def register_backend(backend: Backend, *, aliases: Tuple[str, ...] = ()) -> Backend:
+    """Register ``backend`` (and optional alias names). Re-registration under
+    the same name replaces the previous entry (tests rely on this)."""
+    _REGISTRY[backend.name] = backend
+    for a in aliases:
+        _ALIASES[a] = backend.name
+    return backend
+
+
+def available_backends(platform: str | None = None) -> Tuple[str, ...]:
+    """Names of registered backends runnable on ``platform`` (default current)."""
+    return tuple(n for n, b in _REGISTRY.items() if b.available(platform))
+
+
+def get_backend(name: BackendLike) -> Backend:
+    """Look up a backend by name (or pass a ``Backend`` through)."""
+    if isinstance(name, Backend):
+        return name
+    key = _ALIASES.get(name, name)
+    if key == "auto":
+        return resolve_auto()
+    try:
+        return _REGISTRY[key]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; registered: "
+            f"{sorted(set(_REGISTRY) | set(_ALIASES))}") from None
+
+
+def resolve_auto(platform: str | None = None) -> Backend:
+    """Highest-priority backend available on the current (or given) platform."""
+    cands = [b for b in _REGISTRY.values() if b.available(platform)]
+    if not cands:
+        raise RuntimeError("no backend available for platform "
+                           f"{platform or jax.default_backend()!r}")
+    return max(cands, key=lambda b: b.priority)
+
+
+def resolve(impl: BackendLike = "auto") -> Backend:
+    """The one dispatch entry point: name/alias/"auto"/Backend -> Backend."""
+    return get_backend(impl)
+
+
+# --------------------------------------------------------------------------- #
+# Built-in backends
+# --------------------------------------------------------------------------- #
+_ALL_OPS = frozenset(OPS)
+
+register_backend(Backend(
+    name="ref", kind="jnp",
+    description="pure-jnp oracle kernels (XLA-compiled); runs everywhere",
+    priority=10, capabilities=_ALL_OPS,
+), aliases=("xla",))
+
+register_backend(Backend(
+    name="fused", kind="fused",
+    description="jnp with fused corner-gather hash encoding (training fast "
+                "path); ops without a fused variant fall back to ref",
+    priority=5, capabilities=frozenset({"hash_encoding"}),
+))
+
+register_backend(Backend(
+    name="pallas", kind="pallas", interpret=True,
+    description="Pallas kernels in interpret mode (CPU kernel debugging)",
+    priority=1, capabilities=_ALL_OPS,
+))
+
+register_backend(Backend(
+    name="pallas_tpu", kind="pallas", interpret=False,
+    description="compiled Pallas kernels on TPU hardware",
+    platforms=("tpu",), priority=100, capabilities=_ALL_OPS,
+))

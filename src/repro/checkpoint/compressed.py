@@ -5,27 +5,27 @@ Each leaf is routed by shape exactly like DVNR model compression routes INR
 weights: big >=2-D tensors (the 'latent grids' of an LM: embeddings, matmul
 weights) through the interpolation-predictor coder; small/1-D tensors (biases,
 norms — the 'MLP' analogue) through the uniform quantizer; streams merged and
-zstd-compressed. Tolerances are *relative* to each leaf's value range, so the
-same knob serves fp32 and bf16 states.
+entropy-coded. Codecs are resolved by name through the codec registry and the
+chosen name is recorded per leaf. Tolerances are *relative* to each leaf's
+value range, so the same knob serves fp32 and bf16 states.
 """
 from __future__ import annotations
 
-import io
 from typing import Any
 
 import jax
 import msgpack
 import numpy as np
-import zstandard as zstd
 
-from repro.compress.interp import interp_decode, interp_encode
-from repro.compress.quantizer import quant_decode, quant_encode
+from repro.compress.codec_util import compress_bytes, decompress_bytes
+from repro.compress.registry import get_codec
 
 
 def _route(a: np.ndarray) -> str:
+    """Codec name for one leaf (shape-based routing, as in model_compress)."""
     if a.ndim >= 2 and a.size >= 4096:
         return "interp"
-    return "quant"
+    return "quantizer"
 
 
 def compress_tree(tree: Any, rel_tol: float = 1e-3, level: int = 6) -> bytes:
@@ -43,28 +43,25 @@ def compress_tree(tree: Any, rel_tol: float = 1e-3, level: int = 6) -> bytes:
             items.append({"mode": "raw", "dtype": dt, "shape": list(a.shape),
                           "blob": a.tobytes()})
             continue
-        mode = _route(work)
-        # the sub-coders zstd internally at level 1; outer zstd does the rest
-        blob = (interp_encode(work, tol, level=1) if mode == "interp"
-                else quant_encode(work, tol, level=1))
-        items.append({"mode": mode, "dtype": dt, "shape": list(a.shape),
-                      "blob": blob})
+        codec = get_codec(_route(work))
+        # the sub-coders entropy-code internally at level 1; the outer stage
+        # does the rest
+        items.append({"mode": codec.name, "dtype": dt, "shape": list(a.shape),
+                      "blob": codec.encode(work, tol, level=1)})
     payload = msgpack.packb({"treedef": str(treedef), "items": items})
-    return zstd.ZstdCompressor(level=level).compress(payload)
+    return compress_bytes(payload, level)
 
 
 def decompress_tree(blob: bytes, example_tree: Any) -> Any:
-    payload = msgpack.unpackb(zstd.ZstdDecompressor().decompress(blob),
-                              raw=False)
+    payload = msgpack.unpackb(decompress_bytes(blob), raw=False)
     leaves, treedef = jax.tree_util.tree_flatten(example_tree)
     out = []
     for item, ref in zip(payload["items"], leaves):
         if item["mode"] == "raw":
             a = np.frombuffer(item["blob"], np.dtype(item["dtype"]))
-        elif item["mode"] == "interp":
-            a = interp_decode(item["blob"])
         else:
-            a = quant_decode(item["blob"])
+            # legacy blobs stored "quant"; the registry aliases it
+            a = get_codec(item["mode"]).decode(item["blob"])
         a = np.asarray(a, np.dtype(item["dtype"])).reshape(item["shape"])
         out.append(jax.numpy.asarray(a))
     return jax.tree_util.tree_unflatten(treedef, out)

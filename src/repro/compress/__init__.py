@@ -9,12 +9,18 @@
 
 All lossy codecs guarantee max |x - decode(encode(x))| <= tol (absolute mode),
 verified by hypothesis property tests.
+
+``registry`` exposes every codec under a uniform named
+``encode(arr, tol)/decode(blob)`` interface (``get_codec("interp")`` etc.);
+new codecs plug in via ``register_codec``.
 """
 from repro.compress.quantizer import quant_encode, quant_decode
 from repro.compress.interp import interp_encode, interp_decode
 from repro.compress.blockt import blockt_encode, blockt_decode
 from repro.compress.zstd_codec import zstd_encode, zstd_decode
 from repro.compress.model_compress import compress_model, decompress_model
+from repro.compress.registry import (Codec, available_codecs, get_codec,
+                                     register_codec)
 
 __all__ = [
     "quant_encode", "quant_decode",
@@ -22,4 +28,5 @@ __all__ = [
     "blockt_encode", "blockt_decode",
     "zstd_encode", "zstd_decode",
     "compress_model", "decompress_model",
+    "Codec", "get_codec", "register_codec", "available_codecs",
 ]

@@ -1,9 +1,56 @@
-"""Shared serialization helpers for the compressor stack (msgpack framing)."""
+"""Shared serialization helpers for the compressor stack (msgpack framing).
+
+The lossless entropy stage prefers ``zstandard``; when it is not installed the
+stdlib ``zlib`` takes over (worse ratio, same API). Every blob is prefixed
+with a one-byte coder tag so blobs written on one installation decode on
+another — or fail with an actionable error instead of a low-level one when
+the zstd coder is required but absent.
+"""
 from __future__ import annotations
+
+import zlib as _zlib
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+try:
+    import zstandard as _zstd
+
+    HAVE_ZSTD = True
+except ModuleNotFoundError:
+    _zstd = None
+    HAVE_ZSTD = False
+
+# one-byte coder tags; chosen to collide with neither a zlib stream header
+# (0x78) nor a zstd frame magic (0x28) so legacy untagged blobs are detected
+_TAG_ZSTD = b"Z"
+_TAG_ZLIB = b"L"
+
+
+def compress_bytes(data: bytes, level: int = 6) -> bytes:
+    if HAVE_ZSTD:
+        return _TAG_ZSTD + _zstd.ZstdCompressor(level=level).compress(data)
+    return _TAG_ZLIB + _zlib.compress(data, min(max(level, 1), 9))
+
+
+def decompress_bytes(data: bytes) -> bytes:
+    tag, body = data[:1], data[1:]
+    if tag == _TAG_ZSTD:
+        if not HAVE_ZSTD:
+            raise RuntimeError(
+                "blob was compressed with zstandard, which is not installed "
+                "here — `pip install zstandard` to read it")
+        return _zstd.ZstdDecompressor().decompress(body)
+    if tag == _TAG_ZLIB:
+        return _zlib.decompress(body)
+    # legacy untagged blob (pre-tag format): raw zstd frame or zlib stream
+    if data[:4] == b"\x28\xb5\x2f\xfd":
+        if not HAVE_ZSTD:
+            raise RuntimeError(
+                "blob was compressed with zstandard, which is not installed "
+                "here — `pip install zstandard` to read it")
+        return _zstd.ZstdDecompressor().decompress(data)
+    return _zlib.decompress(data)
 
 
 def pack_codes(q: np.ndarray) -> dict:
@@ -22,9 +69,8 @@ def unpack_codes(d: dict) -> np.ndarray:
 
 
 def finalize(obj: dict, level: int = 6) -> bytes:
-    return zstd.ZstdCompressor(level=level).compress(
-        msgpack.packb(obj, use_bin_type=True))
+    return compress_bytes(msgpack.packb(obj, use_bin_type=True), level)
 
 
 def definalize(blob: bytes) -> dict:
-    return msgpack.unpackb(zstd.ZstdDecompressor().decompress(blob), raw=False)
+    return msgpack.unpackb(decompress_bytes(blob), raw=False)

@@ -6,18 +6,21 @@ error-bounded floating-point codecs, exploiting latent-grid/data correlation.
 - hashed levels: reinterpret as T x F 2D arrays, 1D block-transform codec
   (paper: ZFP-1D) at accuracy r2 (= r1 = r_enc);
 - MLP weights: flattened 1D block-transform at accuracy r3 (= r_mlp);
-- all streams merged and ZSTD'd.
+- all streams merged and entropy-coded.
 
-Ratios are reported against fp16 weight storage (the paper's on-disk format).
+Codecs are selected by name through :mod:`repro.compress.registry` (the codec
+used per stream is recorded in the blob, so decoding needs no configuration);
+the defaults mirror the paper (``interp`` for dense levels, ``blockt`` for
+hashed levels and the MLP). Ratios are reported against fp16 weight storage
+(the paper's on-disk format).
 """
 from __future__ import annotations
 
 import jax
 import numpy as np
 
-from repro.compress.blockt import blockt_decode, blockt_encode
 from repro.compress.codec_util import definalize, finalize
-from repro.compress.interp import interp_decode, interp_encode
+from repro.compress.registry import get_codec
 from repro.configs.dvnr import DVNRConfig
 from repro.core.inr import param_bytes_f16
 
@@ -27,9 +30,14 @@ def _is_dense(res: int, table_size: int) -> bool:
 
 
 def compress_model(cfg: DVNRConfig, params, r_enc: float | None = None,
-                   r_mlp: float | None = None) -> tuple[bytes, dict]:
+                   r_mlp: float | None = None, *,
+                   dense_codec: str = "interp", hash_codec: str = "blockt",
+                   mlp_codec: str = "blockt") -> tuple[bytes, dict]:
     r1 = cfg.zfp_enc if r_enc is None else r_enc
     r3 = cfg.zfp_mlp if r_mlp is None else r_mlp
+    dense_c = get_codec(dense_codec)
+    hash_c = get_codec(hash_codec)
+    mlp_c = get_codec(mlp_codec)
     tables = np.asarray(params["tables"], np.float32)    # (L, T, F)
     L, T, F = tables.shape
     res = cfg.level_resolutions()
@@ -37,18 +45,24 @@ def compress_model(cfg: DVNRConfig, params, r_enc: float | None = None,
     for l in range(L):
         if _is_dense(res[l], T):
             r = res[l] + 1
-            grid = tables[l, :r**3].reshape(r, r, r, F)
-            levels.append({"dense": True,
-                           "payload": interp_encode(grid, r1, spatial=3)})
+            if dense_c.name == "interp":
+                # the interpolation predictor exploits the 3D grid structure
+                grid = tables[l, :r**3].reshape(r, r, r, F)
+                payload = dense_c.encode(grid, r1, spatial=3)
+            else:
+                # generic codecs get the dense rows as a flat stream
+                payload = dense_c.encode(tables[l, :r**3].reshape(-1), r1)
+            levels.append({"dense": True, "codec": dense_c.name,
+                           "rows": r**3, "payload": payload})
         else:
-            levels.append({"dense": False,
-                           "payload": blockt_encode(tables[l].reshape(-1), r1)})
-    mlp = [blockt_encode(np.asarray(w, np.float32).ravel(), r3)
+            levels.append({"dense": False, "codec": hash_c.name,
+                           "payload": hash_c.encode(tables[l].reshape(-1), r1)})
+    mlp = [mlp_c.encode(np.asarray(w, np.float32).ravel(), r3)
            for w in params["mlp"]]
     mlp_shapes = [list(np.asarray(w).shape) for w in params["mlp"]]
     blob = finalize({"kind": "dvnr_model", "levels": levels, "mlp": mlp,
-                     "mlp_shapes": mlp_shapes, "L": L, "T": T, "F": F,
-                     "res": list(res)})
+                     "mlp_codec": mlp_c.name, "mlp_shapes": mlp_shapes,
+                     "L": L, "T": T, "F": F, "res": list(res)})
     info = {
         "bytes": len(blob),
         "f16_bytes": param_bytes_f16(cfg),
@@ -63,13 +77,20 @@ def decompress_model(cfg: DVNRConfig, blob: bytes) -> dict:
     L, T, F = d["L"], d["T"], d["F"]
     tables = np.zeros((L, T, F), np.float32)
     for l, lev in enumerate(d["levels"]):
+        codec = get_codec(lev.get("codec") or ("interp" if lev["dense"] else "blockt"))
         if lev["dense"]:
-            grid = interp_decode(lev["payload"])
-            r = grid.shape[0]
-            tables[l, :r**3] = grid.reshape(r**3, F)
+            dec = codec.decode(lev["payload"])
+            if codec.name == "interp":
+                rows = dec.shape[0] ** 3
+                tables[l, :rows] = dec.reshape(rows, F)
+            else:
+                rows = lev["rows"]
+                tables[l, :rows] = np.asarray(dec).reshape(-1)[:rows * F] \
+                    .reshape(rows, F)
         else:
-            tables[l] = blockt_decode(lev["payload"]).reshape(T, F)
-    mlp = [blockt_decode(b).reshape(s) for b, s in zip(d["mlp"], d["mlp_shapes"])]
+            tables[l] = codec.decode(lev["payload"]).reshape(T, F)
+    mlp_c = get_codec(d.get("mlp_codec", "blockt"))
+    mlp = [mlp_c.decode(b).reshape(s) for b, s in zip(d["mlp"], d["mlp_shapes"])]
     import jax.numpy as jnp
     return {"tables": jnp.asarray(tables), "mlp": [jnp.asarray(w) for w in mlp]}
 

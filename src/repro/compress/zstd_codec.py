@@ -1,20 +1,25 @@
-"""Lossless zstd baseline (the paper's Zstandard comparison point)."""
+"""Lossless baseline codec (the paper's Zstandard comparison point).
+
+Uses ``zstandard`` when installed, stdlib ``zlib`` otherwise (see
+:mod:`repro.compress.codec_util`).
+"""
 from __future__ import annotations
 
 import msgpack
 import numpy as np
-import zstandard as zstd
+
+from repro.compress.codec_util import compress_bytes, decompress_bytes
 
 
 def zstd_encode(x: np.ndarray, level: int = 6) -> bytes:
     x = np.asarray(x)
     hdr = msgpack.packb({"dtype": x.dtype.str, "shape": list(x.shape)})
     return len(hdr).to_bytes(4, "little") + hdr + \
-        zstd.ZstdCompressor(level=level).compress(np.ascontiguousarray(x).tobytes())
+        compress_bytes(np.ascontiguousarray(x).tobytes(), level)
 
 
 def zstd_decode(blob: bytes) -> np.ndarray:
     n = int.from_bytes(blob[:4], "little")
     hdr = msgpack.unpackb(blob[4:4 + n], raw=False)
-    raw = zstd.ZstdDecompressor().decompress(blob[4 + n:])
+    raw = decompress_bytes(blob[4 + n:])
     return np.frombuffer(raw, np.dtype(hdr["dtype"])).reshape(hdr["shape"]).copy()

@@ -1,17 +1,21 @@
 """The base INR: multi-resolution hash encoding + small ReLU MLP (paper §III).
 
-Functional: ``params = init_inr(cfg, key)``; ``v = inr_apply(cfg, params, xyz)``.
-``impl`` selects the encoding/MLP backend: "ref" (pure jnp, CPU), "pallas"
-(interpret-mode kernels) or "pallas_tpu" (compiled kernels on real hardware).
+Functional core: ``params = init_inr(cfg, key)``; the canonical user entry
+point is :class:`repro.api.DVNRModel` (``model.apply(xyz)``), which carries the
+config, params and resolved backend together. The free functions
+``inr_apply``/``decode_grid`` with a string ``impl`` flag are kept as thin
+deprecation shims.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backends
 from repro.configs.dvnr import DVNRConfig
 from repro.kernels.fused_mlp.ops import fused_mlp
 from repro.kernels.hash_encoding.ops import hash_encode
@@ -32,16 +36,19 @@ def init_inr(cfg: DVNRConfig, key, in_dim: int = 3) -> dict:
     return {"tables": tables, "mlp": mlp}
 
 
-def inr_apply(cfg: DVNRConfig, params: dict, coords: jnp.ndarray,
-              impl: str = "ref") -> jnp.ndarray:
+def _inr_apply(cfg: DVNRConfig, params: dict, coords: jnp.ndarray,
+               backend: backends.BackendLike = "ref") -> jnp.ndarray:
     """coords (N,3) in [0,1]^3 -> (N, out_dim) in approximately [0,1]."""
-    feats = hash_encode(coords, params["tables"], cfg.level_resolutions(), impl)
-    return fused_mlp(feats, params["mlp"], impl)
+    b = backends.resolve(backend)
+    feats = hash_encode(coords, params["tables"], cfg.level_resolutions(), b)
+    return fused_mlp(feats, params["mlp"], b)
 
 
-def decode_grid(cfg: DVNRConfig, params: dict, shape: Sequence[int],
-                impl: str = "ref", chunk: int = 1 << 17) -> jnp.ndarray:
+def _decode_grid(cfg: DVNRConfig, params: dict, shape: Sequence[int],
+                 backend: backends.BackendLike = "ref",
+                 chunk: int = 1 << 17) -> jnp.ndarray:
     """Decode the INR back to a cell-centered grid (paper: compatibility path)."""
+    b = backends.resolve(backend)
     nx, ny, nz = shape
     xs = (jnp.arange(nx) + 0.5) / nx
     ys = (jnp.arange(ny) + 0.5) / ny
@@ -50,11 +57,33 @@ def decode_grid(cfg: DVNRConfig, params: dict, shape: Sequence[int],
     coords = jnp.stack([X, Y, Z], -1).reshape(-1, 3)
     outs = []
     for i in range(0, coords.shape[0], chunk):
-        outs.append(inr_apply(cfg, params, coords[i:i + chunk], impl))
+        outs.append(_inr_apply(cfg, params, coords[i:i + chunk], b))
     out = jnp.concatenate(outs, 0)
     if cfg.out_dim == 1:
         return out.reshape(nx, ny, nz)
     return out.reshape(nx, ny, nz, cfg.out_dim)
+
+
+# --------------------------------------------------------------------------- #
+# Deprecated free-function API (pre-DVNRModel)
+# --------------------------------------------------------------------------- #
+def inr_apply(cfg: DVNRConfig, params: dict, coords: jnp.ndarray,
+              impl: backends.BackendLike = "ref") -> jnp.ndarray:
+    """Deprecated: use ``repro.api.DVNRModel(cfg, params).apply(coords)``."""
+    warnings.warn("inr_apply(cfg, params, coords, impl=...) is deprecated; "
+                  "use repro.api.DVNRModel(cfg, params).apply(coords, backend=...)",
+                  DeprecationWarning, stacklevel=2)
+    return _inr_apply(cfg, params, coords, impl)
+
+
+def decode_grid(cfg: DVNRConfig, params: dict, shape: Sequence[int],
+                impl: backends.BackendLike = "ref",
+                chunk: int = 1 << 17) -> jnp.ndarray:
+    """Deprecated: use ``repro.api.DVNRModel(cfg, params).decode_grid(shape)``."""
+    warnings.warn("decode_grid(cfg, params, shape, impl=...) is deprecated; "
+                  "use repro.api.DVNRModel(cfg, params).decode_grid(shape)",
+                  DeprecationWarning, stacklevel=2)
+    return _decode_grid(cfg, params, shape, impl, chunk)
 
 
 def param_count(cfg: DVNRConfig, in_dim: int = 3) -> int:

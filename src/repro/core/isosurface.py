@@ -15,8 +15,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backends
 from repro.configs.dvnr import DVNRConfig
-from repro.core.inr import inr_apply
+from repro.core.inr import _inr_apply
 
 # Cube corner offsets (x,y,z) indexed 0..7.
 _CORNERS = np.array([
@@ -108,10 +109,12 @@ def marching_tets(grid: jnp.ndarray, iso: float, origin=(0.0, 0.0, 0.0),
 
 def isosurface_from_inr(cfg: DVNRConfig, params, iso: float,
                         shape=(64, 64, 64), origin=(0.0, 0.0, 0.0),
-                        extent=(1.0, 1.0, 1.0), impl: str = "ref",
+                        extent=(1.0, 1.0, 1.0),
+                        impl: backends.BackendLike = "ref",
                         chunk: int = 1 << 16):
     """On-demand INR inference -> marching tets, never materializing more than
     ``chunk`` samples at once beyond the (small) vertex grid itself."""
+    backend = backends.resolve(impl)
     nx, ny, nz = shape
     xs = jnp.linspace(0.0, 1.0, nx)
     ys = jnp.linspace(0.0, 1.0, ny)
@@ -120,7 +123,7 @@ def isosurface_from_inr(cfg: DVNRConfig, params, iso: float,
     coords = jnp.stack([X, Y, Z], -1).reshape(-1, 3)
     outs = []
     for i in range(0, coords.shape[0], chunk):
-        outs.append(inr_apply(cfg, params, coords[i:i + chunk], impl)[..., 0])
+        outs.append(_inr_apply(cfg, params, coords[i:i + chunk], backend)[..., 0])
     grid = jnp.concatenate(outs).reshape(nx, ny, nz)
     return marching_tets(grid, iso, origin, extent)
 

@@ -17,13 +17,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backends
 from repro.configs.dvnr import DVNRConfig
-from repro.core.inr import inr_apply
+from repro.core.inr import _inr_apply
 from repro.data.volume import synthetic_field
 
 
 def _query_velocity(cfg: DVNRConfig, stacked_params, parts_meta, pts,
-                    impl: str = "ref"):
+                    impl: backends.BackendLike = "ref"):
     """pts (N,3) global [0,1]^3 -> velocity (N,3), partition-aware de-normalized."""
     P = len(parts_meta)
     out = jnp.zeros((pts.shape[0], 3), jnp.float32)
@@ -35,7 +36,7 @@ def _query_velocity(cfg: DVNRConfig, stacked_params, parts_meta, pts,
         local = (pts - lo) / ext
         inside = jnp.all((local >= 0.0) & (local <= 1.0), axis=-1) & ~hit
         params_p = jax.tree.map(lambda t: t[p], stacked_params)
-        v01 = inr_apply(cfg, params_p, jnp.clip(local, 0.0, 1.0), impl)
+        v01 = _inr_apply(cfg, params_p, jnp.clip(local, 0.0, 1.0), impl)
         vmin = jnp.asarray(m["vmin"], jnp.float32)
         vmax = jnp.asarray(m["vmax"], jnp.float32)
         v = v01 * (vmax - vmin) + vmin
@@ -45,7 +46,8 @@ def _query_velocity(cfg: DVNRConfig, stacked_params, parts_meta, pts,
 
 
 def trace_backward(cfg: DVNRConfig, window: Sequence, parts_meta, seeds,
-                   dt: float, *, substeps: int = 4, impl: str = "ref"):
+                   dt: float, *, substeps: int = 4,
+                   impl: backends.BackendLike = "ref"):
     """Backward pathlines over a temporal window of stacked velocity-INR params.
 
     ``window``: newest -> oldest list of stacked params (one entry per cached

@@ -22,8 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backends
 from repro.configs.dvnr import DVNRConfig
-from repro.core.inr import inr_apply
+from repro.core.inr import _inr_apply
 from repro.kernels.composite.ops import composite
 
 
@@ -90,8 +91,10 @@ def apply_tf(values, tf_table):
 # --------------------------------------------------------------------------- #
 def render_partition(cfg: DVNRConfig, params, origin, extent, vrange, grange,
                      origins, dirs, tf_table, *, n_samples: int = 64,
-                     density: float = 50.0, impl: str = "ref"):
+                     density: float = 50.0,
+                     impl: backends.BackendLike = "ref"):
     """Ray-march one partition's INR. Returns (rgba (R,4), depth (R,))."""
+    backend = backends.resolve(impl)
     lo = jnp.asarray(origin, jnp.float32)
     hi = lo + jnp.asarray(extent, jnp.float32)
     t0, t1 = ray_aabb(origins, dirs, lo, hi)
@@ -101,7 +104,7 @@ def render_partition(cfg: DVNRConfig, params, origin, extent, vrange, grange,
     pos = origins[:, None] + ts[..., None] * dirs[:, None]              # (R,S,3)
     local = (pos - lo) / (hi - lo)
     R, S = ts.shape
-    v = inr_apply(cfg, params, local.reshape(-1, 3), impl).reshape(R, S)
+    v = _inr_apply(cfg, params, local.reshape(-1, 3), backend).reshape(R, S)
     # de-normalize local prediction, then re-normalize to the GLOBAL value range
     vmin, vmax = vrange
     gmin, gmax = grange
@@ -111,7 +114,7 @@ def render_partition(cfg: DVNRConfig, params, origin, extent, vrange, grange,
     alpha = 1.0 - jnp.exp(-rgba[..., 3] * density * dt[:, None])
     rgba = jnp.concatenate([rgba[..., :3], alpha[..., None]], -1)
     rgba = jnp.where(hit[:, None, None], rgba, 0.0)
-    out = composite(rgba, impl if impl == "ref" else "pallas")
+    out = composite(rgba, backend)
     depth = jnp.where(hit, t0, jnp.inf)
     return out, depth
 
@@ -212,7 +215,8 @@ def binary_swap(mesh, axis_names, images, depths):
 
 
 def make_distributed_render_step(cfg: DVNRConfig, mesh, *, n_samples: int = 64,
-                                 density: float = 50.0, impl: str = "ref"):
+                                 density: float = 50.0,
+                                 impl: backends.BackendLike = "ref"):
     """Production render step: one shard_map program that renders every
     partition's INR on its own device and binary-swap composites in place.
 
@@ -261,7 +265,8 @@ def make_distributed_render_step(cfg: DVNRConfig, mesh, *, n_samples: int = 64,
 
 def render_distributed(cfg, stacked_params, parts_meta, cam: Camera,
                        width: int, height: int, grange, *, mesh=None,
-                       n_samples: int = 64, impl: str = "ref",
+                       n_samples: int = 64,
+                       impl: backends.BackendLike = "ref",
                        tf_table: Optional[jnp.ndarray] = None):
     """Render P partitions and composite. parts_meta: list of dicts with
     origin/extent/vmin/vmax per partition (host metadata)."""

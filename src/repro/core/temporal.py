@@ -31,11 +31,20 @@ class CacheEntry:
 
 
 class TemporalModelCache:
-    """Sliding window over timesteps of per-partition compressed DVNR models."""
+    """Sliding window over timesteps of per-partition compressed DVNR models.
 
-    def __init__(self, cfg: DVNRConfig, window: int):
+    The per-stream codecs of the model-compression pipeline are selected by
+    registry name (``dense_codec``/``hash_codec``/``mlp_codec``), so swapping
+    a codec for the whole cache is a constructor argument, not an import.
+    """
+
+    def __init__(self, cfg: DVNRConfig, window: int, *,
+                 dense_codec: str = "interp", hash_codec: str = "blockt",
+                 mlp_codec: str = "blockt"):
         self.cfg = cfg
         self.window = window
+        self.codecs = {"dense_codec": dense_codec, "hash_codec": hash_codec,
+                       "mlp_codec": mlp_codec}
         self._entries: deque[CacheEntry] = deque()
 
     def append(self, timestep: int, stacked_params, meta: Optional[dict] = None,
@@ -45,7 +54,7 @@ class TemporalModelCache:
         for p in range(P):
             one = jax.tree.map(lambda t: t[p], stacked_params)
             if compress:
-                blob, _ = compress_model(self.cfg, one)
+                blob, _ = compress_model(self.cfg, one, **self.codecs)
             else:  # raw f16 serialization (ablation: "uncomp")
                 import msgpack
                 blob = msgpack.packb({

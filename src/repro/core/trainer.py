@@ -20,8 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backends
 from repro.configs.dvnr import DVNRConfig
-from repro.core.inr import decode_grid, init_inr, inr_apply
+from repro.core.inr import _decode_grid, _inr_apply, init_inr
 from repro.core.metrics import psnr_from_mses
 from repro.core.sampling import training_coords
 from repro.data.volume import sample_trilinear
@@ -75,14 +76,19 @@ class DVNRState:
 
 class DVNRTrainer:
     def __init__(self, cfg: DVNRConfig, n_partitions: int, *, mesh=None,
-                 impl: str = "ref", ghost: int = 1):
+                 impl: backends.BackendLike = "ref", ghost: int = 1):
         self.cfg = cfg
         self.P = n_partitions
         self.mesh = mesh
-        self.impl = impl
+        self.backend = backends.resolve(impl)
         self.ghost = ghost
         self.adam = AdamW(_opt_config(cfg))
         self._step_fn = self._build_step()
+
+    @property
+    def impl(self) -> str:
+        """Backward-compat name of the resolved backend."""
+        return self.backend.name
 
     # -------------------------- init ---------------------------------- #
     def init(self, key, cached_params: Optional[dict] = None) -> DVNRState:
@@ -102,7 +108,7 @@ class DVNRTrainer:
 
     # -------------------------- one SPMD step -------------------------- #
     def _build_step(self):
-        cfg, ghost, impl = self.cfg, self.ghost, self.impl
+        cfg, ghost, backend = self.cfg, self.ghost, self.backend
         adam = self.adam
 
         def one_partition(params, opt, vol, key, active, loss_ma):
@@ -113,7 +119,7 @@ class DVNRTrainer:
                 target = target[:, None]
 
             def loss_fn(p):
-                pred = inr_apply(cfg, p, coords, impl)
+                pred = _inr_apply(cfg, p, coords, backend)
                 return jnp.mean(jnp.abs(pred - target))   # standard unweighted L1
 
             loss, grads = jax.value_and_grad(loss_fn)(params)
@@ -179,7 +185,7 @@ class DVNRTrainer:
         mses = []
         for p in range(self.P):
             params_p = jax.tree.map(lambda t: t[p], state.params)
-            dec = decode_grid(self.cfg, params_p, owned_shape, self.impl)
+            dec = _decode_grid(self.cfg, params_p, owned_shape, self.backend)
             if dec.ndim == 4:
                 dec = dec[..., 0]
             ref = volumes[p][g:g + owned_shape[0], g:g + owned_shape[1],

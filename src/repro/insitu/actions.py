@@ -15,15 +15,11 @@ Supported actions (one per paper operation):
 from __future__ import annotations
 
 from dataclasses import dataclass, field as dfield
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs.dvnr import DVNRConfig
-from repro.core.isosurface import isosurface_from_inr, surface_points
-from repro.core.render import Camera, render_distributed
+from repro import api, backends
 from repro.reactive.dvnr import DVNRValue
 
 
@@ -36,34 +32,15 @@ class Action:
 
 def render_action(value: DVNRValue, *, width: int = 128, height: int = 128,
                   eye=(1.8, 1.4, 1.6), n_samples: int = 48,
-                  impl: str = "ref") -> jnp.ndarray:
+                  impl: backends.BackendLike = "ref") -> jnp.ndarray:
     """Direct volume rendering straight from the DVNR (no decoding)."""
-    cam = Camera(eye=eye)
-    return render_distributed(value.cfg, value.params, value.parts_meta, cam,
-                              width, height, value.grange,
-                              n_samples=n_samples, impl=impl)
+    return api.render(value.model, eye=eye, width=width, height=height,
+                      n_samples=n_samples, backend=impl)
 
 
 def isosurface_action(value: DVNRValue, *, iso01: float = 0.5,
-                      resolution: int = 32, impl: str = "ref"):
+                      resolution: int = 32,
+                      impl: backends.BackendLike = "ref"):
     """Per-partition marching tets on the INR; returns world-space points."""
-    clouds = []
-    for p, meta in enumerate(value.parts_meta):
-        params_p = jax.tree.map(lambda t: t[p], value.params)
-        # iso01 is in GLOBAL normalized units; map into this partition's range
-        gmin, gmax = value.grange
-        iso_raw = gmin + iso01 * (gmax - gmin)
-        denom = max(meta["vmax"] - meta["vmin"], 1e-12)
-        iso_local = (iso_raw - meta["vmin"]) / denom
-        if not (0.0 <= iso_local <= 1.0):
-            continue                   # isosurface does not cross this partition
-        tris, valid = isosurface_from_inr(
-            value.cfg, params_p, float(iso_local),
-            shape=(resolution,) * 3, origin=meta["origin"],
-            extent=meta["extent"], impl=impl)
-        pts = surface_points(tris, valid)
-        if len(pts):
-            clouds.append(pts)
-    if not clouds:
-        return np.zeros((0, 3), np.float32)
-    return np.concatenate(clouds, axis=0)
+    return api.isosurface(value.model, iso01, resolution=resolution,
+                          backend=impl)

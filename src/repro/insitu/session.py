@@ -42,7 +42,7 @@ class InSituSession:
     """One simulation + one reactive graph + an action set."""
 
     def __init__(self, sim_cfg: SimulationConfig, dvnr_cfg: DVNRConfig, *,
-                 window: int = 8, impl: str = "ref", compress: bool = True,
+                 window: int = 8, impl="ref", compress: bool = True,
                  cache_mode: str = "dvnr"):
         """cache_mode: 'dvnr' (compressed models), 'raw' (uncompressed grids,
         the paper's 'Data Cache' comparison), 'off' (baseline)."""

@@ -1,15 +1,15 @@
-"""jit'd wrapper: impl dispatch for the compositing stage (no VJP needed —
+"""jit'd wrapper: backend dispatch for the compositing stage (no VJP needed —
 rendering is an inference-time operation in the paper)."""
 from __future__ import annotations
 
+from repro import backends
 from repro.kernels.composite import ref as _ref
 from repro.kernels.composite.kernel import composite_pallas
 
 
-def composite(rgba, impl: str = "ref"):
+def composite(rgba, impl: backends.BackendLike = "ref"):
     """rgba (R, S, 4) front-to-back -> (R, 4)."""
-    if impl == "pallas":
-        return composite_pallas(rgba, interpret=True)
-    if impl == "pallas_tpu":
-        return composite_pallas(rgba, interpret=False)
+    b = backends.resolve(impl)
+    if b.is_pallas:
+        return composite_pallas(rgba, interpret=b.interpret)
     return _ref.composite_ref(rgba)

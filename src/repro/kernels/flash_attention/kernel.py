@@ -29,6 +29,10 @@ NEG_INF = -1e30
 BLOCK_Q = 256
 BLOCK_K = 256
 
+# jax >= 0.5 renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             causal: bool, window, sq: int, sk: int, dh: int, n_k: int):
@@ -124,7 +128,7 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window=None,
             pltpu.VMEM((BLOCK_Q, 1), jnp.float32),
             pltpu.VMEM((BLOCK_Q, dh), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)

@@ -1,4 +1,4 @@
-"""jit'd wrapper: layout adaptation + impl dispatch + custom VJP.
+"""jit'd wrapper: layout adaptation + backend dispatch + custom VJP.
 
 Forward runs the Pallas kernel (interpret on CPU, compiled on TPU); backward
 recomputes through the jnp oracle (flash-style recompute — no S x S residuals
@@ -9,40 +9,45 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 
+from repro import backends
 from repro.kernels.flash_attention import ref as _ref
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 
 
-def _fwd_impl(q, k, v, causal, window, impl):
-    if impl == "ref":
+def _fwd_impl(q, k, v, causal, window, backend):
+    if not backend.is_pallas:
         return _ref.attention_ref(q, k, v, causal=causal, window=window)
-    interp = impl != "pallas_tpu"
     qt = q.transpose(0, 2, 1, 3)       # (B,H,S,dh)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
     out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
-                               interpret=interp)
+                               interpret=backend.interpret)
     return out.transpose(0, 2, 1, 3)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def flash_attention(q, k, v, causal: bool = True,
-                    window: Optional[int] = None, impl: str = "pallas"):
+                    window: Optional[int] = None,
+                    impl: backends.BackendLike = "pallas"):
     """q (B,Sq,Hq,dh); k,v (B,Sk,Hkv,dh) -> (B,Sq,Hq,dh)."""
-    return _fwd_impl(q, k, v, causal, window, impl)
+    return _flash_attention(q, k, v, causal, window, backends.resolve(impl))
 
 
-def _vjp_fwd(q, k, v, causal, window, impl):
-    return _fwd_impl(q, k, v, causal, window, impl), (q, k, v)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_attention(q, k, v, causal: bool, window: Optional[int],
+                     backend: backends.Backend):
+    return _fwd_impl(q, k, v, causal, window, backend)
 
 
-def _vjp_bwd(causal, window, impl, res, g):
+def _vjp_fwd(q, k, v, causal, window, backend):
+    return _fwd_impl(q, k, v, causal, window, backend), (q, k, v)
+
+
+def _vjp_bwd(causal, window, backend, res, g):
     q, k, v = res
     _, vjp = jax.vjp(lambda q_, k_, v_: _ref.attention_ref(
         q_, k_, v_, causal=causal, window=window), q, k, v)
     return vjp(g)
 
 
-flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+_flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

@@ -1,4 +1,8 @@
-"""jit'd wrapper for the fused MLP with custom VJP (fwd + bwd kernels)."""
+"""jit'd wrapper for the fused MLP with custom VJP (fwd + bwd kernels).
+
+Dispatch goes through :mod:`repro.backends`: Pallas backends run the fused
+kernels (interpret or compiled); everything else uses the jnp oracle.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,6 +10,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import backends
 from repro.kernels.fused_mlp import ref as _ref
 from repro.kernels.fused_mlp.kernel import fused_mlp_bwd_pallas, fused_mlp_fwd_pallas
 
@@ -23,35 +28,39 @@ def _stack(weights):
     return w_in, w_hid, w_out, n_hidden
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
-def fused_mlp(x, weights, impl: str = "ref"):
+def fused_mlp(x, weights, impl: backends.BackendLike = "ref"):
     """x (N, D_in); weights [w_in, hidden..., w_out] -> (N, D_out)."""
-    return _fwd_impl(x, weights, impl)
+    return _fused_mlp(x, weights, backends.resolve(impl))
 
 
-def _fwd_impl(x, weights, impl):
-    if impl.startswith("pallas"):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _fused_mlp(x, weights, backend: backends.Backend):
+    return _fwd_impl(x, weights, backend)
+
+
+def _fwd_impl(x, weights, backend):
+    if backend.is_pallas:
         w_in, w_hid, w_out, n_hidden = _stack(weights)
         return fused_mlp_fwd_pallas(x, w_in, w_hid, w_out, n_hidden=n_hidden,
-                                    interpret=(impl != "pallas_tpu"))
+                                    interpret=backend.interpret)
     return _ref.fused_mlp_ref(x, weights)
 
 
-def _fwd(x, weights, impl):
-    return _fwd_impl(x, weights, impl), (x, weights)
+def _fwd(x, weights, backend):
+    return _fwd_impl(x, weights, backend), (x, weights)
 
 
-def _bwd(impl, res, g):
+def _bwd(backend, res, g):
     x, weights = res
-    if impl.startswith("pallas"):
+    if backend.is_pallas:
         w_in, w_hid, w_out, n_hidden = _stack(weights)
         dx, dw_in, dw_hid, dw_out = fused_mlp_bwd_pallas(
             x, w_in, w_hid, w_out, g, n_hidden=n_hidden,
-            interpret=(impl != "pallas_tpu"))
+            interpret=backend.interpret)
         dws = [dw_in] + [dw_hid[i] for i in range(n_hidden - 1)] + [dw_out]
         return dx, dws
     _, vjp = jax.vjp(lambda xx, ww: _ref.fused_mlp_ref(xx, ww), x, weights)
     return vjp(g)
 
 
-fused_mlp.defvjp(_fwd, _bwd)
+_fused_mlp.defvjp(_fwd, _bwd)

@@ -1,9 +1,13 @@
-"""jit'd wrapper for hash encoding: impl dispatch + custom VJP.
+"""jit'd wrapper for hash encoding: backend dispatch + custom VJP.
 
 Forward: Pallas kernel (TPU) or pure-jnp oracle (CPU / default).
 Backward: scatter-add of the blended cotangents into the 8 corners per level —
 expressed as ``.at[].add`` which XLA:TPU lowers to its native combining scatter
 (the CUDA analogue is atomicAdd; see DESIGN.md hardware-adaptation notes).
+
+Dispatch goes through :mod:`repro.backends`; ``impl`` accepts a backend name
+(``"ref"``, ``"fused"``, ``"pallas"``, ``"pallas_tpu"``, ``"auto"``) or a
+resolved :class:`~repro.backends.Backend`.
 """
 from __future__ import annotations
 
@@ -13,47 +17,53 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import backends
 from repro.kernels.hash_encoding import ref as _ref
 from repro.kernels.hash_encoding.kernel import hash_encode_pallas
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
-def hash_encode(coords, tables, resolutions: Sequence[int], impl: str = "ref"):
+def hash_encode(coords, tables, resolutions: Sequence[int],
+                impl: backends.BackendLike = "ref"):
     """coords (N,3) in [0,1]; tables (L,T,F) -> (N, L*F). Differentiable in tables."""
-    return _fwd_impl(coords, tables, resolutions, impl)
+    return _hash_encode(coords, tables, resolutions, backends.resolve(impl))
 
 
-def _fwd_impl(coords, tables, resolutions, impl):
-    if impl == "pallas":
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _hash_encode(coords, tables, resolutions, backend: backends.Backend):
+    return _fwd_impl(coords, tables, resolutions, backend)
+
+
+def _use_fused(backend):
+    return backend.is_fused and backend.supports("hash_encoding")
+
+
+def _fwd_impl(coords, tables, resolutions, backend):
+    if backend.is_pallas:
         return hash_encode_pallas(coords, tables,
                                   jnp.asarray(resolutions, jnp.int32),
-                                  interpret=True)
-    if impl == "pallas_tpu":
-        return hash_encode_pallas(coords, tables,
-                                  jnp.asarray(resolutions, jnp.int32),
-                                  interpret=False)
-    if impl == "fused":
+                                  interpret=backend.interpret)
+    if _use_fused(backend):
         return _ref.hash_encode_fused(coords, tables, resolutions)
     return _ref.hash_encode_ref(coords, tables, resolutions)
 
 
-def _fwd(coords, tables, resolutions, impl):
-    if impl == "fused":
+def _fwd(coords, tables, resolutions, backend):
+    if _use_fused(backend):
         # store the (small) corner indices/weights as residuals: the backward
         # scatter reuses them instead of recomputing the whole index chain
         # (EXPERIMENTS.md §Perf DVNR iteration C2)
         idx, ww = _ref.fused_corners(coords, resolutions, tables.shape[1])
         out = _ref._combine_fused(idx, ww, tables)
         return out, (coords, tables.shape, idx, ww)
-    return _fwd_impl(coords, tables, resolutions, impl), \
+    return _fwd_impl(coords, tables, resolutions, backend), \
         (coords, tables.shape, None, None)
 
 
-def _bwd(resolutions, impl, res, g):
+def _bwd(resolutions, backend, res, g):
     coords, tshape, idx, ww = res
     L, T, F = tshape
     N = coords.shape[0]
-    if impl == "fused":
+    if _use_fused(backend):
         # level-vectorized combining scatter (one batched scatter-add)
         gl = g.reshape(N, L, F).transpose(1, 0, 2)                # (L,N,F)
         upd = ww.astype(g.dtype)[..., None] * gl[:, :, None, :]   # (L,N,8,F)
@@ -80,4 +90,4 @@ def _bwd(resolutions, impl, res, g):
     return jnp.zeros_like(coords), dt
 
 
-hash_encode.defvjp(_fwd, _bwd)
+_hash_encode.defvjp(_fwd, _bwd)

@@ -14,6 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro import backends
 from repro.models.layers import apply_rope, dense_init, rope_angles
 
 NEG_INF = -1e30
@@ -80,10 +81,16 @@ def sdpa(q, k, v, *, causal: bool, window: Optional[int] = None,
     ``kv_valid_len``: number of valid KV entries (decode with preallocated cache).
     ``window``: sliding-window size (None = full).
     """
-    if impl == "pallas":
+    backend = backends.resolve(impl)
+    # the flash kernel has no q_offset / kv_valid_len support (decode with a
+    # preallocated cache): those calls must stay on the jnp path
+    if (backend.is_pallas and backend.supports("flash_attention")
+            and kv_valid_len is None
+            and isinstance(q_offset, int) and q_offset == 0):
         from repro.kernels.flash_attention import ops as flash_ops
 
-        return flash_ops.flash_attention(q, k, v, causal=causal, window=window)
+        return flash_ops.flash_attention(q, k, v, causal=causal, window=window,
+                                         impl=backend)
     B, Sq, Hq, dh = q.shape
     _, Sk, Hkv, _ = k.shape
     g = Hq // Hkv

@@ -1,27 +1,26 @@
 """The specialized DVNR reactive constructor (paper §IV-A).
 
 ``dvnr_node`` wraps a volume-field source node: when pulled, it trains one INR
-per partition (zero-comm), records value ranges, optionally compresses the
-weights, and returns a ``DVNRValue``. Training is referentially transparent —
-if no trigger demands the node in a tick, no training happens (lazy bypass).
+per partition (zero-comm) through :func:`repro.api.train`, records value
+ranges, optionally compresses the weights, and returns a ``DVNRValue``
+wrapping a :class:`repro.api.DVNRModel`. Training is referentially
+transparent — if no trigger demands the node in a tick, no training happens
+(lazy bypass).
 
 Weight caching (§III-E) is applied automatically: the cache entry is keyed by
 (field name, network config); a hit warm-starts the next tick's training.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.compress.model_compress import compress_model
+from repro import api, backends
 from repro.configs.dvnr import DVNRConfig
 from repro.core.temporal import WeightCache
-from repro.core.trainer import DVNRTrainer, train_iterations
+from repro.core.trainer import DVNRTrainer
 from repro.reactive.graph import Node, Runtime
 
 
@@ -29,52 +28,50 @@ from repro.reactive.graph import Node, Runtime
 class DVNRValue:
     """One tick's trained distributed neural representation."""
 
-    cfg: DVNRConfig
-    params: dict                       # stacked (P, ...) pytree
-    parts_meta: List[dict]             # origin/extent/vmin/vmax per partition
-    grange: tuple                      # global (min, max)
+    model: api.DVNRModel
     train_time_s: float
     steps: int
     compressed: Optional[list] = None  # per-partition blobs if compression on
+
+    # ------- legacy field access (pre-DVNRModel call sites) ------------- #
+    @property
+    def cfg(self) -> DVNRConfig:
+        return self.model.cfg
+
+    @property
+    def params(self):
+        return self.model.params
+
+    @property
+    def parts_meta(self) -> List[api.PartitionMeta]:
+        return list(self.model.parts_meta or ())
+
+    @property
+    def grange(self) -> tuple:
+        return self.model.grange
 
     @property
     def bytes(self) -> int:
         if self.compressed is not None:
             return sum(len(b) for b in self.compressed)
-        return sum(np.asarray(t).nbytes for t in jax.tree.leaves(self.params))
+        return self.model.nbytes
 
 
 def _train_once(cfg: DVNRConfig, partitions, trainer: DVNRTrainer,
                 wcache: Optional[WeightCache], field_name: str,
                 key, compress: bool) -> DVNRValue:
-    vols = jnp.stack([p.normalized() for p in partitions])
     cached = wcache.get(field_name, cfg) if wcache is not None else None
-    state = trainer.init(key, cached_params=cached)
-    nvox = int(np.prod(partitions[0].owned_shape))
-    steps = train_iterations(cfg, nvox)
-    t0 = time.time()
-    state, _ = trainer.train(state, vols, steps=steps, key=key)
-    jax.block_until_ready(state.params)
-    dt = time.time() - t0
+    model, info = api.train(partitions, cfg, trainer=trainer, key=key,
+                            cached_params=cached)
     if wcache is not None:
-        wcache.put(field_name, cfg, state.params)
-
-    meta = [{"origin": p.origin, "extent": p.extent,
-             "vmin": p.vmin, "vmax": p.vmax} for p in partitions]
-    gmin = min(p.vmin for p in partitions)
-    gmax = max(p.vmax for p in partitions)
-    blobs = None
-    if compress:
-        blobs = []
-        for i in range(len(partitions)):
-            one = jax.tree.map(lambda t: t[i], state.params)
-            blob, _ = compress_model(cfg, one)
-            blobs.append(blob)
-    return DVNRValue(cfg, state.params, meta, (gmin, gmax), dt, state.step, blobs)
+        wcache.put(field_name, cfg, model.params)
+    blobs = model.compress() if compress else None
+    return DVNRValue(model, info["train_time_s"], info["steps"], blobs)
 
 
 def dvnr_node(runtime: Runtime, field_node: Node, cfg: DVNRConfig, *,
-              field_name: str, n_partitions: int, mesh=None, impl: str = "ref",
+              field_name: str, n_partitions: int, mesh=None,
+              impl: backends.BackendLike = "ref",
               weight_caching: bool = True, compress: bool = True,
               seed: int = 0, name: Optional[str] = None) -> Node:
     """Reactive constructor: volume partitions -> trained DVNRValue (lazy)."""

@@ -5,6 +5,8 @@ import pytest
 
 import jax
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import (CheckpointManager, compress_tree,

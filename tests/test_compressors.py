@@ -3,6 +3,8 @@ and the paper's III-D model-compression pipeline."""
 import jax
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.compress import (

@@ -13,13 +13,12 @@ SCRIPT = textwrap.dedent("""
     import jax
     import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import Mesh, AxisType
+    from repro.launch.mesh import build_mesh
     from repro.configs import dvnr as dvnr_cfg
     from repro.core.trainer import DVNRTrainer
     from repro.data.volume import make_partition
 
-    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2)
+    mesh = build_mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
     cfg = dvnr_cfg.SMOKE.replace(batch_size=256)
     P = 8
     parts = [make_partition("s3d", p, (2, 2, 2), (8, 8, 8)) for p in range(P)]

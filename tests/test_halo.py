@@ -67,7 +67,7 @@ _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import Mesh, AxisType
+    from repro.launch.mesh import build_mesh
     from repro.data.halo import halo_exchange, halo_exchange_ref
     from repro.data.volume import make_partition
 
@@ -80,8 +80,7 @@ _SCRIPT = textwrap.dedent("""
     z[:, :, :, :g] = z[:, :, :, -g:] = 0
     vols = jnp.asarray(z)
     ref = halo_exchange_ref(vols, grid, g)
-    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2)
+    mesh = build_mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
     with mesh:
         out = jax.jit(lambda v: halo_exchange(v, grid, mesh, g))(vols)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)

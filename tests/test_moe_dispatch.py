@@ -41,7 +41,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import dataclasses
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import Mesh, AxisType
+from repro.launch.mesh import build_mesh
 from repro.configs import get_smoke_config
 from repro.models.moe import init_moe, moe_block_scatter, moe_block_tp
 from repro.models.attention import sdpa
@@ -49,8 +49,7 @@ from repro.parallel.sharding import Sharder
 
 cfg = get_smoke_config("grok_1_314b")
 cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
-mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"),
-            axis_types=(AxisType.Auto,) * 2)
+mesh = build_mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
 sharder = Sharder(mesh, 4)
 p = init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))

@@ -39,12 +39,11 @@ _SWAP_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import Mesh, AxisType
+    from repro.launch.mesh import build_mesh
     from repro.core.render import (Camera, binary_swap, composite_depth_sort,
                                    make_rays, ray_aabb)
 
-    mesh = Mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2)
+    mesh = build_mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
     P, W, H = 8, 8, 8
     R = W * H
     # binary swap's precondition: partition p is the box whose corner is p's
@@ -86,14 +85,13 @@ _RENDER_STEP_SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import Mesh, AxisType
+    from repro.launch.mesh import build_mesh
     from repro.configs.dvnr import SMOKE
     from repro.core.inr import init_inr
     from repro.core.render import (Camera, default_tf, make_distributed_render_step,
                                    make_rays, render_distributed)
 
-    mesh = Mesh(np.asarray(jax.devices()).reshape(2, 2), ("data", "model"),
-                axis_types=(AxisType.Auto,) * 2)
+    mesh = build_mesh(np.asarray(jax.devices()).reshape(2, 2), ("data", "model"))
     cfg = SMOKE
     P = 4
     params = jax.vmap(lambda k: init_inr(cfg, k))(
