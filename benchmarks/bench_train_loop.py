@@ -1,0 +1,92 @@
+"""Training-loop dispatch overhead: per-step driver vs scan-fused chunks.
+
+The paper's headline claim is compression *speed*; with small per-partition
+networks the wall clock of a Python-driven loop is dominated by per-step
+dispatch latency (key derivation on host + one jit dispatch + convergence
+sync), not the kernels. ``DVNRTrainer.train_chunk`` fuses the whole hot loop
+into one ``lax.scan`` device program; this benchmark quantifies the win as
+steps/sec at several chunk sizes and partition counts and records the
+trajectory in results/bench/train_loop.json for future perf PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from benchmarks.common import make_volume, save_result
+from repro.configs.dvnr import DVNRConfig
+from repro.core.trainer import DVNRState, DVNRTrainer
+
+# dispatch-bound regime: tiny network, small batch (the in situ small-partition
+# configuration where loop overhead hurts the most)
+CFG = DVNRConfig(n_levels=2, n_features_per_level=2, log2_hashmap_size=7,
+                 base_resolution=4, n_neurons=8, n_hidden_layers=1,
+                 batch_size=128, boundary_lambda=0.15)
+
+GRIDS = {1: (1, 1, 1), 2: (1, 1, 2), 4: (1, 2, 2), 8: (2, 2, 2)}
+
+
+def _fresh(tr: DVNRTrainer) -> DVNRState:
+    return tr.init(jax.random.PRNGKey(0))
+
+
+def _time_loop(tr, vols, steps) -> float:
+    key = jax.random.PRNGKey(1)
+    st = _fresh(tr)
+    st, _ = tr.train_looped(st, vols, steps=2, key=key)     # compile
+    jax.block_until_ready(st.params)
+    st = _fresh(tr)
+    t0 = time.perf_counter()
+    st, _ = tr.train_looped(st, vols, steps=steps, key=key)
+    jax.block_until_ready(st.params)
+    return time.perf_counter() - t0
+
+
+def _time_chunked(tr, vols, steps, chunk) -> float:
+    key = jax.random.PRNGKey(1)
+    st = _fresh(tr)
+    # compile every chunk length the timed run will use (full chunk + any
+    # remainder) without paying a whole untimed steps-length run
+    warm = min(steps, chunk) + steps % chunk
+    st, _ = tr.train(st, vols, steps=warm, key=key, check_every=chunk)
+    jax.block_until_ready(st.params)
+    st = _fresh(tr)
+    t0 = time.perf_counter()
+    st, _ = tr.train(st, vols, steps=steps, key=key, check_every=chunk)
+    jax.block_until_ready(st.params)
+    return time.perf_counter() - t0
+
+
+def run(quick: bool = False) -> dict:
+    Ps = [1, 4] if quick else [1, 2, 4, 8]
+    chunks = [4, 32] if quick else [4, 16, 64, 256]
+    steps = 64 if quick else 512
+    out = {"config": {"batch_size": CFG.batch_size, "steps": steps,
+                      "table_size": CFG.table_size, "n_neurons": CFG.n_neurons},
+           "runs": []}
+    for P in Ps:
+        parts, vols = make_volume("cloverleaf", GRIDS[P], (8, 8, 8))
+        tr = DVNRTrainer(CFG, n_partitions=P)
+        loop_s = _time_loop(tr, vols, steps)
+        loop_sps = steps / loop_s
+        rec = {"P": P, "loop_steps_per_s": loop_sps, "loop_s": loop_s,
+               "chunked": []}
+        for chunk in [c for c in chunks if c <= steps]:
+            s = _time_chunked(tr, vols, steps, chunk)
+            rec["chunked"].append({"chunk": chunk, "steps_per_s": steps / s,
+                                   "speedup_vs_loop": loop_sps and
+                                   (steps / s) / loop_sps})
+            print(f"[train_loop] P={P} chunk={chunk:>4} "
+                  f"{steps / s:>9.0f} steps/s  "
+                  f"({(steps / s) / loop_sps:.1f}x vs loop "
+                  f"{loop_sps:.0f} steps/s)")
+        rec["best_speedup"] = max(c["speedup_vs_loop"] for c in rec["chunked"])
+        out["runs"].append(rec)
+    out["max_speedup"] = max(r["best_speedup"] for r in out["runs"])
+    save_result("train_loop", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

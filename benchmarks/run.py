@@ -17,6 +17,8 @@ SUITE = {
     "kernels": ("benchmarks.bench_kernels", "kernel correctness + roofline"),
     "compressors": ("benchmarks.bench_compressors", "Fig. 7 / Table I"),
     "scaling": ("benchmarks.bench_scaling", "Fig. 6"),
+    "train_loop": ("benchmarks.bench_train_loop",
+                   "dispatch overhead: loop vs scan-fused chunks"),
     "quality": ("benchmarks.bench_quality", "Fig. 8"),
     "model_compression": ("benchmarks.bench_model_compression",
                           "Table II / Fig. 16"),

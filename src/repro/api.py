@@ -285,7 +285,7 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
           mesh=None, steps: Optional[int] = None, key=None,
           cached_params=None, trainer: Optional[DVNRTrainer] = None,
           ghost: Optional[int] = None, volumes=None,
-          log_every: int = 0) -> Tuple[DVNRModel, dict]:
+          log_every: int = 0, check_every: int = 0) -> Tuple[DVNRModel, dict]:
     """Train one INR per partition (zero-communication) and return the model.
 
     ``partitions``: sequence of :class:`~repro.data.volume.VolumePartition`
@@ -295,6 +295,10 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
     compiled step across repeated calls (in situ ticks); pass ``volumes``
     (a stacked (P, ...) normalized array) to train on data other than the
     partitions' own; ``log_every`` > 0 records a loss curve in the info dict.
+
+    Training runs device-resident: ``check_every`` steps are fused into one
+    scanned device program between host-side convergence checks (0 = auto;
+    see :meth:`DVNRTrainer.train`).
     """
     key = jax.random.PRNGKey(0) if key is None else key
     k_init, k_train = jax.random.split(key)
@@ -309,7 +313,7 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
     n_steps = train_iterations(cfg, nvox) if steps is None else steps
     t0 = time.time()
     state, hist = trainer.train(state, vols, steps=n_steps, key=k_train,
-                                log_every=log_every)
+                                log_every=log_every, check_every=check_every)
     jax.block_until_ready(state.params)
     train_time_s = time.time() - t0
     metas = _meta_tuple(partitions)

@@ -11,6 +11,17 @@ import jax
 import jax.numpy as jnp
 
 
+def step_keys(key, step, n_partitions: int) -> jnp.ndarray:
+    """Per-partition RNG keys for one training step: fold in the step index,
+    then the partition index. The single source of key derivation — used by the
+    scan-fused chunk body (with a traced ``step``) and any single-step driver,
+    so both paths draw identical sample batches for the same (key, step, p).
+    """
+    base = jax.random.fold_in(key, step)
+    return jax.vmap(lambda p: jax.random.fold_in(base, p))(
+        jnp.arange(n_partitions))
+
+
 def sample_uniform(key, n: int) -> jnp.ndarray:
     return jax.random.uniform(key, (n, 3))
 

@@ -8,12 +8,18 @@ model parallelism, adaptive parameters, boundary loss, convergence masking.
   the DVNR dry-run cell).
 - per-partition early stopping is realized as convergence *masking* (SPMD ranks
   stay in lockstep; converged partitions freeze their weights).
+- the hot path is device-resident: :meth:`DVNRTrainer.train_chunk` rolls many
+  SPMD steps into one ``jax.lax.scan`` under a single ``jax.jit`` (donated
+  params/opt carry, per-step keys derived on device, loss trace accumulated on
+  device). Convergence is only *checked* on the host at chunk boundaries
+  (``check_every``), so a run may overshoot convergence by at most one chunk —
+  converged partitions stay frozen inside the chunk, so results are unchanged.
 """
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass
-from functools import partial
 from typing import Optional
 
 import jax
@@ -24,7 +30,7 @@ from repro import backends
 from repro.configs.dvnr import DVNRConfig
 from repro.core.inr import _decode_grid, _inr_apply, init_inr
 from repro.core.metrics import psnr_from_mses
-from repro.core.sampling import training_coords
+from repro.core.sampling import step_keys, training_coords
 from repro.data.volume import sample_trilinear
 from repro.optim.adamw import AdamW, OptConfig
 
@@ -83,7 +89,12 @@ class DVNRTrainer:
         self.backend = backends.resolve(impl)
         self.ghost = ghost
         self.adam = AdamW(_opt_config(cfg))
-        self._step_fn = self._build_step()
+        self._spmd_step = self._build_spmd_step()
+        self._step_fn = jax.jit(self._spmd_step, donate_argnums=(0, 1))
+        # n_steps -> jitted scan-fused chunk; LRU-bounded so a long-lived
+        # trainer fed varying step counts can't hoard compiled executables
+        self._chunk_fns: "OrderedDict[int, object]" = OrderedDict()
+        self._chunk_fns_max = 8
 
     @property
     def impl(self) -> str:
@@ -107,7 +118,7 @@ class DVNRTrainer:
                          jnp.ones((self.P,), bool), 0)
 
     # -------------------------- one SPMD step -------------------------- #
-    def _build_step(self):
+    def _build_spmd_step(self):
         cfg, ghost, backend = self.cfg, self.ghost, self.backend
         adam = self.adam
 
@@ -159,16 +170,92 @@ class DVNRTrainer:
 
             spmd_step = sharded
 
-        return jax.jit(spmd_step, donate_argnums=(0, 1))
+        return spmd_step
 
-    # -------------------------- driver --------------------------------- #
+    # -------------------------- scan-fused chunk ------------------------ #
+    def _chunk_fn(self, n_steps: int):
+        """Jitted ``n_steps``-long scan of the SPMD step (cached per length)."""
+        fn = self._chunk_fns.get(n_steps)
+        if fn is not None:
+            self._chunk_fns.move_to_end(n_steps)
+            return fn
+        spmd_step, P = self._spmd_step, self.P
+
+        def chunk(params, opt, vols, key, step0, active, loss_ma):
+            def body(carry, i):
+                params, opt, active, loss_ma = carry
+                keys = step_keys(key, step0 + i, P)
+                params, opt, loss, loss_ma, active = spmd_step(
+                    params, opt, vols, keys, active, loss_ma)
+                return (params, opt, active, loss_ma), loss
+
+            (params, opt, active, loss_ma), losses = jax.lax.scan(
+                body, (params, opt, active, loss_ma), jnp.arange(n_steps))
+            return params, opt, active, loss_ma, losses
+
+        fn = jax.jit(chunk, donate_argnums=(0, 1))
+        self._chunk_fns[n_steps] = fn
+        while len(self._chunk_fns) > self._chunk_fns_max:
+            self._chunk_fns.popitem(last=False)
+        return fn
+
+    def train_chunk(self, state: DVNRState, volumes, n_steps: int, *,
+                    key) -> tuple[DVNRState, jnp.ndarray]:
+        """Run ``n_steps`` training steps as ONE device program (no host round
+        trips): a ``jax.lax.scan`` over the SPMD step under a single ``jit``
+        with donated params/opt, per-step/per-partition keys derived inside the
+        scan, and the (n_steps, P) loss trace accumulated on device.
+
+        Returns the advanced state and the on-device loss trace; nothing is
+        transferred to the host until the caller inspects either.
+        """
+        n_steps = int(n_steps)
+        params, opt, active, loss_ma, losses = self._chunk_fn(n_steps)(
+            state.params, state.opt, volumes, key, jnp.int32(state.step),
+            state.active, state.loss_ma)
+        return DVNRState(params, opt, loss_ma, active,
+                         state.step + n_steps), losses
+
+    # -------------------------- drivers -------------------------------- #
     def train(self, state: DVNRState, volumes, *, steps: int, key,
-              log_every: int = 0) -> tuple[DVNRState, dict]:
-        """volumes: (P, nx+2g, ny+2g, nz+2g) pre-normalized partitions."""
+              log_every: int = 0, check_every: int = 0) -> tuple[DVNRState, dict]:
+        """Chunked training driver. volumes: (P, nx+2g, ny+2g, nz+2g)
+        pre-normalized partitions.
+
+        ``check_every`` is the chunk size — the granularity of host-side
+        convergence checks (and the only device→host syncs in the loop).
+        0 picks a default: the whole run as one chunk when early stopping is
+        off, else 64-step chunks (at most 63 extra masked steps vs per-step
+        checking; masked partitions are frozen, so quality is unaffected).
+        """
+        if steps <= 0:
+            return state, {"loss": [], "final_step": state.step}
+        if check_every <= 0:
+            check_every = steps if self.cfg.target_loss <= 0 else min(steps, 64)
+        losses, done = [], 0
+        while done < steps:
+            n = min(check_every, steps - done)
+            start = state.step
+            state, trace = self.train_chunk(state, volumes, n, key=key)
+            if log_every:
+                mean = np.asarray(trace.mean(axis=1))   # one transfer per chunk
+                losses += [(start + i + 1, float(mean[i])) for i in range(n)
+                           if (done + i + 1) % log_every == 0]
+            done += n
+            if self.cfg.target_loss > 0 and not bool(state.active.any()):
+                break
+        return state, {"loss": losses, "final_step": state.step}
+
+    def train_looped(self, state: DVNRState, volumes, *, steps: int, key,
+                     log_every: int = 0) -> tuple[DVNRState, dict]:
+        """The pre-chunk per-step driver: one jitted dispatch (plus host key
+        derivation and a convergence sync) per step. Kept as the parity
+        reference for :meth:`train_chunk` and as the dispatch-overhead
+        baseline in ``benchmarks/bench_train_loop.py``.
+        """
         losses = []
         for i in range(steps):
-            keys = jax.vmap(lambda p: jax.random.fold_in(
-                jax.random.fold_in(key, state.step), p))(jnp.arange(self.P))
+            keys = step_keys(key, state.step, self.P)
             params, opt, loss, loss_ma, active = self._step_fn(
                 state.params, state.opt, volumes, keys, state.active, state.loss_ma)
             state = DVNRState(params, opt, loss_ma, active, state.step + 1)
@@ -180,16 +267,23 @@ class DVNRTrainer:
 
     # -------------------------- evaluation ----------------------------- #
     def evaluate(self, state: DVNRState, volumes, owned_shape) -> dict:
-        """Decode each partition and compute PSNR vs the normalized reference."""
+        """Decode every partition (one vmapped program, no per-partition
+        Python loop) and compute PSNR vs the normalized reference; the MSE
+        reduction stays on device — a single host transfer at the end.
+
+        Peak memory is O(P * prod(owned_shape)) for the decoded grids — the
+        same order as the stacked ``volumes`` input that is already resident,
+        so batching trades a constant factor of memory for P-way batching of
+        the decode matmuls."""
         g = self.ghost
-        mses = []
-        for p in range(self.P):
-            params_p = jax.tree.map(lambda t: t[p], state.params)
-            dec = _decode_grid(self.cfg, params_p, owned_shape, self.backend)
-            if dec.ndim == 4:
-                dec = dec[..., 0]
-            ref = volumes[p][g:g + owned_shape[0], g:g + owned_shape[1],
-                             g:g + owned_shape[2]]
-            mses.append(float(jnp.mean(jnp.square(dec - ref))))
-        return {"psnr": float(psnr_from_mses(np.array(mses))),
-                "mse_per_partition": mses}
+        cfg, backend = self.cfg, self.backend
+        decs = jax.vmap(
+            lambda p: _decode_grid(cfg, p, owned_shape, backend))(state.params)
+        if decs.ndim == 5:                       # (P, nx, ny, nz, out_dim)
+            decs = decs[..., 0]
+        refs = jnp.asarray(volumes)[:, g:g + owned_shape[0],
+                                    g:g + owned_shape[1], g:g + owned_shape[2]]
+        mses = np.asarray(jnp.mean(jnp.square(decs - refs), axis=(1, 2, 3)),
+                          np.float64)
+        return {"psnr": float(psnr_from_mses(mses)),
+                "mse_per_partition": [float(m) for m in mses]}

@@ -44,3 +44,22 @@ def isosurface_action(value: DVNRValue, *, iso01: float = 0.5,
     """Per-partition marching tets on the INR; returns world-space points."""
     return api.isosurface(value.model, iso01, resolution=resolution,
                           backend=impl)
+
+
+def compress_action(value: DVNRValue, **codec_kw) -> list:
+    """Per-partition compressed weight blobs of the tick's DVNR. Reuses the
+    blobs already produced by the (chunk-trained) dvnr_node when available,
+    so demanding the action twice never recompresses."""
+    if value.compressed is not None and not codec_kw:
+        return value.compressed
+    return value.model.compress(**codec_kw)
+
+
+def pathlines_action(values, seeds, dt: float, *, substeps: int = 4,
+                     impl: backends.BackendLike = "ref"):
+    """Backward pathline tracing over a temporal window of velocity
+    DVNRValues in SlidingWindow buffer order (oldest -> newest, as produced
+    by ``window.value()``); reversed here to the newest-first order
+    :func:`repro.api.trace_pathlines` expects."""
+    return api.trace_pathlines([v.model for v in reversed(values)], seeds, dt,
+                               substeps=substeps, backend=impl)

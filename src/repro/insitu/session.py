@@ -43,9 +43,11 @@ class InSituSession:
 
     def __init__(self, sim_cfg: SimulationConfig, dvnr_cfg: DVNRConfig, *,
                  window: int = 8, impl="ref", compress: bool = True,
-                 cache_mode: str = "dvnr"):
+                 cache_mode: str = "dvnr", check_every: int = 0):
         """cache_mode: 'dvnr' (compressed models), 'raw' (uncompressed grids,
-        the paper's 'Data Cache' comparison), 'off' (baseline)."""
+        the paper's 'Data Cache' comparison), 'off' (baseline).
+        check_every: chunk size of the per-tick device-resident training loop
+        (0 = auto; see :meth:`repro.core.trainer.DVNRTrainer.train`)."""
         self.sim = SyntheticSimulation(sim_cfg)
         self.dvnr_cfg = dvnr_cfg
         self.rt = Runtime()
@@ -57,7 +59,7 @@ class InSituSession:
         self.dvnr = dvnr_node(self.rt, self.field_src, dvnr_cfg,
                               field_name=fname,
                               n_partitions=sim_cfg.n_ranks, impl=impl,
-                              compress=compress)
+                              compress=compress, check_every=check_every)
         if cache_mode == "dvnr":
             self.window = self.dvnr.window(window)
         elif cache_mode == "raw":

@@ -59,10 +59,10 @@ class DVNRValue:
 
 def _train_once(cfg: DVNRConfig, partitions, trainer: DVNRTrainer,
                 wcache: Optional[WeightCache], field_name: str,
-                key, compress: bool) -> DVNRValue:
+                key, compress: bool, check_every: int = 0) -> DVNRValue:
     cached = wcache.get(field_name, cfg) if wcache is not None else None
     model, info = api.train(partitions, cfg, trainer=trainer, key=key,
-                            cached_params=cached)
+                            cached_params=cached, check_every=check_every)
     if wcache is not None:
         wcache.put(field_name, cfg, model.params)
     blobs = model.compress() if compress else None
@@ -73,14 +73,20 @@ def dvnr_node(runtime: Runtime, field_node: Node, cfg: DVNRConfig, *,
               field_name: str, n_partitions: int, mesh=None,
               impl: backends.BackendLike = "ref",
               weight_caching: bool = True, compress: bool = True,
-              seed: int = 0, name: Optional[str] = None) -> Node:
-    """Reactive constructor: volume partitions -> trained DVNRValue (lazy)."""
+              seed: int = 0, name: Optional[str] = None,
+              check_every: int = 0) -> Node:
+    """Reactive constructor: volume partitions -> trained DVNRValue (lazy).
+
+    Each tick's training runs through the trainer's scan-fused chunk path;
+    ``check_every`` sets the convergence-check (chunk) granularity — the
+    per-tick training loop performs no other host round trips.
+    """
     trainer = DVNRTrainer(cfg, n_partitions, mesh=mesh, impl=impl)
     wcache = WeightCache() if (weight_caching and cfg.weight_caching) else None
 
     def construct(partitions):
         key = jax.random.fold_in(jax.random.PRNGKey(seed), runtime.tick)
         return _train_once(cfg, partitions, trainer, wcache, field_name, key,
-                           compress)
+                           compress, check_every)
 
     return Node(runtime, name or f"dvnr[{field_name}]", [field_node], construct)

@@ -1,6 +1,7 @@
 """The paper's central systems claim: DVNR training requires NO inter-process
-communication. We compile the distributed (shard_map) train step on 8 fake
-devices in a subprocess and assert the post-SPMD HLO contains zero collectives.
+communication. We compile the distributed (shard_map) train step AND the
+scan-fused multi-step chunk on 8 fake devices in a subprocess and assert the
+post-SPMD HLO of both contains zero collectives.
 """
 import subprocess
 import sys
@@ -15,8 +16,12 @@ SCRIPT = textwrap.dedent("""
     import numpy as np
     from repro.launch.mesh import build_mesh
     from repro.configs import dvnr as dvnr_cfg
+    from repro.core.sampling import step_keys
     from repro.core.trainer import DVNRTrainer
     from repro.data.volume import make_partition
+
+    COLL = (r"\\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)\\b")
 
     mesh = build_mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
     cfg = dvnr_cfg.SMOKE.replace(batch_size=256)
@@ -25,19 +30,19 @@ SCRIPT = textwrap.dedent("""
     vols = jnp.stack([p.normalized() for p in parts])
     tr = DVNRTrainer(cfg, n_partitions=P, mesh=mesh)
     state = tr.init(jax.random.PRNGKey(0))
-    keys = jax.vmap(lambda p: jax.random.fold_in(jax.random.PRNGKey(1), p))(jnp.arange(P))
-    lowered = tr._step_fn.lower(state.params, state.opt, vols, keys,
-                                state.active, state.loss_ma)
-    hlo = lowered.compile().as_text()
-    colls = re.findall(r"\\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
-                       r"collective-permute)\\b", hlo)
-    print("COLLECTIVES:", len(colls))
-    # also verify it actually runs and decreases loss on all 8 devices
-    for i in range(20):
-        out = tr._step_fn(state.params, state.opt, vols, keys, state.active,
-                          state.loss_ma)
-        state.params, state.opt = out[0], out[1]
-    print("LOSS:", float(out[2].mean()))
+    key = jax.random.PRNGKey(1)
+    keys = step_keys(key, 0, P)
+    hlo = tr._step_fn.lower(state.params, state.opt, vols, keys,
+                            state.active, state.loss_ma).compile().as_text()
+    print("COLLECTIVES:", len(re.findall(COLL, hlo)))
+    # the scanned multi-step chunk program must be collective-free too
+    hlo_chunk = tr._chunk_fn(5).lower(
+        state.params, state.opt, vols, key, jnp.int32(0), state.active,
+        state.loss_ma).compile().as_text()
+    print("CHUNK_COLLECTIVES:", len(re.findall(COLL, hlo_chunk)))
+    # also verify the chunk actually runs and decreases loss on all 8 devices
+    state, trace = tr.train_chunk(state, vols, 20, key=key)
+    print("LOSS:", float(trace[-1].mean()))
 """)
 
 
@@ -48,4 +53,5 @@ def test_distributed_train_step_has_no_collectives():
     lines = dict(l.split(": ") for l in r.stdout.strip().splitlines()
                  if ": " in l)
     assert int(lines["COLLECTIVES"]) == 0, r.stdout
+    assert int(lines["CHUNK_COLLECTIVES"]) == 0, r.stdout
     assert float(lines["LOSS"]) < 0.5

@@ -66,6 +66,37 @@ def test_insitu_cache_modes_memory_ordering():
     assert sizes["dvnr"] < sizes["raw"], sizes     # paper Fig. 12
 
 
+def test_compress_and_pathlines_actions():
+    """The two remaining documented action kinds: blob reuse semantics of
+    ``compress`` and the window-order contract of ``pathlines``."""
+    from repro import api
+    from repro.data.volume import make_partition
+    from repro.insitu.actions import compress_action, pathlines_action
+    from repro.reactive.dvnr import DVNRValue
+
+    cfg = SMOKE.replace(n_levels=2, log2_hashmap_size=8, n_neurons=8,
+                        n_hidden_layers=1, batch_size=128, out_dim=3)
+    values = []
+    for i, t in enumerate((0.40, 0.45)):          # oldest -> newest (buffer order)
+        parts = [make_partition("velocity", p, (1, 1, 2), (8, 8, 8), t)
+                 for p in range(2)]
+        model, info = api.train(parts, cfg, steps=4, key=jax.random.PRNGKey(i))
+        values.append(DVNRValue(model, info["train_time_s"], info["steps"]))
+
+    blobs = compress_action(values[-1])
+    assert len(blobs) == 2 and all(isinstance(b, bytes) for b in blobs)
+    values[-1].compressed = blobs
+    assert compress_action(values[-1]) is blobs   # cached blobs reused as-is
+
+    seeds = np.random.default_rng(0).uniform(0.3, 0.7, (4, 3)).astype(np.float32)
+    traj = pathlines_action(values, seeds, dt=0.05, substeps=2)
+    assert traj.shape == (2 * 2 + 1, 4, 3)
+    # buffer order is reversed into the newest-first order the api expects
+    ref = api.trace_pathlines([v.model for v in reversed(values)], seeds,
+                              0.05, substeps=2)
+    np.testing.assert_allclose(np.asarray(traj), np.asarray(ref), atol=1e-6)
+
+
 def test_ground_truth_pathlines_stay_in_domain():
     seeds = np.random.default_rng(0).uniform(0.2, 0.8, (16, 3)).astype(np.float32)
     traj = trace_ground_truth("velocity", [0.5, 0.4, 0.3], seeds, dt=0.05)

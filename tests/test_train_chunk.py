@@ -1,0 +1,123 @@
+"""Device-resident chunked training: the scan-fused ``train_chunk`` must be a
+drop-in replacement for N single-step dispatches — same params, same loss
+trace, same convergence mask — while syncing with the host only at chunk
+boundaries."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import dvnr as dvnr_cfg
+from repro.core.sampling import step_keys
+from repro.core.trainer import DVNRState, DVNRTrainer
+from repro.data.volume import make_partition
+
+CFG = dvnr_cfg.SMOKE.replace(batch_size=512, n_levels=2, log2_hashmap_size=8,
+                             n_neurons=8, n_hidden_layers=1, lrate=1e-2)
+
+
+def _vols(P=2, local=(8, 8, 8)):
+    grid = {1: (1, 1, 1), 2: (1, 1, 2), 4: (1, 2, 2)}[P]
+    parts = [make_partition("cloverleaf", p, grid, local, 0.3)
+             for p in range(P)]
+    return jnp.stack([p.normalized() for p in parts])
+
+
+def _copy(state: DVNRState) -> DVNRState:
+    c = jax.tree.map(lambda t: jnp.array(t, copy=True),
+                     (state.params, state.opt, state.loss_ma, state.active))
+    return DVNRState(*c, state.step)
+
+
+def _assert_tree_allclose(a, b, atol=1e-6):
+    leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(leaves_a) == len(leaves_b)
+    for x, y in zip(leaves_a, leaves_b):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+
+
+def test_step_keys_matches_nested_fold_in():
+    key = jax.random.PRNGKey(7)
+    ref = jax.vmap(lambda p: jax.random.fold_in(
+        jax.random.fold_in(key, 5), p))(jnp.arange(3))
+    np.testing.assert_array_equal(np.asarray(step_keys(key, 5, 3)),
+                                  np.asarray(ref))
+
+
+def test_train_chunk_matches_single_step_loop():
+    vols = _vols()
+    tr = DVNRTrainer(CFG, n_partitions=2)
+    st = tr.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    n = 7
+
+    looped, hist = tr.train_looped(_copy(st), vols, steps=n, key=key,
+                                   log_every=1)
+    chunked, trace = tr.train_chunk(_copy(st), vols, n, key=key)
+
+    assert chunked.step == looped.step == n
+    assert trace.shape == (n, 2)
+    _assert_tree_allclose(chunked.params, looped.params, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(chunked.loss_ma),
+                               np.asarray(looped.loss_ma), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(chunked.active),
+                                  np.asarray(looped.active))
+    # the on-device loss trace reproduces the per-step host logging
+    np.testing.assert_allclose(np.asarray(trace.mean(axis=1)),
+                               [v for _, v in hist["loss"]], atol=1e-5)
+
+
+def test_chunked_driver_matches_loop_and_logs():
+    vols = _vols()
+    tr = DVNRTrainer(CFG, n_partitions=2)
+    st = tr.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(2)
+
+    a, ha = tr.train_looped(_copy(st), vols, steps=10, key=key, log_every=3)
+    b, hb = tr.train(_copy(st), vols, steps=10, key=key, log_every=3,
+                     check_every=4)                      # uneven chunking
+    assert a.step == b.step == 10
+    _assert_tree_allclose(a.params, b.params, atol=1e-5)
+    assert [s for s, _ in ha["loss"]] == [s for s, _ in hb["loss"]]
+    np.testing.assert_allclose([v for _, v in ha["loss"]],
+                               [v for _, v in hb["loss"]], atol=1e-5)
+
+
+def test_convergence_mask_parity_at_check_every_1():
+    """With an immediately-reachable target loss both drivers must stop after
+    the same step and freeze identical params (check_every=1 == per-step)."""
+    cfg = CFG.replace(target_loss=10.0)                  # converges at step 1
+    vols = _vols()
+    tr = DVNRTrainer(cfg, n_partitions=2)
+    st = tr.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+
+    a, _ = tr.train_looped(_copy(st), vols, steps=6, key=key)
+    b, _ = tr.train(_copy(st), vols, steps=6, key=key, check_every=1)
+    assert a.step == b.step == 1                         # early stop, no overshoot
+    assert not bool(np.asarray(a.active).any())
+    np.testing.assert_array_equal(np.asarray(a.active), np.asarray(b.active))
+    _assert_tree_allclose(a.params, b.params, atol=1e-6)
+
+    # a coarser chunk overshoots by < one chunk but the frozen params match
+    c, _ = tr.train(_copy(st), vols, steps=6, key=key, check_every=4)
+    assert c.step == 4
+    _assert_tree_allclose(a.params, c.params, atol=1e-6)
+
+
+def test_vmapped_evaluate_matches_per_partition_reference():
+    vols = _vols()
+    tr = DVNRTrainer(CFG, n_partitions=2)
+    st = tr.init(jax.random.PRNGKey(0))
+    st, _ = tr.train(st, vols, steps=20, key=jax.random.PRNGKey(4))
+    ev = tr.evaluate(st, vols, (8, 8, 8))
+
+    from repro.core.inr import _decode_grid
+    g = tr.ghost
+    ref_mses = []
+    for p in range(2):
+        params_p = jax.tree.map(lambda t: t[p], st.params)
+        dec = _decode_grid(CFG, params_p, (8, 8, 8), tr.backend)
+        ref = vols[p][g:g + 8, g:g + 8, g:g + 8]
+        ref_mses.append(float(jnp.mean(jnp.square(dec - ref))))
+    np.testing.assert_allclose(ev["mse_per_partition"], ref_mses, rtol=1e-5)
+    assert np.isfinite(ev["psnr"])
