@@ -1,4 +1,5 @@
-"""Training-loop dispatch overhead: per-step driver vs scan-fused chunks.
+"""Training-loop dispatch overhead: per-step driver vs scan-fused chunks,
+plus the mixed-precision axis (bf16 vs f32 steps/sec).
 
 The paper's headline claim is compression *speed*; with small per-partition
 networks the wall clock of a Python-driven loop is dominated by per-step
@@ -7,9 +8,19 @@ sync), not the kernels. ``DVNRTrainer.train_chunk`` fuses the whole hot loop
 into one ``lax.scan`` device program; this benchmark quantifies the win as
 steps/sec at several chunk sizes and partition counts and records the
 trajectory in results/bench/train_loop.json for future perf PRs.
+
+The precision axis times the scan-fused chunk under the ``"f32"`` and
+``"bf16"`` policies at the compute-bound operating point (wide fused MLP —
+the tiny-cuda-nn regime the paper's GPU trainer lives in), where bf16's
+arithmetic win shows even on CPUs with native bf16 matmul units (AMX /
+AVX512-BF16); hosts without them emulate bf16 with converts, so there the
+ratio is a fallback-path health check rather than a speedup claim. Samples
+are interleaved f32/bf16 and reduced by median to reject shared-machine
+throttling noise.
 """
 from __future__ import annotations
 
+import statistics
 import time
 
 import jax
@@ -23,6 +34,15 @@ from repro.core.trainer import DVNRState, DVNRTrainer
 CFG = DVNRConfig(n_levels=2, n_features_per_level=2, log2_hashmap_size=7,
                  base_resolution=4, n_neurons=8, n_hidden_layers=1,
                  batch_size=128, boundary_lambda=0.15)
+
+# compute-bound regime for the precision axis: wide fused MLP + large batch
+# (hash bwd scatter and AdamW state are policy-independent; the MLP matmul
+# stack is where bf16 pays off), small table so optimizer streaming does not
+# swamp the arithmetic
+PRECISION_CFG = DVNRConfig(n_levels=4, n_features_per_level=8,
+                           log2_hashmap_size=12, base_resolution=8,
+                           n_neurons=256, n_hidden_layers=4,
+                           batch_size=16_384)
 
 GRIDS = {1: (1, 1, 1), 2: (1, 1, 2), 4: (1, 2, 2), 8: (2, 2, 2)}
 
@@ -58,6 +78,49 @@ def _time_chunked(tr, vols, steps, chunk) -> float:
     return time.perf_counter() - t0
 
 
+def _run_precision_axis(quick: bool) -> dict:
+    """bf16-vs-f32 steps/sec on the scan-fused chunk path (compute-bound
+    config, fused backend, interleaved samples, median-reduced)."""
+    steps, chunk = (16, 8) if quick else (48, 16)
+    repeats = 3 if quick else 5
+    parts, vols = make_volume("cloverleaf", GRIDS[1], (16, 16, 16))
+    policies = ("f32", "bf16")
+    trainers = {}
+    for pol in policies:
+        tr = DVNRTrainer(PRECISION_CFG.replace(precision=pol),
+                         n_partitions=1, impl="fused")
+        st, _ = tr.train(_fresh(tr), vols, steps=chunk,
+                         key=jax.random.PRNGKey(1), check_every=chunk)  # compile
+        jax.block_until_ready(st.params)
+        trainers[pol] = tr
+
+    samples: dict[str, list] = {pol: [] for pol in policies}
+    pair_ratios = []
+    for rep in range(repeats):
+        # back-to-back pairs: the per-pair ratio cancels machine-load drift
+        # that outlives any single sample
+        f32_sps = steps / _time_chunked(trainers["f32"], vols, steps, chunk)
+        bf16_sps = steps / _time_chunked(trainers["bf16"], vols, steps, chunk)
+        samples["f32"].append(f32_sps)
+        samples["bf16"].append(bf16_sps)
+        pair_ratios.append(bf16_sps / f32_sps)
+    rows = [{"policy": pol,
+             "steps_per_s": statistics.median(samples[pol]),
+             "steps_per_s_best": max(samples[pol]),
+             "samples": samples[pol]} for pol in policies]
+    ratio = statistics.median(pair_ratios)
+    for row in rows:
+        print(f"[train_loop] precision {row['policy']:>4} "
+              f"{row['steps_per_s']:>8.1f} steps/s (median of {repeats})")
+    print(f"[train_loop] bf16 vs f32: {ratio:.2f}x")
+    return {"config": {"batch_size": PRECISION_CFG.batch_size,
+                       "table_size": PRECISION_CFG.table_size,
+                       "n_neurons": PRECISION_CFG.n_neurons,
+                       "n_hidden_layers": PRECISION_CFG.n_hidden_layers,
+                       "steps": steps, "chunk": chunk, "backend": "fused"},
+            "rows": rows, "pair_ratios": pair_ratios, "bf16_vs_f32": ratio}
+
+
 def run(quick: bool = False) -> dict:
     Ps = [1, 4] if quick else [1, 2, 4, 8]
     chunks = [4, 32] if quick else [4, 16, 64, 256]
@@ -84,6 +147,7 @@ def run(quick: bool = False) -> dict:
         rec["best_speedup"] = max(c["speedup_vs_loop"] for c in rec["chunked"])
         out["runs"].append(rec)
     out["max_speedup"] = max(r["best_speedup"] for r in out["runs"])
+    out["precision"] = _run_precision_axis(quick)
     save_result("train_loop", out)
     return out
 

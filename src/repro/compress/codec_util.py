@@ -53,6 +53,16 @@ def decompress_bytes(data: bytes) -> bytes:
     return _zlib.decompress(data)
 
 
+def dtype_token(dtype: np.dtype) -> str:
+    """Serializable dtype tag. Extension float dtypes (bfloat16, float8 — the
+    ml_dtypes family jax arrays hand to numpy) stringify as opaque void tags
+    (``'<V2'``) through ``.str``, which ``np.dtype`` cannot resolve back;
+    their registered *name* can. Standard dtypes keep the byte-order-explicit
+    ``.str`` form for old-blob compatibility. ``np.dtype(token)`` inverts."""
+    dtype = np.dtype(dtype)
+    return dtype.name if dtype.kind == "V" else dtype.str
+
+
 def pack_codes(q: np.ndarray) -> dict:
     """Store integer codes in the narrowest dtype that fits."""
     lo, hi = (int(q.min()), int(q.max())) if q.size else (0, 0)

@@ -51,6 +51,13 @@ class DVNRConfig:
     # ----- III-E weight caching -----
     weight_caching: bool = True
 
+    # ----- mixed precision (repro.precision policy name) -----
+    # "f32" (full precision, default), "bf16" (bf16 params/compute, f32
+    # master + loss), "bf16_out", or an explicit "param/compute/output"
+    # triple. Kept as a string so configs serialize (msgpack) and hash as
+    # jit-static data; resolve with repro.precision.resolve_precision.
+    precision: str = "f32"
+
     @property
     def resolved_base_resolution(self) -> int:
         if self.base_resolution > 0:

@@ -37,17 +37,28 @@ def init_inr(cfg: DVNRConfig, key, in_dim: int = 3) -> dict:
 
 
 def _inr_apply(cfg: DVNRConfig, params: dict, coords: jnp.ndarray,
-               backend: backends.BackendLike = "ref") -> jnp.ndarray:
-    """coords (N,3) in [0,1]^3 -> (N, out_dim) in approximately [0,1]."""
+               backend: backends.BackendLike = "ref",
+               compute_dtype=None) -> jnp.ndarray:
+    """coords (N,3) in [0,1]^3 -> (N, out_dim) in approximately [0,1].
+
+    The output carries the params' (or ``compute_dtype``'s) dtype — bf16
+    params run the whole encode+MLP stack in bf16 with no silent upcast.
+    Coordinates stay f32 (hash-grid positions need the mantissa)."""
     b = backends.resolve(backend)
-    feats = hash_encode(coords, params["tables"], cfg.level_resolutions(), b)
-    return fused_mlp(feats, params["mlp"], b)
+    feats = hash_encode(coords, params["tables"], cfg.level_resolutions(), b,
+                        compute_dtype=compute_dtype)
+    return fused_mlp(feats, params["mlp"], b, compute_dtype=compute_dtype)
 
 
 def _decode_grid(cfg: DVNRConfig, params: dict, shape: Sequence[int],
                  backend: backends.BackendLike = "ref",
-                 chunk: int = 1 << 17) -> jnp.ndarray:
-    """Decode the INR back to a cell-centered grid (paper: compatibility path)."""
+                 chunk: int = 1 << 17, *, compute_dtype=None,
+                 out_dtype=None) -> jnp.ndarray:
+    """Decode the INR back to a cell-centered grid (paper: compatibility path).
+
+    ``compute_dtype`` runs the decode matmuls reduced (e.g. bf16 inference);
+    ``out_dtype`` casts the decoded grid (independent knobs: a bf16 decode can
+    still hand f32 to downstream consumers, and vice versa)."""
     b = backends.resolve(backend)
     nx, ny, nz = shape
     xs = (jnp.arange(nx) + 0.5) / nx
@@ -57,8 +68,11 @@ def _decode_grid(cfg: DVNRConfig, params: dict, shape: Sequence[int],
     coords = jnp.stack([X, Y, Z], -1).reshape(-1, 3)
     outs = []
     for i in range(0, coords.shape[0], chunk):
-        outs.append(_inr_apply(cfg, params, coords[i:i + chunk], b))
+        outs.append(_inr_apply(cfg, params, coords[i:i + chunk], b,
+                               compute_dtype=compute_dtype))
     out = jnp.concatenate(outs, 0)
+    if out_dtype is not None:
+        out = out.astype(jnp.dtype(out_dtype))
     if cfg.out_dim == 1:
         return out.reshape(nx, ny, nz)
     return out.reshape(nx, ny, nz, cfg.out_dim)

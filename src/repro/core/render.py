@@ -92,8 +92,11 @@ def apply_tf(values, tf_table):
 def render_partition(cfg: DVNRConfig, params, origin, extent, vrange, grange,
                      origins, dirs, tf_table, *, n_samples: int = 64,
                      density: float = 50.0,
-                     impl: backends.BackendLike = "ref"):
-    """Ray-march one partition's INR. Returns (rgba (R,4), depth (R,))."""
+                     impl: backends.BackendLike = "ref", compute_dtype=None):
+    """Ray-march one partition's INR. Returns (rgba (R,4), depth (R,)).
+
+    ``compute_dtype`` runs the INR inference stage reduced (bf16 decode);
+    the transfer-function / compositing math stays in the ray dtype (f32)."""
     backend = backends.resolve(impl)
     lo = jnp.asarray(origin, jnp.float32)
     hi = lo + jnp.asarray(extent, jnp.float32)
@@ -104,17 +107,21 @@ def render_partition(cfg: DVNRConfig, params, origin, extent, vrange, grange,
     pos = origins[:, None] + ts[..., None] * dirs[:, None]              # (R,S,3)
     local = (pos - lo) / (hi - lo)
     R, S = ts.shape
-    v = _inr_apply(cfg, params, local.reshape(-1, 3), backend).reshape(R, S)
-    # de-normalize local prediction, then re-normalize to the GLOBAL value range
+    v = _inr_apply(cfg, params, local.reshape(-1, 3), backend,
+                   compute_dtype=compute_dtype).reshape(R, S)
+    # de-normalize local prediction, then re-normalize to the GLOBAL value
+    # range (f32 — the bf16 path promotes here, before the transfer function)
     vmin, vmax = vrange
     gmin, gmax = grange
-    raw = v * (vmax - vmin) + vmin
+    raw = v.astype(jnp.float32) * (vmax - vmin) + vmin
     vg = (raw - gmin) / jnp.maximum(gmax - gmin, 1e-12)
     rgba = apply_tf(vg, tf_table)                                       # (R,S,4)
     alpha = 1.0 - jnp.exp(-rgba[..., 3] * density * dt[:, None])
     rgba = jnp.concatenate([rgba[..., :3], alpha[..., None]], -1)
     rgba = jnp.where(hit[:, None, None], rgba, 0.0)
-    out = composite(rgba, backend)
+    # the (R,S,4) sample buffer is the largest render intermediate — the
+    # reduced policy composites it in compute_dtype (bf16 halves its traffic)
+    out = composite(rgba, backend, compute_dtype=compute_dtype)
     depth = jnp.where(hit, t0, jnp.inf)
     return out, depth
 
@@ -267,7 +274,8 @@ def render_distributed(cfg, stacked_params, parts_meta, cam: Camera,
                        width: int, height: int, grange, *, mesh=None,
                        n_samples: int = 64,
                        impl: backends.BackendLike = "ref",
-                       tf_table: Optional[jnp.ndarray] = None):
+                       tf_table: Optional[jnp.ndarray] = None,
+                       compute_dtype=None, out_dtype=None):
     """Render P partitions as ONE vmapped program (no per-partition Python
     loop) and composite. parts_meta: list of dicts with origin/extent/vmin/vmax
     per partition (host metadata, batched into (P,·) arrays here).
@@ -287,8 +295,12 @@ def render_distributed(cfg, stacked_params, parts_meta, cam: Camera,
     def one(params, lo, ext, vr):
         return render_partition(cfg, params, lo, ext, (vr[0], vr[1]), grange,
                                 origins, dirs, tf_table,
-                                n_samples=n_samples, impl=backend)
+                                n_samples=n_samples, impl=backend,
+                                compute_dtype=compute_dtype)
 
     images, depths = jax.vmap(one)(stacked_params, los, exts, vrs)
     out = composite_depth_sort(images, depths)
+    # contract: the image is f32 unless the caller explicitly asks otherwise —
+    # a reduced compute_dtype must not leak into the returned frame
+    out = out.astype(jnp.float32 if out_dtype is None else jnp.dtype(out_dtype))
     return out.reshape(height, width, 4)

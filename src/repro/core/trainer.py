@@ -14,6 +14,10 @@ model parallelism, adaptive parameters, boundary loss, convergence masking.
   device). Convergence is only *checked* on the host at chunk boundaries
   (``check_every``), so a run may overshoot convergence by at most one chunk —
   converged partitions stay frozen inside the chunk, so results are unchanged.
+- mixed precision (``DVNRConfig.precision``, see :mod:`repro.precision`):
+  under the ``"bf16"`` policy the scan carry holds bf16 params/activations
+  while AdamW keeps f32 master params and moments and the L1 loss is reduced
+  in f32; coordinates and the loss trace stay f32.
 """
 from __future__ import annotations
 
@@ -33,6 +37,7 @@ from repro.core.metrics import psnr_from_mses
 from repro.core.sampling import step_keys, training_coords
 from repro.data.volume import sample_trilinear
 from repro.optim.adamw import AdamW, OptConfig
+from repro.precision import Precision, resolve_precision
 
 
 # --------------------------------------------------------------------------- #
@@ -57,7 +62,7 @@ def adaptive_config(cfg: DVNRConfig, nvox_local: int, nvox_global: int) -> DVNRC
     return cfg.replace(log2_hashmap_size=int(round(math.log2(t))), base_resolution=r0)
 
 
-def _opt_config(cfg: DVNRConfig) -> OptConfig:
+def _opt_config(cfg: DVNRConfig, prec: Precision) -> OptConfig:
     return OptConfig(
         lr=cfg.lrate,
         beta1=cfg.adam_beta1, beta2=cfg.adam_beta2, eps=cfg.adam_eps,
@@ -65,6 +70,7 @@ def _opt_config(cfg: DVNRConfig) -> OptConfig:
         schedule="exp" if cfg.lrate_decay > 0 else "constant",
         decay_rate=0.33, decay_steps=max(cfg.lrate_decay, 1),
         clip_norm=0.0,
+        master_dtype=prec.master_dtype if prec.needs_master else "",
     )
 
 
@@ -88,7 +94,14 @@ class DVNRTrainer:
         self.mesh = mesh
         self.backend = backends.resolve(impl)
         self.ghost = ghost
-        self.adam = AdamW(_opt_config(cfg))
+        self.precision = resolve_precision(cfg.precision)
+        self.backend.require_dtype(self.precision.param_dtype, "param")
+        self.backend.require_dtype(self.precision.compute_dtype, "compute")
+        # None = full-f32 policy: skip the (noop) casts entirely so the traced
+        # program is unchanged from the pre-precision stack
+        self._compute_dtype = (None if self.precision == resolve_precision("f32")
+                               else self.precision.compute_dtype)
+        self.adam = AdamW(_opt_config(cfg, self.precision))
         self._spmd_step = self._build_spmd_step()
         self._step_fn = jax.jit(self._spmd_step, donate_argnums=(0, 1))
         # n_steps -> jitted scan-fused chunk; LRU-bounded so a long-lived
@@ -101,18 +114,44 @@ class DVNRTrainer:
         """Backward-compat name of the resolved backend."""
         return self.backend.name
 
+    @staticmethod
+    def master_params(state: "DVNRState"):
+        """Highest-precision view of the trained params: the f32 AdamW master
+        when the policy keeps one, else the working params. This is what
+        warm-start caches (§III-E weight caching) should store — re-seeding
+        from the bf16 working copy would round the trajectory once per tick."""
+        if isinstance(state.opt, dict) and "mw" in state.opt:
+            return state.opt["mw"]
+        return state.params
+
     # -------------------------- init ---------------------------------- #
     def init(self, key, cached_params: Optional[dict] = None) -> DVNRState:
-        """Random init, or warm-start from cached weights (§III-E weight caching)."""
+        """Random init, or warm-start from cached weights (§III-E weight caching).
+
+        Params are carried in the policy's ``param_dtype`` (bf16 under the
+        mixed policy); AdamW's ``init`` adds the f32 master copy to the
+        optimizer state when the params are narrower."""
+        pdt = self.precision.param_jnp
         if cached_params is not None:
-            # defensive copy: the step fn donates its params buffers, which
-            # must not invalidate the caller's cached copy (temporal windows)
-            params = jax.tree.map(lambda x: jnp.array(x, copy=True),
+            # defensive copy (cast to the policy dtype on the way): the step fn
+            # donates its params buffers, which must not invalidate the
+            # caller's cached copy (temporal windows)
+            params = jax.tree.map(lambda x: jnp.array(x, pdt, copy=True),
                                   cached_params)
         else:
             keys = jax.random.split(key, self.P)
             params = jax.vmap(lambda k: init_inr(self.cfg, k))(keys)
+            if pdt != jnp.float32:
+                params = jax.tree.map(lambda t: t.astype(pdt), params)
         opt = jax.vmap(self.adam.init)(params)
+        if cached_params is not None and "mw" in opt:
+            # seed the f32 master straight from the cache, NOT from the
+            # bf16-rounded working copy adam.init derived — a warm start from
+            # a full-precision cache (see :meth:`master_params`) must not
+            # re-introduce one tick of bf16 rounding into the trajectory
+            wdt = jnp.dtype(self.adam.cfg.master_dtype)
+            opt["mw"] = jax.tree.map(lambda x: jnp.array(x, wdt, copy=True),
+                                     cached_params)
         return DVNRState(params, opt,
                          jnp.full((self.P,), jnp.inf, jnp.float32),
                          jnp.ones((self.P,), bool), 0)
@@ -120,7 +159,7 @@ class DVNRTrainer:
     # -------------------------- one SPMD step -------------------------- #
     def _build_spmd_step(self):
         cfg, ghost, backend = self.cfg, self.ghost, self.backend
-        adam = self.adam
+        adam, compute_dtype = self.adam, self._compute_dtype
 
         def one_partition(params, opt, vol, key, active, loss_ma):
             coords = training_coords(key, cfg.batch_size,
@@ -130,13 +169,17 @@ class DVNRTrainer:
                 target = target[:, None]
 
             def loss_fn(p):
-                pred = _inr_apply(cfg, p, coords, backend)
-                return jnp.mean(jnp.abs(pred - target))   # standard unweighted L1
+                # forward in the policy's compute dtype; the L1 reduction is
+                # always f32 (bf16 params promote against the f32 target)
+                pred = _inr_apply(cfg, p, coords, backend,
+                                  compute_dtype=compute_dtype)
+                return jnp.mean(jnp.abs(pred.astype(jnp.float32) - target))
 
             loss, grads = jax.value_and_grad(loss_fn)(params)
-            updates, opt = adam.update(grads, opt, params)
+            # master-weight AdamW step (f32 moments + master when params are
+            # bf16); converged partitions are frozen via the gate
             gate = active.astype(jnp.float32)
-            params = jax.tree.map(lambda p, u: p + gate * u, params, updates)
+            params, opt = adam.step(grads, opt, params, gate)
             loss_ma = jnp.where(jnp.isinf(loss_ma), loss, 0.95 * loss_ma + 0.05 * loss)
             if cfg.target_loss > 0:
                 active = active & (loss_ma > cfg.target_loss)
@@ -266,10 +309,17 @@ class DVNRTrainer:
         return state, {"loss": losses, "final_step": state.step}
 
     # -------------------------- evaluation ----------------------------- #
-    def evaluate(self, state: DVNRState, volumes, owned_shape) -> dict:
+    def evaluate(self, state: DVNRState, volumes, owned_shape, *,
+                 out_dtype=None) -> dict:
         """Decode every partition (one vmapped program, no per-partition
         Python loop) and compute PSNR vs the normalized reference; the MSE
         reduction stays on device — a single host transfer at the end.
+
+        The decode runs in the trainer's compute dtype (bf16 under the mixed
+        policy — evaluation then measures the quality of the reduced-precision
+        inference path, which is what ships); ``out_dtype`` overrides the
+        decoded-grid dtype (default: the policy's ``output_dtype``). The MSE
+        reduction itself is always f32.
 
         Peak memory is O(P * prod(owned_shape)) for the decoded grids — the
         same order as the stacked ``volumes`` input that is already resident,
@@ -277,8 +327,11 @@ class DVNRTrainer:
         the decode matmuls."""
         g = self.ghost
         cfg, backend = self.cfg, self.backend
+        odt = self.precision.output_dtype if out_dtype is None else out_dtype
         decs = jax.vmap(
-            lambda p: _decode_grid(cfg, p, owned_shape, backend))(state.params)
+            lambda p: _decode_grid(cfg, p, owned_shape, backend,
+                                   compute_dtype=self._compute_dtype,
+                                   out_dtype=odt))(state.params)
         if decs.ndim == 5:                       # (P, nx, ny, nz, out_dim)
             decs = decs[..., 0]
         refs = jnp.asarray(volumes)[:, g:g + owned_shape[0],

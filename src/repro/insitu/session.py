@@ -43,11 +43,14 @@ class InSituSession:
 
     def __init__(self, sim_cfg: SimulationConfig, dvnr_cfg: DVNRConfig, *,
                  window: int = 8, impl="ref", compress: bool = True,
-                 cache_mode: str = "dvnr", check_every: int = 0):
+                 cache_mode: str = "dvnr", check_every: int = 0,
+                 precision=None):
         """cache_mode: 'dvnr' (compressed models), 'raw' (uncompressed grids,
         the paper's 'Data Cache' comparison), 'off' (baseline).
         check_every: chunk size of the per-tick device-resident training loop
-        (0 = auto; see :meth:`repro.core.trainer.DVNRTrainer.train`)."""
+        (0 = auto; see :meth:`repro.core.trainer.DVNRTrainer.train`).
+        precision: mixed-precision policy override for per-tick training
+        (e.g. "bf16"; see :mod:`repro.precision`)."""
         self.sim = SyntheticSimulation(sim_cfg)
         self.dvnr_cfg = dvnr_cfg
         self.rt = Runtime()
@@ -59,7 +62,8 @@ class InSituSession:
         self.dvnr = dvnr_node(self.rt, self.field_src, dvnr_cfg,
                               field_name=fname,
                               n_partitions=sim_cfg.n_ranks, impl=impl,
-                              compress=compress, check_every=check_every)
+                              compress=compress, check_every=check_every,
+                              precision=precision)
         if cache_mode == "dvnr":
             self.window = self.dvnr.window(window)
         elif cache_mode == "raw":

@@ -7,9 +7,13 @@ from repro.kernels.composite import ref as _ref
 from repro.kernels.composite.kernel import composite_pallas
 
 
-def composite(rgba, impl: backends.BackendLike = "ref"):
-    """rgba (R, S, 4) front-to-back -> (R, 4)."""
+def composite(rgba, impl: backends.BackendLike = "ref", *, compute_dtype=None):
+    """rgba (R, S, 4) front-to-back -> (R, 4). Output carries the input dtype;
+    ``compute_dtype`` casts the sample buffer first (bf16 halves the largest
+    render intermediate)."""
     b = backends.resolve(impl)
+    if compute_dtype is not None:
+        rgba = rgba.astype(b.require_dtype(compute_dtype))
     if b.is_pallas:
         return composite_pallas(rgba, interpret=b.interpret)
     return _ref.composite_ref(rgba)

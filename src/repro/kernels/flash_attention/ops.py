@@ -28,9 +28,17 @@ def _fwd_impl(q, k, v, causal, window, backend):
 
 def flash_attention(q, k, v, causal: bool = True,
                     window: Optional[int] = None,
-                    impl: backends.BackendLike = "pallas"):
-    """q (B,Sq,Hq,dh); k,v (B,Sk,Hkv,dh) -> (B,Sq,Hq,dh)."""
-    return _flash_attention(q, k, v, causal, window, backends.resolve(impl))
+                    impl: backends.BackendLike = "pallas", *,
+                    compute_dtype=None):
+    """q (B,Sq,Hq,dh); k,v (B,Sk,Hkv,dh) -> (B,Sq,Hq,dh).
+
+    Output carries q's dtype (softmax stays f32 internally — the standard
+    mixed-precision attention recipe); ``compute_dtype`` casts q/k/v first."""
+    backend = backends.resolve(impl)
+    if compute_dtype is not None:
+        dt = backend.require_dtype(compute_dtype)
+        q, k, v = q.astype(dt), k.astype(dt), v.astype(dt)
+    return _flash_attention(q, k, v, causal, window, backend)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))

@@ -28,9 +28,19 @@ def _stack(weights):
     return w_in, w_hid, w_out, n_hidden
 
 
-def fused_mlp(x, weights, impl: backends.BackendLike = "ref"):
-    """x (N, D_in); weights [w_in, hidden..., w_out] -> (N, D_out)."""
-    return _fused_mlp(x, weights, backends.resolve(impl))
+def fused_mlp(x, weights, impl: backends.BackendLike = "ref", *,
+              compute_dtype=None):
+    """x (N, D_in); weights [w_in, hidden..., w_out] -> (N, D_out).
+
+    The output carries the input/weight dtype — both the jnp oracle and the
+    Pallas kernels run bf16 inputs without upcasting. ``compute_dtype`` casts
+    activations and weights before the matmul stack (differentiable casts)."""
+    backend = backends.resolve(impl)
+    if compute_dtype is not None:
+        dt = backend.require_dtype(compute_dtype)
+        x = x.astype(dt)
+        weights = [w.astype(dt) for w in weights]
+    return _fused_mlp(x, weights, backend)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))

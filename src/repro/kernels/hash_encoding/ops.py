@@ -23,9 +23,19 @@ from repro.kernels.hash_encoding.kernel import hash_encode_pallas
 
 
 def hash_encode(coords, tables, resolutions: Sequence[int],
-                impl: backends.BackendLike = "ref"):
-    """coords (N,3) in [0,1]; tables (L,T,F) -> (N, L*F). Differentiable in tables."""
-    return _hash_encode(coords, tables, resolutions, backends.resolve(impl))
+                impl: backends.BackendLike = "ref", *, compute_dtype=None):
+    """coords (N,3) in [0,1]; tables (L,T,F) -> (N, L*F). Differentiable in tables.
+
+    Output features carry the table dtype — every path (ref / fused / pallas)
+    accepts bf16 tables without upcasting. ``compute_dtype`` (a dtype or name)
+    casts the tables before encoding (a differentiable cast, so the cotangent
+    arrives in the caller's param dtype); coords stay float32 — grid
+    *positions* need the mantissa.
+    """
+    backend = backends.resolve(impl)
+    if compute_dtype is not None:
+        tables = tables.astype(backend.require_dtype(compute_dtype))
+    return _hash_encode(coords, tables, resolutions, backend)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))

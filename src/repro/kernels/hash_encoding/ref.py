@@ -105,5 +105,9 @@ def _combine_fused(idx, ww, tables):
     feats = jnp.take_along_axis(tables[:, :, None, :],
                                 idx.reshape(L, N * 8, 1, 1), axis=1)
     feats = feats.reshape(L, N, 8, F)
-    out = jnp.einsum("lnc,lncf->lnf", ww.astype(tables.dtype), feats)
-    return out.transpose(1, 0, 2).reshape(N, L * F)
+    # accumulate the 8-corner blend in f32 regardless of the table dtype
+    # (MXU-style bf16-in/f32-acc: XLA:CPU's bf16 contraction path is ~3x
+    # slower than f32 accumulate + downcast, and the f32 case is unchanged)
+    out = jnp.einsum("lnc,lncf->lnf", ww.astype(tables.dtype), feats,
+                     preferred_element_type=jnp.float32)
+    return out.astype(tables.dtype).transpose(1, 0, 2).reshape(N, L * F)

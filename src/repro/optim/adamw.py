@@ -4,6 +4,13 @@ The paper uses Adam with exponential learning-rate decay for DVNR training
 (beta1=0.9, beta2=0.999, eps=1e-8, weight decay 1e-9); the LM trainer shares the
 implementation. Moment dtypes are configurable: bf16 moments keep the 480B-param
 arctic cell within single-pod HBM (see EXPERIMENTS.md §Dry-run).
+
+Mixed precision: when ``OptConfig.master_dtype`` is set and the params are
+narrower (bf16 training), ``init`` stores a full-precision master copy in the
+optimizer state (``"mw"``); :meth:`AdamW.step` applies every update to the
+master and re-derives the working params by casting, so the optimizer
+trajectory never accumulates bf16 rounding (standard mixed-precision practice,
+cf. Instant-NGP-style INR trainers).
 """
 from __future__ import annotations
 
@@ -28,6 +35,9 @@ class OptConfig:
     total_steps: int = 10_000           # cosine horizon
     clip_norm: float = 1.0              # 0 = off
     moments_dtype: str = "float32"      # bf16 halves optimizer HBM (arctic/grok)
+    master_dtype: str = ""              # "" = params are their own master;
+                                        # "float32" keeps f32 master params
+                                        # when the working params are narrower
 
 
 def make_schedule(cfg: OptConfig):
@@ -66,14 +76,24 @@ class AdamW:
         self.cfg = cfg
         self.schedule = make_schedule(cfg)
 
+    def _wants_master(self, params) -> bool:
+        if not self.cfg.master_dtype:
+            return False
+        wdt = jnp.dtype(self.cfg.master_dtype)
+        return any(x.dtype != wdt for x in jax.tree.leaves(params))
+
     def init(self, params):
         mdt = jnp.dtype(self.cfg.moments_dtype)
         zeros = lambda p: jnp.zeros(p.shape, mdt)
-        return {
+        state = {
             "step": jnp.zeros((), jnp.int32),
             "m": jax.tree.map(zeros, params),
             "v": jax.tree.map(zeros, params),
         }
+        if self._wants_master(params):
+            wdt = jnp.dtype(self.cfg.master_dtype)
+            state["mw"] = jax.tree.map(lambda p: p.astype(wdt), params)
+        return state
 
     def update(self, grads, state, params):
         cfg = self.cfg
@@ -99,7 +119,31 @@ class AdamW:
         updates = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
         m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
         v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
-        return updates, {"step": step, "m": m, "v": v}
+        return updates, {**state, "step": step, "m": m, "v": v}
+
+    def step(self, grads, state, params, gate=None):
+        """One full optimizer step -> (new_params, new_state).
+
+        The master-weight path: moments and the delta are computed in f32
+        against the master copy in ``state["mw"]`` (when present), the
+        (optionally ``gate``-masked, for convergence freezing) update is
+        applied to the master, and the working params are re-derived by
+        casting — bf16 rounding never feeds back into the trajectory. Without
+        a master this is exactly ``params + gate * update``.
+        """
+        master = state.get("mw", params)
+        updates, state = self.update(grads, state, master)
+        if gate is None:
+            apply = lambda p, u: p + u
+        else:
+            apply = lambda p, u: p + (gate * u).astype(p.dtype)
+        master = jax.tree.map(apply, master, updates)
+        if "mw" in state:
+            state = {**state, "mw": master}
+            params = jax.tree.map(lambda w, p: w.astype(p.dtype), master, params)
+        else:
+            params = master
+        return params, state
 
     @staticmethod
     def apply_updates(params, updates):

@@ -1,0 +1,133 @@
+"""Mixed-precision policy for the DVNR stack.
+
+A :class:`Precision` names the three dtypes of the training/inference hot
+path, following the convention of Instant-NGP-style INR trainers (half-
+precision params + activations, full-precision optimizer, f32 loss):
+
+- ``param_dtype``   — dtype of the model params carried through the
+  ``lax.scan`` training chunk (the bf16 "working copy"; AdamW keeps an f32
+  master copy when this is narrower than ``master_dtype``);
+- ``compute_dtype`` — dtype the kernels (hash encode, fused MLP, composite,
+  attention) run in; params are cast to it per-apply when it differs;
+- ``output_dtype``  — dtype inference entry points (``decode_grid`` /
+  ``render`` / ``evaluate``) return by default.
+
+``Precision()`` is the mixed policy (``bf16/bf16/f32``). Policies are named
+by strings so they serialize through ``DVNRConfig`` (msgpack save/load) and
+hash as jit-static config:
+
+- ``"f32"`` / ``"float32"``            — everything float32 (the default
+  behavior of the pre-precision stack);
+- ``"bf16"`` / ``"mixed"``             — ``bf16/bf16/f32`` with f32 master
+  params and moments;
+- ``"bf16_out"``                       — ``bf16/bf16/bf16``: fully-reduced
+  inference decode as well;
+- ``"<param>/<compute>/<output>"``     — explicit triple, e.g.
+  ``"bf16/f32/f32"``; dtype aliases ``f32``/``bf16``/``f16`` are accepted.
+
+Coordinates are always generated in float32 — hash-grid *positions* need the
+mantissa; it is the table features and MLP matmuls that tolerate bf16.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+_DTYPE_ALIASES = {
+    "f32": "float32", "float32": "float32",
+    "bf16": "bfloat16", "bfloat16": "bfloat16",
+    "f16": "float16", "float16": "float16",
+}
+
+#: dtypes a kernel backend may declare support for (see repro.backends)
+SUPPORTED_DTYPES = ("float32", "bfloat16", "float16")
+
+
+def _canon_dtype(name: str) -> str:
+    try:
+        return _DTYPE_ALIASES[str(name).strip().lower()]
+    except KeyError:
+        raise ValueError(
+            f"unknown precision dtype {name!r}; one of {sorted(_DTYPE_ALIASES)}"
+        ) from None
+
+
+@dataclass(frozen=True)
+class Precision:
+    """param/compute/output dtype policy (default: bf16 train, f32 out)."""
+
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    output_dtype: str = "float32"
+    master_dtype: str = "float32"       # AdamW master params + f32 loss
+
+    def __post_init__(self):
+        object.__setattr__(self, "param_dtype", _canon_dtype(self.param_dtype))
+        object.__setattr__(self, "compute_dtype", _canon_dtype(self.compute_dtype))
+        object.__setattr__(self, "output_dtype", _canon_dtype(self.output_dtype))
+        object.__setattr__(self, "master_dtype", _canon_dtype(self.master_dtype))
+
+    # jnp dtype views ---------------------------------------------------- #
+    @property
+    def param_jnp(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def compute_jnp(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def output_jnp(self):
+        return jnp.dtype(self.output_dtype)
+
+    @property
+    def needs_master(self) -> bool:
+        """Params are narrower than the optimizer's reference precision."""
+        return self.param_dtype != self.master_dtype
+
+    @property
+    def name(self) -> str:
+        """Canonical policy string; ``resolve_precision(p.name) == p``.
+        Named policies keep their short name ("f32", "bf16", "bf16_out");
+        anything else serializes as the explicit triple."""
+        if self == F32:
+            return "f32"
+        if self == MIXED_BF16:
+            return "bf16"
+        if self == _NAMED["bf16_out"]:
+            return "bf16_out"
+        return "/".join(_SHORT[d] for d in
+                        (self.param_dtype, self.compute_dtype, self.output_dtype))
+
+
+_SHORT = {"float32": "f32", "bfloat16": "bf16", "float16": "f16"}
+
+F32 = Precision("float32", "float32", "float32")
+MIXED_BF16 = Precision()                       # bf16/bf16/f32, f32 master
+
+_NAMED = {
+    "f32": F32, "float32": F32, "fp32": F32, "": F32,
+    "bf16": MIXED_BF16, "bfloat16": MIXED_BF16, "mixed": MIXED_BF16,
+    "bf16_out": Precision(output_dtype="bfloat16"),
+}
+
+
+def resolve_precision(policy=None) -> Precision:
+    """None / policy name / "p/c/o" triple / Precision -> Precision."""
+    if policy is None:
+        return F32
+    if isinstance(policy, Precision):
+        return policy
+    key = str(policy).strip().lower()
+    if key in _NAMED:
+        return _NAMED[key]
+    if "/" in key:
+        parts = [p for p in key.split("/") if p]
+        if len(parts) != 3:
+            raise ValueError(
+                f"precision triple must be param/compute/output, got {policy!r}")
+        return Precision(*parts)
+    raise ValueError(
+        f"unknown precision policy {policy!r}; named policies: "
+        f"{sorted(k for k in _NAMED if k)} or a 'param/compute/output' triple")

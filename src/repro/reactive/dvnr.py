@@ -64,7 +64,11 @@ def _train_once(cfg: DVNRConfig, partitions, trainer: DVNRTrainer,
     model, info = api.train(partitions, cfg, trainer=trainer, key=key,
                             cached_params=cached, check_every=check_every)
     if wcache is not None:
-        wcache.put(field_name, cfg, model.params)
+        # cache the highest-precision view (f32 master under bf16 policies):
+        # the next tick's warm start seeds both working copy and master from
+        # it, so bf16 rounding never re-enters the cached trajectory
+        wcache.put(field_name, cfg,
+                   DVNRTrainer.master_params(info["state"]))
     blobs = model.compress() if compress else None
     return DVNRValue(model, info["train_time_s"], info["steps"], blobs)
 
@@ -74,13 +78,18 @@ def dvnr_node(runtime: Runtime, field_node: Node, cfg: DVNRConfig, *,
               impl: backends.BackendLike = "ref",
               weight_caching: bool = True, compress: bool = True,
               seed: int = 0, name: Optional[str] = None,
-              check_every: int = 0) -> Node:
+              check_every: int = 0, precision=None) -> Node:
     """Reactive constructor: volume partitions -> trained DVNRValue (lazy).
 
     Each tick's training runs through the trainer's scan-fused chunk path;
     ``check_every`` sets the convergence-check (chunk) granularity — the
-    per-tick training loop performs no other host round trips.
+    per-tick training loop performs no other host round trips. ``precision``
+    overrides ``cfg.precision`` (e.g. ``"bf16"`` for mixed-precision per-tick
+    training with f32 AdamW master state).
     """
+    if precision is not None:
+        from repro.precision import resolve_precision
+        cfg = cfg.replace(precision=resolve_precision(precision).name)
     trainer = DVNRTrainer(cfg, n_partitions, mesh=mesh, impl=impl)
     wcache = WeightCache() if (weight_caching and cfg.weight_caching) else None
 

@@ -1,0 +1,285 @@
+"""Mixed-precision policy: resolution/serialization, master-weight AdamW,
+dtype-aware kernel entry points (no silent f32 upcasts), and the tentpole
+quality gate — bf16 chunked training lands within 1 dB PSNR of f32 on the
+quickstart (cloverleaf) volume."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs import dvnr as dvnr_cfg
+from repro.core.trainer import DVNRTrainer
+from repro.data.volume import make_partition
+from repro.optim.adamw import AdamW, OptConfig
+from repro.precision import F32, MIXED_BF16, Precision, resolve_precision
+
+CFG = dvnr_cfg.SMOKE.replace(batch_size=512, n_levels=2, log2_hashmap_size=8,
+                             n_neurons=8, n_hidden_layers=1, lrate=1e-2)
+
+
+def _parts(P=2, local=(16, 16, 16), kind="cloverleaf"):
+    grid = {1: (1, 1, 1), 2: (1, 1, 2), 4: (1, 2, 2)}[P]
+    return [make_partition(kind, p, grid, local, 0.35) for p in range(P)]
+
+
+# --------------------------------------------------------------------------- #
+# policy resolution
+# --------------------------------------------------------------------------- #
+def test_resolve_precision_named_and_triple():
+    assert resolve_precision(None) == F32
+    assert resolve_precision("f32") == F32
+    assert resolve_precision("bf16") == MIXED_BF16
+    assert resolve_precision("mixed") == MIXED_BF16
+    p = resolve_precision("bf16/f32/f32")
+    assert (p.param_dtype, p.compute_dtype, p.output_dtype) == \
+        ("bfloat16", "float32", "float32")
+    # Precision() IS the mixed default: bf16 train, f32 out, f32 master
+    d = Precision()
+    assert (d.param_dtype, d.compute_dtype, d.output_dtype) == \
+        ("bfloat16", "bfloat16", "float32")
+    assert d.needs_master and not F32.needs_master
+    # canonical names round-trip
+    assert resolve_precision(MIXED_BF16.name) == MIXED_BF16
+    assert resolve_precision(F32.name) == F32
+    with pytest.raises(ValueError):
+        resolve_precision("int8")
+
+
+def test_precision_survives_config_save_load(tmp_path):
+    cfg = CFG.replace(precision="bf16")
+    model = api.DVNRModel.init(cfg, jax.random.PRNGKey(0))
+    path = tmp_path / "m.msgpack"
+    model.save(path)
+    loaded = api.load(path)
+    assert loaded.cfg.precision == "bf16"
+
+
+def test_bf16_params_save_load_roundtrip(tmp_path):
+    """bf16-trained params serialize dtype-exact (the '<V2' numpy tag of
+    extension dtypes must not leak into the msgpack payload)."""
+    cfg = CFG.replace(precision="bf16")
+    tr = DVNRTrainer(cfg, n_partitions=2)
+    st = tr.init(jax.random.PRNGKey(0))
+    model = api.DVNRModel(cfg, st.params)
+    path = tmp_path / "bf16.msgpack"
+    model.save(path)
+    loaded = api.load(path)
+    assert loaded.params["tables"].dtype == jnp.bfloat16
+    for a, b in zip(jax.tree.leaves(model.params),
+                    jax.tree.leaves(loaded.params)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# --------------------------------------------------------------------------- #
+# master-weight AdamW
+# --------------------------------------------------------------------------- #
+def test_adamw_master_weight_state_and_step():
+    params = {"w": jnp.full((4, 4), 0.5, jnp.bfloat16)}
+    grads = {"w": jnp.full((4, 4), 0.1, jnp.bfloat16)}
+    opt = AdamW(OptConfig(lr=1e-2, weight_decay=0.0, clip_norm=0.0,
+                          master_dtype="float32"))
+    state = opt.init(params)
+    assert state["mw"]["w"].dtype == jnp.float32
+    new_params, state = opt.step(grads, state, params)
+    assert new_params["w"].dtype == jnp.bfloat16
+    assert state["mw"]["w"].dtype == jnp.float32
+    # the working params are exactly the cast of the master
+    np.testing.assert_array_equal(
+        np.asarray(new_params["w"]),
+        np.asarray(state["mw"]["w"].astype(jnp.bfloat16)))
+    # and the master moved by a full f32 Adam step (~ -lr for constant grads)
+    delta = float(state["mw"]["w"][0, 0]) - 0.5
+    assert -1.5e-2 < delta < -0.5e-2
+
+
+def test_adamw_master_accumulates_sub_ulp_updates():
+    """Many updates smaller than one bf16 ulp must still move the params —
+    the motivating failure mode of bf16-only optimizer state."""
+    params = {"w": jnp.full((8,), 1.0, jnp.bfloat16)}      # ulp(1.0) = 2^-8
+    opt = AdamW(OptConfig(lr=1e-4, weight_decay=0.0, clip_norm=0.0,
+                          master_dtype="float32"))
+    state = opt.init(params)
+    grads = {"w": jnp.full((8,), 1.0, jnp.bfloat16)}
+    for _ in range(60):
+        params, state = opt.step(grads, state, params)
+    # 60 * ~1e-4 accumulated in the f32 master and visible at bf16 resolution
+    assert float(state["mw"]["w"][0]) < 1.0 - 4e-3
+    assert float(params["w"][0].astype(jnp.float32)) < 1.0
+
+
+def test_adamw_without_master_matches_legacy_update_path():
+    params = {"w": jnp.linspace(0, 1, 16, dtype=jnp.float32)}
+    grads = {"w": jnp.ones(16, jnp.float32) * 0.3}
+    legacy = AdamW(OptConfig(lr=3e-3))
+    stepped = AdamW(OptConfig(lr=3e-3))
+    ls = legacy.init(params)
+    ss = stepped.init(params)
+    assert "mw" not in ss
+    updates, ls = legacy.update(grads, ls, params)
+    p_legacy = jax.tree.map(lambda p, u: p + 1.0 * u, params, updates)
+    p_stepped, ss = stepped.step(grads, ss, params,
+                                 gate=jnp.float32(1.0))
+    np.testing.assert_array_equal(np.asarray(p_legacy["w"]),
+                                  np.asarray(p_stepped["w"]))
+
+
+def test_trainer_gate_freezes_bf16_params_and_master():
+    cfg = CFG.replace(precision="bf16", target_loss=10.0)  # converge at step 1
+    parts = _parts(local=(8, 8, 8))
+    vols = jnp.stack([p.normalized() for p in parts])
+    tr = DVNRTrainer(cfg, n_partitions=2)
+    st = tr.init(jax.random.PRNGKey(0))
+    st, _ = tr.train(st, vols, steps=6, key=jax.random.PRNGKey(1),
+                     check_every=2)
+    frozen = jax.tree.map(lambda t: np.asarray(t, np.float32),
+                          (st.params, st.opt["mw"]))
+    st2, _ = tr.train_chunk(st, vols, 3, key=jax.random.PRNGKey(2))
+    after = jax.tree.map(lambda t: np.asarray(t, np.float32),
+                         (st2.params, st2.opt["mw"]))
+    for a, b in zip(jax.tree.leaves(frozen), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(a, b)
+
+
+# --------------------------------------------------------------------------- #
+# dtype-aware kernels (no silent upcast)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["ref", "fused", "pallas"])
+def test_hash_encode_preserves_bf16(backend):
+    from repro.kernels.hash_encoding.ops import hash_encode
+    coords = jax.random.uniform(jax.random.PRNGKey(0), (64, 3))
+    tables = jax.random.uniform(jax.random.PRNGKey(1), (2, 64, 2),
+                                jnp.bfloat16, -1e-2, 1e-2)
+    out = hash_encode(coords, tables, (4, 8), backend)
+    assert out.dtype == jnp.bfloat16
+    # compute_dtype casts f32 tables down without touching the caller's array
+    out2 = hash_encode(coords, tables.astype(jnp.float32), (4, 8), backend,
+                       compute_dtype="bfloat16")
+    assert out2.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(out2, np.float32), atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_fused_mlp_preserves_bf16(backend):
+    from repro.kernels.fused_mlp.ops import fused_mlp
+    x = jax.random.normal(jax.random.PRNGKey(0), (32, 4), jnp.bfloat16)
+    ws = [jax.random.normal(jax.random.PRNGKey(i), s, jnp.bfloat16) * 0.1
+          for i, s in enumerate([(4, 8), (8, 8), (8, 1)])]
+    out = fused_mlp(x, ws, backend)
+    assert out.dtype == jnp.bfloat16
+    # bf16 gradients flow (no silent f32 leak into the cotangent)
+    g = jax.grad(lambda w: fused_mlp(x, w, backend)[0, 0].astype(jnp.float32))(ws)
+    assert all(gi.dtype == jnp.bfloat16 for gi in g)
+
+
+def test_composite_and_attention_preserve_bf16():
+    from repro.kernels.composite.ops import composite
+    from repro.kernels.flash_attention.ops import flash_attention
+    rgba = jax.random.uniform(jax.random.PRNGKey(0), (8, 4, 4), jnp.bfloat16)
+    assert composite(rgba, "ref").dtype == jnp.bfloat16
+    assert composite(rgba.astype(jnp.float32), "ref",
+                     compute_dtype="bfloat16").dtype == jnp.bfloat16
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 2, 8), jnp.bfloat16)
+    out = flash_attention(q, q, q, impl="ref")
+    assert out.dtype == jnp.bfloat16
+
+
+def test_unsupported_dtype_rejected():
+    from repro import backends
+    from repro.kernels.fused_mlp.ops import fused_mlp
+    b = backends.Backend(name="_f32only", kind="jnp", dtypes=("float32",),
+                         capabilities=frozenset({"fused_mlp"}))
+    x = jnp.zeros((4, 2))
+    ws = [jnp.zeros((2, 2)), jnp.zeros((2, 1))]
+    with pytest.raises(ValueError, match="does not support"):
+        fused_mlp(x, ws, b, compute_dtype="bfloat16")
+    with pytest.raises(ValueError, match="param dtype"):
+        DVNRTrainer(CFG.replace(precision="bf16"), 1, impl=b)
+
+
+# --------------------------------------------------------------------------- #
+# reduced-precision inference entry points
+# --------------------------------------------------------------------------- #
+def test_decode_render_evaluate_output_dtypes():
+    parts = _parts(local=(8, 8, 8))
+    model, info = api.train(parts, CFG, backend="ref", steps=8,
+                            key=jax.random.PRNGKey(0))
+    one = model.partition(0)
+    assert one.decode_grid((8, 8, 8)).dtype == jnp.float32
+    dec_bf16 = one.decode_grid((8, 8, 8), compute_dtype="bfloat16",
+                               out_dtype="bfloat16")
+    assert dec_bf16.dtype == jnp.bfloat16
+    assert one.apply(jnp.zeros((4, 3)),
+                     compute_dtype="bfloat16").dtype == jnp.bfloat16
+    img = api.render(model, width=16, height=16, n_samples=8,
+                     compute_dtype="bfloat16", out_dtype="bfloat16")
+    assert img.dtype == jnp.bfloat16 and img.shape == (16, 16, 4)
+    # the bf16 render sees the same field (tf/compositing stay f32 inside)
+    img32 = api.render(model, width=16, height=16, n_samples=8)
+    np.testing.assert_allclose(np.asarray(img, np.float32),
+                               np.asarray(img32), atol=0.05)
+    ev = info["trainer"].evaluate(info["state"],
+                                  jnp.stack([p.normalized() for p in parts]),
+                                  (8, 8, 8), out_dtype="bfloat16")
+    assert np.isfinite(ev["psnr"])
+
+
+def test_train_rejects_precision_conflicting_with_prebuilt_trainer():
+    """api.train must not silently train f32 under a stale trainer while the
+    returned model's cfg claims bf16."""
+    parts = _parts(local=(8, 8, 8))
+    tr = DVNRTrainer(CFG, n_partitions=2)          # f32 policy baked in
+    with pytest.raises(ValueError, match="conflicts with the pre-built"):
+        api.train(parts, CFG, trainer=tr, steps=2, precision="bf16",
+                  key=jax.random.PRNGKey(0))
+    # matching precision passes through fine
+    tr16 = DVNRTrainer(CFG.replace(precision="bf16"), n_partitions=2)
+    model, _ = api.train(parts, CFG.replace(precision="bf16"), trainer=tr16,
+                         steps=2, precision="bf16", key=jax.random.PRNGKey(0))
+    assert model.params["tables"].dtype == jnp.bfloat16
+
+
+def test_warm_start_seeds_master_from_full_precision_cache():
+    """Warm-starting a bf16 trainer from an f32 cache (what master_params
+    hands the weight cache) must seed the f32 master from the cache leaves,
+    not from their bf16-rounded working copy."""
+    cfg = CFG.replace(precision="bf16")
+    tr = DVNRTrainer(cfg, n_partitions=2)
+    st = tr.init(jax.random.PRNGKey(0))
+    vols = jnp.stack([p.normalized() for p in _parts(local=(8, 8, 8))])
+    st, _ = tr.train_chunk(st, vols, 20, key=jax.random.PRNGKey(1))
+    cached = jax.tree.map(lambda t: jnp.array(t, copy=True),
+                          DVNRTrainer.master_params(st))
+    assert cached["tables"].dtype == jnp.float32
+    st2 = tr.init(jax.random.PRNGKey(2), cached_params=cached)
+    # master == cache exactly (f32-tight), params are its bf16 cast
+    for a, b in zip(jax.tree.leaves(st2.opt["mw"]), jax.tree.leaves(cached)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(st2.params["tables"], np.float32),
+        np.asarray(cached["tables"].astype(jnp.bfloat16), np.float32))
+    # and the master genuinely differs from re-deriving it off bf16 params
+    rounded = jax.tree.leaves(jax.tree.map(
+        lambda t: t.astype(jnp.bfloat16).astype(jnp.float32), cached))
+    assert any(not np.array_equal(np.asarray(m), np.asarray(r))
+               for m, r in zip(jax.tree.leaves(st2.opt["mw"]), rounded))
+
+
+# --------------------------------------------------------------------------- #
+# tentpole quality gate: bf16 within 1 dB of f32 on the quickstart volume
+# --------------------------------------------------------------------------- #
+def test_bf16_training_psnr_within_1db_of_f32():
+    parts = _parts(P=2, local=(16, 16, 16), kind="cloverleaf")
+    vols = jnp.stack([p.normalized() for p in parts])
+    psnr = {}
+    for policy in ("f32", "bf16"):
+        cfg = CFG.replace(precision=policy)
+        tr = DVNRTrainer(cfg, n_partitions=2)
+        st = tr.init(jax.random.PRNGKey(0))
+        st, _ = tr.train(st, vols, steps=300, key=jax.random.PRNGKey(1))
+        psnr[policy] = tr.evaluate(st, vols, (16, 16, 16))["psnr"]
+    assert psnr["f32"] > 20.0, psnr          # training actually converged
+    assert abs(psnr["f32"] - psnr["bf16"]) <= 1.0, psnr

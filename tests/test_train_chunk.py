@@ -1,7 +1,13 @@
 """Device-resident chunked training: the scan-fused ``train_chunk`` must be a
 drop-in replacement for N single-step dispatches — same params, same loss
 trace, same convergence mask — while syncing with the host only at chunk
-boundaries."""
+boundaries. The bf16 mixed-precision policy must preserve both properties:
+chunk/loop parity (at bf16 resolution) and a collective-free scanned
+program."""
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -32,7 +38,9 @@ def _assert_tree_allclose(a, b, atol=1e-6):
     leaves_a, leaves_b = jax.tree.leaves(a), jax.tree.leaves(b)
     assert len(leaves_a) == len(leaves_b)
     for x, y in zip(leaves_a, leaves_b):
-        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol)
+        # f32 view so the comparison also handles bf16 leaves
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=atol)
 
 
 def test_step_keys_matches_nested_fold_in():
@@ -102,6 +110,78 @@ def test_convergence_mask_parity_at_check_every_1():
     c, _ = tr.train(_copy(st), vols, steps=6, key=key, check_every=4)
     assert c.step == 4
     _assert_tree_allclose(a.params, c.params, atol=1e-6)
+
+
+def test_bf16_chunk_matches_single_step_loop():
+    """The scanned bf16 program must replay the per-step bf16 driver: same
+    carry dtypes, same (f32) loss trace, params equal at bf16 resolution."""
+    cfg = CFG.replace(precision="bf16")
+    vols = _vols()
+    tr = DVNRTrainer(cfg, n_partitions=2)
+    st = tr.init(jax.random.PRNGKey(0))
+    assert st.params["tables"].dtype == jnp.bfloat16
+    assert st.opt["mw"]["tables"].dtype == jnp.float32   # f32 master params
+    key = jax.random.PRNGKey(1)
+    n = 7
+
+    looped, hist = tr.train_looped(_copy(st), vols, steps=n, key=key,
+                                   log_every=1)
+    chunked, trace = tr.train_chunk(_copy(st), vols, n, key=key)
+
+    assert chunked.step == looped.step == n
+    assert trace.dtype == jnp.float32                    # loss reduced in f32
+    assert chunked.params["tables"].dtype == jnp.bfloat16
+    # params live at bf16 resolution; masters and the trace are f32-tight
+    _assert_tree_allclose(chunked.params, looped.params, atol=1e-2)
+    _assert_tree_allclose(chunked.opt["mw"], looped.opt["mw"], atol=1e-4)
+    np.testing.assert_allclose(np.asarray(trace.mean(axis=1)),
+                               [v for _, v in hist["loss"]], atol=1e-4)
+
+
+_BF16_ZERO_COMM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import re
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.launch.mesh import build_mesh
+    from repro.configs import dvnr as dvnr_cfg
+    from repro.core.trainer import DVNRTrainer
+    from repro.data.volume import make_partition
+
+    COLL = (r"\\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)\\b")
+
+    mesh = build_mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    cfg = dvnr_cfg.SMOKE.replace(batch_size=256, precision="bf16")
+    P = 8
+    parts = [make_partition("s3d", p, (2, 2, 2), (8, 8, 8)) for p in range(P)]
+    vols = jnp.stack([p.normalized() for p in parts])
+    tr = DVNRTrainer(cfg, n_partitions=P, mesh=mesh)
+    state = tr.init(jax.random.PRNGKey(0))
+    assert state.params["tables"].dtype == jnp.bfloat16
+    key = jax.random.PRNGKey(1)
+    hlo_chunk = tr._chunk_fn(5).lower(
+        state.params, state.opt, vols, key, jnp.int32(0), state.active,
+        state.loss_ma).compile().as_text()
+    print("CHUNK_COLLECTIVES:", len(re.findall(COLL, hlo_chunk)))
+    state, trace = tr.train_chunk(state, vols, 20, key=key)
+    print("LOSS:", float(trace[-1].mean()))
+""")
+
+
+def test_bf16_scanned_chunk_has_no_collectives():
+    """Mixed precision must not reintroduce communication: the sharded bf16
+    scan program (bf16 carry + f32 master update) stays collective-free, like
+    the f32 program asserted by test_dvnr_zero_comm.py."""
+    r = subprocess.run([sys.executable, "-c", _BF16_ZERO_COMM_SCRIPT],
+                       capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, r.stdout + r.stderr
+    lines = dict(l.split(": ") for l in r.stdout.strip().splitlines()
+                 if ": " in l)
+    assert int(lines["CHUNK_COLLECTIVES"]) == 0, r.stdout
+    assert float(lines["LOSS"]) < 0.5
 
 
 def test_vmapped_evaluate_matches_per_partition_reference():
