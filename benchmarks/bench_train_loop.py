@@ -1,5 +1,6 @@
 """Training-loop dispatch overhead: per-step driver vs scan-fused chunks,
-plus the mixed-precision axis (bf16 vs f32 steps/sec).
+plus the mixed-precision axis (bf16 vs f32 steps/sec) and the fused-train-step
+axis (fuse_train_step on/off parity-of-speed gate + Pallas-interpret smoke).
 
 The paper's headline claim is compression *speed*; with small per-partition
 networks the wall clock of a Python-driven loop is dominated by per-step
@@ -78,6 +79,60 @@ def _time_chunked(tr, vols, steps, chunk) -> float:
     return time.perf_counter() - t0
 
 
+def _run_fused_axis(quick: bool) -> dict:
+    """Fused vs unfused train-step steps/sec on the scan-chunk path.
+
+    On CPU the measurable leg is the ref composition (`fuse_train_step="on"`
+    under the default backend) vs the unfused baseline — the same math, so the
+    paired-median ratio is a dispatch-path health gate (~1.0x expected; a
+    regression here means the fused dispatch added overhead). The single-kernel
+    win is TPU territory; the interpret-mode Pallas number recorded alongside
+    is a correctness-path smoke, not a speed claim.
+    """
+    steps, chunk = (16, 8) if quick else (64, 32)
+    repeats = 3 if quick else 5
+    parts, vols = make_volume("cloverleaf", GRIDS[1], (8, 8, 8))
+    # no pre-warm needed: _time_chunked compiles its chunk lengths untimed
+    trainers = {mode: DVNRTrainer(CFG.replace(fuse_train_step=mode),
+                                  n_partitions=1) for mode in ("off", "on")}
+
+    samples: dict[str, list] = {m: [] for m in trainers}
+    pair_ratios = []
+    for _ in range(repeats):
+        off_sps = steps / _time_chunked(trainers["off"], vols, steps, chunk)
+        on_sps = steps / _time_chunked(trainers["on"], vols, steps, chunk)
+        samples["off"].append(off_sps)
+        samples["on"].append(on_sps)
+        pair_ratios.append(on_sps / off_sps)
+    ratio = statistics.median(pair_ratios)
+
+    # interpret-mode Pallas smoke: the kernel path must run end to end
+    tr_p = DVNRTrainer(CFG.replace(fuse_train_step="on"), n_partitions=1,
+                       impl="pallas")
+    n_p = 4
+    st, _ = tr_p.train(_fresh(tr_p), vols, steps=n_p, key=jax.random.PRNGKey(1),
+                       check_every=n_p)                    # compile
+    jax.block_until_ready(st.params)
+    t0 = time.perf_counter()
+    st, _ = tr_p.train(_fresh(tr_p), vols, steps=n_p, key=jax.random.PRNGKey(1),
+                       check_every=n_p)
+    jax.block_until_ready(st.params)
+    pallas_sps = n_p / (time.perf_counter() - t0)
+
+    for mode in ("off", "on"):
+        print(f"[train_loop] fused={mode:>3} "
+              f"{statistics.median(samples[mode]):>8.1f} steps/s "
+              f"(median of {repeats})")
+    print(f"[train_loop] fused vs unfused (ref composition): {ratio:.2f}x; "
+          f"pallas-interpret {pallas_sps:.1f} steps/s")
+    return {"config": {"batch_size": CFG.batch_size, "steps": steps,
+                       "chunk": chunk, "backend": "ref"},
+            "rows": [{"mode": m, "steps_per_s": statistics.median(samples[m]),
+                      "samples": samples[m]} for m in ("off", "on")],
+            "pair_ratios": pair_ratios, "fused_vs_unfused": ratio,
+            "pallas_interpret_steps_per_s": pallas_sps}
+
+
 def _run_precision_axis(quick: bool) -> dict:
     """bf16-vs-f32 steps/sec on the scan-fused chunk path (compute-bound
     config, fused backend, interleaved samples, median-reduced)."""
@@ -148,6 +203,7 @@ def run(quick: bool = False) -> dict:
         out["runs"].append(rec)
     out["max_speedup"] = max(r["best_speedup"] for r in out["runs"])
     out["precision"] = _run_precision_axis(quick)
+    out["fused"] = _run_fused_axis(quick)
     save_result("train_loop", out)
     return out
 

@@ -18,7 +18,8 @@ SUITE = {
     "compressors": ("benchmarks.bench_compressors", "Fig. 7 / Table I"),
     "scaling": ("benchmarks.bench_scaling", "Fig. 6"),
     "train_loop": ("benchmarks.bench_train_loop",
-                   "dispatch overhead: loop vs scan-fused chunks"),
+                   "dispatch overhead: loop vs scan-fused chunks "
+                   "+ precision + fused-train-step axes"),
     "quality": ("benchmarks.bench_quality", "Fig. 8"),
     "model_compression": ("benchmarks.bench_model_compression",
                           "Table II / Fig. 16"),

@@ -297,7 +297,8 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
           cached_params=None, trainer: Optional[DVNRTrainer] = None,
           ghost: Optional[int] = None, volumes=None,
           log_every: int = 0, check_every: int = 0,
-          precision=None) -> Tuple[DVNRModel, dict]:
+          precision=None,
+          fuse_train_step: Optional[str] = None) -> Tuple[DVNRModel, dict]:
     """Train one INR per partition (zero-communication) and return the model.
 
     ``partitions``: sequence of :class:`~repro.data.volume.VolumePartition`
@@ -316,11 +317,26 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
     a ``"param/compute/output"`` triple, or a
     :class:`repro.precision.Precision`): the mixed ``"bf16"`` policy trains
     with bf16 params/activations and f32 AdamW master state.
+
+    ``fuse_train_step`` overrides ``cfg.fuse_train_step`` (``"auto"`` /
+    ``"on"`` / ``"off"``): whether each step runs as the fused
+    fwd+bwd+AdamW op (:mod:`repro.kernels.fused_train_step` — one Pallas
+    kernel on pallas backends) instead of the unfused value_and_grad step.
     """
     key = jax.random.PRNGKey(0) if key is None else key
     k_init, k_train = jax.random.split(key)
     P = len(partitions)
     g = partitions[0].ghost if ghost is None else ghost
+    if fuse_train_step is not None:
+        cfg = cfg.replace(fuse_train_step=fuse_train_step)
+        # compare resolved behavior, not flag strings: "auto" and "on" are the
+        # same program on a backend that advertises the op
+        if trainer is not None and \
+                trainer.fuse_train_step != trainer._resolve_fuse(fuse_train_step):
+            raise ValueError(
+                f"fuse_train_step={fuse_train_step!r} conflicts with the "
+                f"pre-built trainer's {trainer.cfg.fuse_train_step!r}; build "
+                f"the trainer with the desired cfg.fuse_train_step instead")
     if precision is not None:
         cfg = cfg.replace(precision=resolve_precision(precision).name)
         if trainer is not None and trainer.precision != resolve_precision(precision):

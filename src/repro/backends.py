@@ -23,14 +23,17 @@ is a frozen, hashable dataclass).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
 import jax
 
 from repro.precision import SUPPORTED_DTYPES
 
-# Op names used in capability sets.
-OPS = ("hash_encoding", "fused_mlp", "composite", "flash_attention")
+# Op names used in capability sets. "fused_train_step" is the whole-step op
+# (fwd + bwd + AdamW, see repro.kernels.fused_train_step): jnp/fused backends
+# implement it as the ref composition, pallas backends as one kernel.
+OPS = ("hash_encoding", "fused_mlp", "composite", "flash_attention",
+       "fused_train_step")
 
 
 @dataclass(frozen=True)
@@ -66,6 +69,20 @@ class Backend:
         """Does this backend natively implement ``op``? (Ops fall back to the
         jnp oracle when not — capability metadata, not a hard error.)"""
         return op in self.capabilities
+
+    @property
+    def fused_train_step(self) -> str:
+        """Which fused-train-step implementation this backend runs:
+        ``""`` (none — the trainer keeps the unfused step), ``"ref"`` (the
+        composition of this backend's own ops + AdamW), ``"pallas-interpret"``
+        or ``"pallas"`` (the single-kernel path). The trainer's
+        ``DVNRConfig.fuse_train_step="auto"`` enables fusion exactly when this
+        is non-empty."""
+        if not self.supports("fused_train_step"):
+            return ""
+        if self.is_pallas:
+            return "pallas-interpret" if self.interpret else "pallas"
+        return "ref"
 
     def supports_dtype(self, dtype) -> bool:
         """Does this backend's kernel family accept ``dtype`` compute natively
@@ -128,8 +145,36 @@ def get_backend(name: BackendLike) -> Backend:
             f"{sorted(set(_REGISTRY) | set(_ALIASES))}") from None
 
 
+_DEFAULT_OVERRIDE: Optional[str] = None
+
+
+def set_default_backend(name: Optional[str]) -> None:
+    """Pin what ``resolve("auto")`` returns (``None`` clears the pin).
+
+    This is how the CI backend matrix routes the whole test suite through one
+    kernel family: ``REPRO_BACKEND=pallas`` (consumed by ``tests/conftest.py``)
+    pins interpret-mode Pallas as the default backend, so every call site that
+    says ``backend="auto"`` exercises the Pallas kernels on every push.
+    """
+    global _DEFAULT_OVERRIDE
+    if name is not None:
+        key = _ALIASES.get(name, name)
+        if key == "auto":
+            raise ValueError("cannot pin the default backend to 'auto'")
+        backend = get_backend(key)             # validate eagerly
+        if not backend.available():
+            raise ValueError(
+                f"cannot pin default backend {key!r}: not available on "
+                f"platform {jax.default_backend()!r}")
+        name = key
+    _DEFAULT_OVERRIDE = name
+
+
 def resolve_auto(platform: str | None = None) -> Backend:
-    """Highest-priority backend available on the current (or given) platform."""
+    """Highest-priority backend available on the current (or given) platform;
+    a :func:`set_default_backend` pin overrides the priority ranking."""
+    if _DEFAULT_OVERRIDE is not None:
+        return _REGISTRY[_DEFAULT_OVERRIDE]
     cands = [b for b in _REGISTRY.values() if b.available(platform)]
     if not cands:
         raise RuntimeError("no backend available for platform "
@@ -157,7 +202,7 @@ register_backend(Backend(
     name="fused", kind="fused",
     description="jnp with fused corner-gather hash encoding (training fast "
                 "path); ops without a fused variant fall back to ref",
-    priority=5, capabilities=frozenset({"hash_encoding"}),
+    priority=5, capabilities=frozenset({"hash_encoding", "fused_train_step"}),
 ))
 
 register_backend(Backend(

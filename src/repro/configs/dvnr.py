@@ -58,6 +58,12 @@ class DVNRConfig:
     # jit-static data; resolve with repro.precision.resolve_precision.
     precision: str = "f32"
 
+    # ----- fused train step (repro.kernels.fused_train_step) -----
+    # "auto" (fuse when the backend advertises the fused_train_step
+    # capability — all built-in backends do), "on" (require it; error if the
+    # backend can't), "off" (always the unfused step — the parity baseline).
+    fuse_train_step: str = "auto"
+
     @property
     def resolved_base_resolution(self) -> int:
         if self.base_resolution > 0:

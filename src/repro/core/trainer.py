@@ -18,6 +18,14 @@ model parallelism, adaptive parameters, boundary loss, convergence masking.
   under the ``"bf16"`` policy the scan carry holds bf16 params/activations
   while AdamW keeps f32 master params and moments and the L1 loss is reduced
   in f32; coordinates and the loss trace stay f32.
+- fused train step (``DVNRConfig.fuse_train_step``, see
+  :mod:`repro.kernels.fused_train_step`): when the backend advertises the
+  ``fused_train_step`` capability (default ``"auto"`` = all built-ins), the
+  loss/grad/AdamW section of the SPMD step runs as ONE op — the ref
+  composition on jnp/fused backends, a single Pallas kernel (fwd +
+  hand-derived bwd + gated AdamW, partition axis as a grid dimension) on
+  pallas backends. ``"off"`` keeps the unfused value_and_grad step, which
+  remains the parity baseline (tests/test_fused_train_step.py).
 """
 from __future__ import annotations
 
@@ -36,6 +44,7 @@ from repro.core.inr import _decode_grid, _inr_apply, init_inr
 from repro.core.metrics import psnr_from_mses
 from repro.core.sampling import step_keys, training_coords
 from repro.data.volume import sample_trilinear
+from repro.kernels.fused_train_step.ops import fused_train_step
 from repro.optim.adamw import AdamW, OptConfig
 from repro.precision import Precision, resolve_precision
 
@@ -102,6 +111,7 @@ class DVNRTrainer:
         self._compute_dtype = (None if self.precision == resolve_precision("f32")
                                else self.precision.compute_dtype)
         self.adam = AdamW(_opt_config(cfg, self.precision))
+        self.fuse_train_step = self._resolve_fuse(cfg.fuse_train_step)
         self._spmd_step = self._build_spmd_step()
         self._step_fn = jax.jit(self._spmd_step, donate_argnums=(0, 1))
         # n_steps -> jitted scan-fused chunk; LRU-bounded so a long-lived
@@ -113,6 +123,17 @@ class DVNRTrainer:
     def impl(self) -> str:
         """Backward-compat name of the resolved backend."""
         return self.backend.name
+
+    def _resolve_fuse(self, mode: str) -> bool:
+        """``cfg.fuse_train_step`` ("auto"/"on"/"off") -> use the fused step?"""
+        if mode not in ("auto", "on", "off"):
+            raise ValueError(f"fuse_train_step must be 'auto', 'on' or 'off', "
+                             f"got {mode!r}")
+        advertised = bool(self.backend.fused_train_step)
+        if mode == "on" and not advertised:
+            raise ValueError(f"fuse_train_step='on' but backend "
+                             f"{self.backend.name!r} does not implement it")
+        return mode != "off" and advertised
 
     @staticmethod
     def master_params(state: "DVNRState"):
@@ -161,34 +182,62 @@ class DVNRTrainer:
         cfg, ghost, backend = self.cfg, self.ghost, self.backend
         adam, compute_dtype = self.adam, self._compute_dtype
 
-        def one_partition(params, opt, vol, key, active, loss_ma):
+        def sample_batch(vol, key):
             coords = training_coords(key, cfg.batch_size,
                                      cfg.boundary_lambda, cfg.boundary_sigma)
             target = sample_trilinear(vol, coords, ghost)
             if cfg.out_dim == 1 and target.ndim == 1:
                 target = target[:, None]
+            return coords, target
 
-            def loss_fn(p):
-                # forward in the policy's compute dtype; the L1 reduction is
-                # always f32 (bf16 params promote against the f32 target)
-                pred = _inr_apply(cfg, p, coords, backend,
-                                  compute_dtype=compute_dtype)
-                return jnp.mean(jnp.abs(pred.astype(jnp.float32) - target))
-
-            loss, grads = jax.value_and_grad(loss_fn)(params)
-            # master-weight AdamW step (f32 moments + master when params are
-            # bf16); converged partitions are frozen via the gate
-            gate = active.astype(jnp.float32)
-            params, opt = adam.step(grads, opt, params, gate)
-            loss_ma = jnp.where(jnp.isinf(loss_ma), loss, 0.95 * loss_ma + 0.05 * loss)
+        def mask_convergence(loss, loss_ma, active):
+            loss_ma = jnp.where(jnp.isinf(loss_ma), loss,
+                                0.95 * loss_ma + 0.05 * loss)
             if cfg.target_loss > 0:
                 active = active & (loss_ma > cfg.target_loss)
-            return params, opt, loss, loss_ma, active
+            return loss_ma, active
 
-        vstep = jax.vmap(one_partition)
+        if self.fuse_train_step:
+            # fused whole-step op (repro.kernels.fused_train_step): sampling is
+            # vmapped, then the stacked state goes through ONE op — the ref
+            # composition on jnp/fused backends, a single Pallas kernel (with
+            # the partition axis as a grid dimension) on pallas backends
+            resolutions = cfg.level_resolutions()
+            opt_cfg = adam.cfg
 
-        def spmd_step(params, opt, vols, keys, active, loss_ma):
-            return vstep(params, opt, vols, keys, active, loss_ma)
+            def base_step(params, opt, vols, keys, active, loss_ma):
+                coords, target = jax.vmap(sample_batch)(vols, keys)
+                params, opt, loss = fused_train_step(
+                    params, opt, coords, target,
+                    active.astype(jnp.float32), resolutions=resolutions,
+                    opt_cfg=opt_cfg, impl=backend,
+                    compute_dtype=compute_dtype)
+                loss_ma, active = mask_convergence(loss, loss_ma, active)
+                return params, opt, loss, loss_ma, active
+        else:
+            # unfused fallback (and the fused path's parity baseline):
+            # value_and_grad of the per-partition loss + AdamW, vmapped
+            def one_partition(params, opt, vol, key, active, loss_ma):
+                coords, target = sample_batch(vol, key)
+
+                def loss_fn(p):
+                    # forward in the policy's compute dtype; the L1 reduction
+                    # is always f32 (bf16 params promote vs the f32 target)
+                    pred = _inr_apply(cfg, p, coords, backend,
+                                      compute_dtype=compute_dtype)
+                    return jnp.mean(jnp.abs(pred.astype(jnp.float32) - target))
+
+                loss, grads = jax.value_and_grad(loss_fn)(params)
+                # master-weight AdamW step (f32 moments + master when params
+                # are bf16); converged partitions are frozen via the gate
+                gate = active.astype(jnp.float32)
+                params, opt = adam.step(grads, opt, params, gate)
+                loss_ma, active = mask_convergence(loss, loss_ma, active)
+                return params, opt, loss, loss_ma, active
+
+            base_step = jax.vmap(one_partition)
+
+        spmd_step = base_step
 
         if self.mesh is not None:
             from jax.experimental.shard_map import shard_map
@@ -204,7 +253,7 @@ class DVNRTrainer:
 
             def sharded(params, opt, vols, keys, active, loss_ma):
                 return shard_map(
-                    vstep, mesh=self.mesh,
+                    base_step, mesh=self.mesh,
                     in_specs=(spec_like(params), spec_like(opt), part, part,
                               part, part),
                     out_specs=(spec_like(params), spec_like(opt), part, part, part),

@@ -42,7 +42,9 @@ def _composite_kernel(rgba_ref, out_ref, acc_ref, trans_ref, *, n_s_blocks):
 
     @pl.when(j == n_s_blocks - 1)
     def _write():
-        out_ref[...] = jnp.concatenate([color, 1.0 - trans], axis=-1)
+        # the f32 scratch accumulation casts back down for bf16 inputs
+        out_ref[...] = jnp.concatenate([color, 1.0 - trans],
+                                       axis=-1).astype(out_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

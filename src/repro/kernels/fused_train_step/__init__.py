@@ -1,0 +1,15 @@
+"""Fused DVNR train step: hash encode + MLP forward, hand-derived backward,
+and the gated AdamW update as ONE kernel (the last layer of the dispatch-
+elimination arc: PR 2 fused the step loop, PR 3 made the carry bf16, this
+package fuses the step itself).
+
+- ``ops.fused_train_step`` — the dispatch entry point (stacked (P, ...) state).
+- ``ref.train_step_ref``   — composition of the existing kernels + AdamW via
+  ``jax.value_and_grad``; bit-identical to the unfused trainer step and the
+  parity oracle for the Pallas kernel.
+- ``kernel.fused_train_step_pallas`` — single Pallas kernel (interpret mode on
+  CPU, compiled on TPU).
+"""
+from repro.kernels.fused_train_step.ops import fused_train_step
+
+__all__ = ["fused_train_step"]

@@ -1,0 +1,288 @@
+"""Pallas kernel: one DVNR train step — fwd + hand-derived bwd + gated AdamW —
+as a SINGLE ``pallas_call`` (the tiny-cuda-nn "fully fused" training regime,
+translated to TPU blocking).
+
+Grid = (P partitions, N/BLOCK_N batch tiles), partition-major. Per partition:
+  - the hash tables, MLP weights, Adam moments (and f32 masters under the
+    mixed-precision policy) are pinned in VMEM for all batch tiles — one HBM
+    round trip per partition per step instead of one per op;
+  - each (BLOCK_N, 3) coordinate tile runs encode -> MLP -> L1 cotangent ->
+    MLP backward -> 8-corner scatter-add entirely in VMEM/VREGs, accumulating
+    f32 gradients into scratch across tiles (the TPU grid is sequential, so
+    ``+=`` accumulation is safe — the MXU-friendly replacement for CUDA's
+    atomics);
+  - the LAST tile of each partition applies the bias-corrected, gated AdamW
+    update in-kernel and writes the new params / moments / masters, so no
+    gradient or intermediate activation ever materializes in HBM.
+
+Mixed precision follows the stack's ``Precision`` policy: forward/backward
+matmuls run in the compute dtype (bf16 under ``"bf16"``), gradient
+accumulation and the optimizer update are f32, and the new working params are
+re-derived from the f32 master by casting — the exact sequence of
+:meth:`repro.optim.adamw.AdamW.step`.
+
+The schedule scalars (lr, bias corrections, convergence gate) arrive via
+scalar prefetch as a (P, 4) table — they depend on the traced step counter,
+which the scan-fused chunk advances on device.
+
+VMEM budget: params + m + v (+ master) + f32 grad scratch ~= 5 f32 copies of
+the per-partition model; the III-B adaptive rule keeps per-partition T at
+2^11..2^13 under strong scaling (<= ~2 MB at F=4), well inside the ~16 MB
+VMEM envelope. Giant-table offline configs (T=2^16+) need a table-sharded
+grid axis — a TPU-hardware follow-up, not reachable from the in situ path.
+Validated in interpret mode on CPU (the CI backend matrix runs it on every
+push).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_N = 512
+_P0, _P1, _P2 = 1, 2_654_435_761, 805_459_861
+
+
+def _encode_fwd(res_ref, coords, tables, cdt):
+    """Forward hash encoding for all L levels of one partition; returns the
+    (BN, L*F) feature block plus the (idx, ww) corner residuals the backward
+    scatter reuses (same residual trick as the ``fused`` backend)."""
+    L, T, F = tables.shape
+    feats, residuals = [], []
+    for l in range(L):
+        res = res_ref[l]
+        rf = res.astype(coords.dtype)
+        pos = coords * rf
+        lo = jnp.clip(jnp.floor(pos), 0,
+                      jnp.maximum(rf - 1, 0)).astype(jnp.int32)
+        w = pos - lo.astype(coords.dtype)
+        n_dense = (res + 1) * (res + 1) * (res + 1)
+        rp1 = (res + 1).astype(jnp.uint32)
+        acc = jnp.zeros((coords.shape[0], F), cdt)
+        idxs, wws = [], []
+        for dx in (0, 1):
+            for dy in (0, 1):
+                for dz in (0, 1):
+                    cx = (lo[:, 0] + dx).astype(jnp.uint32)
+                    cy = (lo[:, 1] + dy).astype(jnp.uint32)
+                    cz = (lo[:, 2] + dz).astype(jnp.uint32)
+                    dense = cx + rp1 * (cy + rp1 * cz)
+                    hashed = (cx * jnp.uint32(_P0)) ^ (cy * jnp.uint32(_P1)) \
+                        ^ (cz * jnp.uint32(_P2))
+                    idx = (jnp.where(n_dense <= T, dense, hashed)
+                           % jnp.uint32(T)).astype(jnp.int32)
+                    ww = (jnp.where(dx, w[:, 0], 1 - w[:, 0])
+                          * jnp.where(dy, w[:, 1], 1 - w[:, 1])
+                          * jnp.where(dz, w[:, 2], 1 - w[:, 2]))
+                    acc = acc + ww[:, None].astype(cdt) * jnp.take(
+                        tables[l].astype(cdt), idx, axis=0)
+                    idxs.append(idx)
+                    wws.append(ww)
+        feats.append(acc)
+        residuals.append((idxs, wws))
+    return jnp.concatenate(feats, axis=-1), residuals
+
+
+def _train_step_kernel(res_ref, sc_ref, coords_ref, target_ref, refs,
+                       g_tab, g_win, g_whid, g_wout, loss_acc,
+                       *, n_hidden, n_valid, b1, b2, eps, wd, cdt, has_master):
+    """refs: flat input/output refs, unpacked below (param/m/v[/mw] groups)."""
+    p = pl.program_id(0)
+    i = pl.program_id(1)
+    n_tiles = pl.num_programs(1)
+    (tab_ref, win_ref, whid_ref, wout_ref,
+     m_tab_ref, m_win_ref, m_whid_ref, m_wout_ref,
+     v_tab_ref, v_win_ref, v_whid_ref, v_wout_ref) = refs[:12]
+    refs = refs[12:]
+    if has_master:
+        mw_tab_ref, mw_win_ref, mw_whid_ref, mw_wout_ref = refs[:4]
+        refs = refs[4:]
+    (o_tab_ref, o_win_ref, o_whid_ref, o_wout_ref,
+     om_tab_ref, om_win_ref, om_whid_ref, om_wout_ref,
+     ov_tab_ref, ov_win_ref, ov_whid_ref, ov_wout_ref) = refs[:12]
+    refs = refs[12:]
+    if has_master:
+        omw_tab_ref, omw_win_ref, omw_whid_ref, omw_wout_ref = refs[:4]
+        refs = refs[4:]
+    (loss_ref,) = refs
+
+    @pl.when(i == 0)
+    def _reset():
+        g_tab[...] = jnp.zeros_like(g_tab)
+        g_win[...] = jnp.zeros_like(g_win)
+        g_whid[...] = jnp.zeros_like(g_whid)
+        g_wout[...] = jnp.zeros_like(g_wout)
+        loss_acc[...] = jnp.zeros_like(loss_acc)
+
+    coords = coords_ref[0]                            # (BN, 3) f32
+    target = target_ref[0]                            # (BN, D_out) f32
+    tables = tab_ref[0]                               # (L, T, F) param dtype
+    w_in = win_ref[0].astype(cdt)
+    w_hid = whid_ref[0].astype(cdt)
+    w_out = wout_ref[0].astype(cdt)
+    L, F = tables.shape[0], tables.shape[2]
+
+    # ---------------- forward (activations stay in VMEM/VREGs) ------------ #
+    x, residuals = _encode_fwd(res_ref, coords, tables, cdt)
+    acts = [jnp.maximum(x @ w_in, 0.0)]
+    for k in range(n_hidden - 1):                     # static unroll
+        acts.append(jnp.maximum(acts[-1] @ w_hid[k], 0.0))
+    pred = acts[-1] @ w_out                           # (BN, D_out)
+
+    # ------------- L1 loss + cotangent, masked past n_valid --------------- #
+    row = i * coords.shape[0] + jax.lax.broadcasted_iota(
+        jnp.int32, (coords.shape[0], 1), 0)
+    mask = (row < n_valid).astype(jnp.float32)
+    diff = pred.astype(jnp.float32) - target
+    loss_acc[0, 0] += jnp.sum(jnp.abs(diff) * mask)
+    g = (jnp.sign(diff) * mask / (n_valid * target.shape[1])).astype(cdt)
+
+    # ---------------- MLP backward (f32 grad accumulation) ----------------- #
+    g_wout[...] += (acts[-1].T @ g).astype(jnp.float32)
+    d = g @ w_out.T
+    for k in range(n_hidden - 2, -1, -1):
+        d = d * (acts[k + 1] > 0)
+        g_whid[k] += (acts[k].T @ d).astype(jnp.float32)
+        d = d @ w_hid[k].T
+    d = d * (acts[0] > 0)
+    g_win[...] += (x.T @ d).astype(jnp.float32)
+    d = d @ w_in.T                                    # (BN, L*F) feat cotangent
+
+    # -------- hash-encode backward: 8-corner combining scatter ------------- #
+    gt = g_tab[...]
+    for l in range(L):
+        gl = d[:, l * F:(l + 1) * F].astype(jnp.float32)
+        idxs, wws = residuals[l]
+        for idx, ww in zip(idxs, wws):
+            gt = gt.at[l, idx].add(ww.astype(jnp.float32)[:, None] * gl)
+    g_tab[...] = gt
+
+    # ------------- gated AdamW on the last tile of this partition ---------- #
+    @pl.when(i == n_tiles - 1)
+    def _adamw():
+        lr, bc1, bc2, gate = (sc_ref[p, 0], sc_ref[p, 1],
+                              sc_ref[p, 2], sc_ref[p, 3])
+
+        def upd(g32, m, v, master):
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            delta = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            if wd:
+                delta = delta + wd * master.astype(jnp.float32)
+            u = (-lr * delta).astype(master.dtype)
+            return master + (gate * u).astype(master.dtype), m32, v32
+
+        groups = [
+            (g_tab[...], m_tab_ref, v_tab_ref, tab_ref,
+             o_tab_ref, om_tab_ref, ov_tab_ref),
+            (g_win[...], m_win_ref, v_win_ref, win_ref,
+             o_win_ref, om_win_ref, ov_win_ref),
+            (g_whid[...], m_whid_ref, v_whid_ref, whid_ref,
+             o_whid_ref, om_whid_ref, ov_whid_ref),
+            (g_wout[...], m_wout_ref, v_wout_ref, wout_ref,
+             o_wout_ref, om_wout_ref, ov_wout_ref),
+        ]
+        masters = ([mw_tab_ref, mw_win_ref, mw_whid_ref, mw_wout_ref]
+                   if has_master else [grp[3] for grp in groups])
+        m_outs = ([omw_tab_ref, omw_win_ref, omw_whid_ref, omw_wout_ref]
+                  if has_master else [None] * 4)
+        for (g32, m_ref, v_ref, p_ref, o_ref, om_ref, ov_ref), mw_ref, omw_ref \
+                in zip(groups, masters, m_outs):
+            new_master, m32, v32 = upd(g32, m_ref[0], v_ref[0], mw_ref[0])
+            om_ref[0], ov_ref[0] = m32, v32
+            if has_master:
+                omw_ref[0] = new_master
+                o_ref[0] = new_master.astype(p_ref.dtype)
+            else:
+                o_ref[0] = new_master
+        loss_ref[0, 0] = loss_acc[0, 0] / (n_valid * target.shape[1])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_hidden", "compute_dtype", "beta1", "beta2",
+                              "eps", "weight_decay", "interpret"))
+def fused_train_step_pallas(coords, target, params, moments_m, moments_v,
+                            masters, scalars, resolutions, *, n_hidden: int,
+                            compute_dtype, beta1: float, beta2: float,
+                            eps: float, weight_decay: float,
+                            interpret: bool = True):
+    """One fused train step for P stacked partitions.
+
+    coords (P, N, 3) f32; target (P, N, D_out) f32; ``params`` / ``moments_m``
+    / ``moments_v`` / ``masters`` are dicts with keys ``tab`` (P, L, T, F),
+    ``win`` (P, D_in, W), ``whid`` (P, max(H-1,1), W, W), ``wout``
+    (P, W, D_out) (``masters=None`` when the params are their own master);
+    scalars (P, 4) f32 rows of [lr, 1-b1^t, 1-b2^t, gate]; resolutions (L,)
+    int32. Returns ``(new_params, new_m, new_v, new_masters, loss)`` in the
+    same stacked layout, loss (P,) f32.
+    """
+    has_master = masters is not None
+    P, N = coords.shape[0], coords.shape[1]
+    n_pad = (-N) % BLOCK_N
+    coords_p = jnp.pad(coords, ((0, 0), (0, n_pad), (0, 0)))
+    target_p = jnp.pad(target, ((0, 0), (0, n_pad), (0, 0)))
+    n_tiles = (N + n_pad) // BLOCK_N
+    keys = ("tab", "win", "whid", "wout")
+    shapes = {k: params[k].shape[1:] for k in keys}
+    cdt = jnp.dtype(compute_dtype) if compute_dtype is not None \
+        else params["tab"].dtype
+
+    def full(shape):
+        return pl.BlockSpec((1,) + shape, lambda p, i, *_: (p,) + (0,) * len(shape))
+
+    def tile(*shape):
+        return pl.BlockSpec((1, BLOCK_N) + shape,
+                            lambda p, i, *_: (p, i) + (0,) * len(shape))
+
+    group_specs = [full(shapes[k]) for k in keys]
+    in_specs = ([tile(3), tile(target.shape[2])] + group_specs * (3 + has_master))
+    out_specs = group_specs * (3 + has_master) \
+        + [pl.BlockSpec((1, 1), lambda p, i, *_: (p, 0))]
+    param_shapes = [jax.ShapeDtypeStruct((P,) + shapes[k], params[k].dtype)
+                    for k in keys]
+    f32_shapes = [jax.ShapeDtypeStruct((P,) + shapes[k], jnp.float32)
+                  for k in keys]
+    out_shape = param_shapes + f32_shapes * (2 + has_master) \
+        + [jax.ShapeDtypeStruct((P, 1), jnp.float32)]
+
+    def kernel(res_ref, sc_ref, coords_ref, target_ref, *refs):
+        _train_step_kernel(res_ref, sc_ref, coords_ref, target_ref,
+                           refs[:-5], *refs[-5:],
+                           n_hidden=n_hidden, n_valid=N, b1=beta1, b2=beta2,
+                           eps=eps, wd=weight_decay, cdt=cdt,
+                           has_master=has_master)
+
+    operands = [params[k] for k in keys] \
+        + [moments_m[k] for k in keys] + [moments_v[k] for k in keys] \
+        + ([masters[k] for k in keys] if has_master else [])
+    L, T, F = shapes["tab"]
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(P, n_tiles),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=[
+                pltpu.VMEM((L, T, F), jnp.float32),
+                pltpu.VMEM(shapes["win"], jnp.float32),
+                pltpu.VMEM(shapes["whid"], jnp.float32),
+                pltpu.VMEM(shapes["wout"], jnp.float32),
+                pltpu.VMEM((1, 1), jnp.float32),
+            ],
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(resolutions.astype(jnp.int32), scalars.astype(jnp.float32),
+      coords_p, target_p, *operands)
+
+    unpack = lambda flat: dict(zip(keys, flat))
+    new_params = unpack(outs[0:4])
+    new_m = unpack(outs[4:8])
+    new_v = unpack(outs[8:12])
+    new_masters = unpack(outs[12:16]) if has_master else None
+    loss = outs[-1][:, 0]
+    return new_params, new_m, new_v, new_masters, loss

@@ -1,0 +1,113 @@
+"""Dispatch for the fused train step: backend -> implementation.
+
+- kind ``jnp`` / ``fused``  -> :func:`ref.train_step_ref` (composition of the
+  backend's own encode/MLP ops + ``AdamW.step``; bit-identical to the unfused
+  trainer step);
+- kind ``pallas``           -> :func:`kernel.fused_train_step_pallas`
+  (interpret mode on CPU for the ``pallas`` backend, compiled for
+  ``pallas_tpu``).
+
+The entry point works on the trainer's stacked (P, ...) state directly — the
+partition axis is a kernel grid dimension, not a ``vmap`` — so it drops
+straight into the scan-fused ``train_chunk`` body and into ``shard_map``
+(each shard sees its local P slice).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+from repro import backends
+from repro.kernels.fused_train_step import ref as _ref
+from repro.kernels.fused_train_step.kernel import fused_train_step_pallas
+from repro.optim.adamw import AdamW, OptConfig
+
+
+def _pack(tree_params):
+    """{"tables": (P,L,T,F), "mlp": [...]} -> dict of stacked kernel operands.
+
+    The MLP list becomes (w_in, (max(H-1,1), W, W) hidden slab, w_out) — the
+    same layout as :mod:`repro.kernels.fused_mlp`; an all-zero dummy hidden
+    slab keeps BlockSpecs non-empty when H == 1 (its grads/moments stay 0, so
+    its AdamW update is exactly 0 and it never drifts).
+    """
+    w_in, *hid, w_out = tree_params["mlp"]
+    if hid:
+        w_hid = jnp.stack(hid, axis=1)
+    else:
+        w_hid = jnp.zeros((w_in.shape[0], 1, w_in.shape[2], w_in.shape[2]),
+                          w_in.dtype)
+    return {"tab": tree_params["tables"], "win": w_in, "whid": w_hid,
+            "wout": w_out}, len(hid) + 1
+
+
+def _unpack(flat, n_hidden):
+    mlp = [flat["win"]] + [flat["whid"][:, k] for k in range(n_hidden - 1)] \
+        + [flat["wout"]]
+    return {"tables": flat["tab"], "mlp": mlp}
+
+
+def fused_train_step(params, opt, coords, target, gate, *,
+                     resolutions: Sequence[int], opt_cfg: OptConfig,
+                     impl: backends.BackendLike = "ref", compute_dtype=None):
+    """One fused L1 train step over the stacked partition axis.
+
+    params/opt: the (P, ...)-stacked trainer pytrees (``opt`` as produced by
+    ``vmap(AdamW.init)``: step/m/v and, under mixed precision, the f32 master
+    copy ``"mw"``); coords (P, N, 3) f32; target (P, N, out_dim) f32;
+    gate (P,) f32 (1 = active, 0 = converged/frozen — moments still advance,
+    matching :meth:`AdamW.step`). Returns ``(params, opt, loss)`` with loss
+    (P,) f32 — a drop-in replacement for the loss/grad/Adam section of the
+    trainer's SPMD step.
+    """
+    backend = backends.resolve(impl)
+    if not backend.supports("fused_train_step"):
+        raise ValueError(f"backend {backend.name!r} does not implement "
+                         "fused_train_step")
+    adam = AdamW(opt_cfg)
+    if not backend.is_pallas:
+        return _ref.train_step_ref(params, opt, coords, target, gate,
+                                   resolutions, adam, backend, compute_dtype)
+
+    # ---- Pallas path: the whole step as one kernel ------------------------ #
+    if opt_cfg.clip_norm:
+        raise ValueError("pallas fused_train_step does not fuse global-norm "
+                         "clipping (OptConfig.clip_norm must be 0)")
+    if jnp.dtype(opt_cfg.moments_dtype) != jnp.float32:
+        raise ValueError("pallas fused_train_step keeps f32 moments "
+                         f"(got moments_dtype={opt_cfg.moments_dtype!r})")
+    if compute_dtype is not None:
+        backend.require_dtype(compute_dtype)
+
+    flat_p, n_hidden = _pack(params)
+    flat_m = _pack(opt["m"])[0]
+    flat_v = _pack(opt["v"])[0]
+    flat_mw = _pack(opt["mw"])[0] if "mw" in opt else None
+
+    # schedule + bias corrections from the (traced, per-partition) step
+    # counter; scalar work stays outside the kernel, tensor work inside
+    step = opt["step"] + 1
+    stepf = step.astype(jnp.float32)
+    lr = adam.schedule(step)
+    scalars = jnp.stack([
+        jnp.broadcast_to(lr, stepf.shape),
+        1.0 - opt_cfg.beta1 ** stepf,
+        1.0 - opt_cfg.beta2 ** stepf,
+        gate.astype(jnp.float32),
+    ], axis=1)
+
+    new_p, new_m, new_v, new_mw, loss = fused_train_step_pallas(
+        coords, target, flat_p, flat_m, flat_v, flat_mw, scalars,
+        jnp.asarray(resolutions, jnp.int32), n_hidden=n_hidden,
+        compute_dtype=(None if compute_dtype is None
+                       else jnp.dtype(compute_dtype)),
+        beta1=opt_cfg.beta1, beta2=opt_cfg.beta2, eps=opt_cfg.eps,
+        weight_decay=opt_cfg.weight_decay, interpret=backend.interpret)
+
+    new_params = _unpack(new_p, n_hidden)
+    new_opt = {**opt, "step": step, "m": _unpack(new_m, n_hidden),
+               "v": _unpack(new_v, n_hidden)}
+    if new_mw is not None:
+        new_opt["mw"] = _unpack(new_mw, n_hidden)
+    return new_params, new_opt, loss

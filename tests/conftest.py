@@ -1,0 +1,30 @@
+"""Suite-wide fixtures: the CI backend matrix.
+
+``REPRO_BACKEND=ref|pallas`` (the env leg of the ``deps x backend`` CI
+matrix) pins the default backend for the whole suite, so every call site
+that trains or infers under ``backend="auto"`` exercises that kernel family —
+interpret-mode Pallas kernels run on every push instead of never.
+"""
+import os
+
+import pytest
+
+from repro import backends
+
+_ENV_BACKEND = os.environ.get("REPRO_BACKEND", "").strip()
+
+
+def pytest_configure(config):
+    if _ENV_BACKEND:
+        backends.set_default_backend(_ENV_BACKEND)
+
+
+def pytest_report_header(config):
+    pinned = _ENV_BACKEND or "(unpinned: priority ranking)"
+    return f"repro default backend: {backends.resolve('auto').name} {pinned}"
+
+
+@pytest.fixture(scope="session")
+def repro_backend() -> str:
+    """Name of the pinned default backend ("ref" when REPRO_BACKEND unset)."""
+    return backends.resolve("auto").name

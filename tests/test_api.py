@@ -29,9 +29,11 @@ def test_get_backend_unknown_raises():
         backends.get_backend("cuda_graphs")
 
 
-def test_auto_resolution_picks_ref_on_cpu():
+def test_auto_resolution_picks_ref_on_cpu(repro_backend):
     b = backends.resolve("auto")
-    if jax.default_backend() == "tpu":
+    if repro_backend != "ref":
+        assert b.name == repro_backend      # pinned by the CI backend matrix
+    elif jax.default_backend() == "tpu":
         assert b.name == "pallas_tpu"
     else:
         assert b.name == "ref"
@@ -44,6 +46,9 @@ def test_backend_capability_metadata():
     assert backends.get_backend("ref").supports("flash_attention")
     assert backends.get_backend("fused").supports("hash_encoding")
     assert not backends.get_backend("fused").supports("composite")
+    # the whole-step op is advertised by every built-in backend
+    for name in ("ref", "fused", "pallas", "pallas_tpu"):
+        assert backends.get_backend(name).supports("fused_train_step")
 
 
 def test_register_custom_backend():

@@ -1,0 +1,302 @@
+"""Fused train-step kernel (repro.kernels.fused_train_step): the single-kernel
+fwd + hand-derived bwd + gated AdamW must be a drop-in replacement for the
+unfused trainer step on every backend that advertises it.
+
+- ref composition: bit-identical to the unfused step (it IS the same ops);
+- Pallas kernel (interpret mode): gradients check against ``jax.grad`` of the
+  ref step, params match within 1e-5 (f32) / 1 dB PSNR after training (bf16);
+- AdamW state: bit-exact vs ``repro.optim.adamw`` over 10 steps (f32 and
+  bf16 + f32 master);
+- the sharded scan program stays collective-free with fusion on (mirror of
+  test_dvnr_zero_comm.py).
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.configs import dvnr as dvnr_cfg
+from repro.core.trainer import DVNRState, DVNRTrainer
+from repro.data.volume import make_partition
+from repro.kernels.fused_train_step.ops import fused_train_step
+from repro.kernels.hash_encoding import ref as he_ref
+from repro.optim.adamw import AdamW, OptConfig
+
+CFG = dvnr_cfg.SMOKE.replace(batch_size=512, n_levels=2, log2_hashmap_size=8,
+                             n_neurons=8, n_hidden_layers=1, lrate=1e-2)
+BACKENDS = ("ref", "pallas")
+
+
+def _vols(P=2, local=(8, 8, 8)):
+    grid = {1: (1, 1, 1), 2: (1, 1, 2), 4: (1, 2, 2)}[P]
+    parts = [make_partition("cloverleaf", p, grid, local, 0.3)
+             for p in range(P)]
+    return jnp.stack([p.normalized() for p in parts])
+
+
+def _copy(state: DVNRState) -> DVNRState:
+    c = jax.tree.map(lambda t: jnp.array(t, copy=True),
+                     (state.params, state.opt, state.loss_ma, state.active))
+    return DVNRState(*c, state.step)
+
+
+def _assert_tree_allclose(a, b, atol=1e-6):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=atol)
+
+
+def _synthetic(P=2, N=300, key=0, precision="f32"):
+    """Stacked params/opt + a fixed batch, away from the trainer."""
+    cfg = CFG.replace(precision=precision)
+    tr = DVNRTrainer(cfg, n_partitions=P)
+    st = tr.init(jax.random.PRNGKey(key))
+    ks = jax.random.split(jax.random.PRNGKey(key + 1), 2)
+    coords = jax.random.uniform(ks[0], (P, N, 3))
+    target = jax.random.uniform(ks[1], (P, N, cfg.out_dim))
+    return tr, st, coords, target
+
+
+# --------------------------------------------------------------------------- #
+# capability / flag plumbing
+# --------------------------------------------------------------------------- #
+def test_backend_capability_and_flag_resolution():
+    assert backends.resolve("ref").fused_train_step == "ref"
+    assert backends.resolve("fused").fused_train_step == "ref"
+    assert backends.resolve("pallas").fused_train_step == "pallas-interpret"
+    assert backends.resolve("pallas_tpu").fused_train_step == "pallas"
+
+    assert DVNRTrainer(CFG, 1).fuse_train_step                    # auto -> on
+    assert DVNRTrainer(CFG.replace(fuse_train_step="on"), 1).fuse_train_step
+    assert not DVNRTrainer(CFG.replace(fuse_train_step="off"), 1).fuse_train_step
+    with pytest.raises(ValueError, match="fuse_train_step"):
+        DVNRTrainer(CFG.replace(fuse_train_step="always"), 1)
+
+    # a backend that does not advertise the op: auto falls back, "on" raises
+    nofuse = backends.register_backend(backends.Backend(
+        name="nofuse_test", kind="jnp", priority=-1,
+        capabilities=frozenset({"hash_encoding"})))
+    assert nofuse.fused_train_step == ""
+    assert not DVNRTrainer(CFG, 1, impl="nofuse_test").fuse_train_step
+    with pytest.raises(ValueError, match="does not implement"):
+        DVNRTrainer(CFG.replace(fuse_train_step="on"), 1, impl="nofuse_test")
+
+
+# --------------------------------------------------------------------------- #
+# gradient check: the hand-derived backward vs jax.grad
+# --------------------------------------------------------------------------- #
+def test_pallas_gradients_match_jax_grad():
+    """Recover the kernel's gradient from the first Adam moment (m0 = 0 =>
+    g = m1 / (1 - beta1)) and check it against ``jax.grad`` of the ref loss —
+    a direct check of the in-kernel backward, multi-tile included (N > 512).
+    """
+    tr, st, coords, target = _synthetic(P=2, N=700)
+    gate = jnp.ones((2,), jnp.float32)
+    res = CFG.level_resolutions()
+    _, opt, _ = fused_train_step(
+        st.params, st.opt, coords, target, gate, resolutions=res,
+        opt_cfg=tr.adam.cfg, impl="pallas")
+    b1 = tr.adam.cfg.beta1
+    grads_fused = jax.tree.map(lambda m: m / (1 - b1), opt["m"])
+
+    def loss_fn(p, c, t):
+        feats = he_ref.hash_encode_ref(c, p["tables"], res)
+        h = feats
+        for w in p["mlp"][:-1]:
+            h = jnp.maximum(h @ w, 0.0)
+        return jnp.mean(jnp.abs(h @ p["mlp"][-1] - t))
+
+    grads_ref = jax.vmap(jax.grad(loss_fn))(st.params, coords, target)
+    _assert_tree_allclose(grads_fused, grads_ref, atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# AdamW-state bit-exactness vs repro.optim.adamw
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("precision", ["f32", "bf16"])
+def test_adamw_state_bitexact_over_10_steps(precision):
+    """The fused op's optimizer trajectory (moments, step, master params,
+    working params) must be BIT-exact vs composing the same forward with
+    ``repro.optim.adamw.AdamW`` by hand — f32 and bf16 + f32 master."""
+    tr, st, coords, target = _synthetic(P=2, N=256, precision=precision)
+    gate = jnp.asarray([1.0, 0.0], jnp.float32)     # one frozen partition
+    res = CFG.level_resolutions()
+    adam = AdamW(tr.adam.cfg)
+    cdt = tr._compute_dtype
+
+    params_f, opt_f = _copy(st).params, _copy(st).opt
+    params_r, opt_r = _copy(st).params, _copy(st).opt
+    for step in range(10):
+        params_f, opt_f, loss_f = fused_train_step(
+            params_f, opt_f, coords, target, gate, resolutions=res,
+            opt_cfg=adam.cfg, impl="ref", compute_dtype=cdt)
+
+        def one(p, o, c, t, g):
+            def loss_fn(pp):
+                from repro.kernels.fused_mlp.ops import fused_mlp
+                from repro.kernels.hash_encoding.ops import hash_encode
+                feats = hash_encode(c, pp["tables"], res, "ref",
+                                    compute_dtype=cdt)
+                pred = fused_mlp(feats, pp["mlp"], "ref", compute_dtype=cdt)
+                return jnp.mean(jnp.abs(pred.astype(jnp.float32) - t))
+
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            p, o = adam.step(grads, o, p, g)
+            return p, o, loss
+
+        params_r, opt_r, loss_r = jax.vmap(one)(params_r, opt_r, coords,
+                                                target, gate)
+        np.testing.assert_array_equal(np.asarray(loss_f), np.asarray(loss_r))
+
+    for name in ("step", "m", "v") + (("mw",) if "mw" in opt_f else ()):
+        for x, y in zip(jax.tree.leaves(opt_f[name]),
+                        jax.tree.leaves(opt_r[name]), strict=True):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(jax.tree.leaves(params_f), jax.tree.leaves(params_r),
+                    strict=True):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    if precision == "bf16":
+        assert "mw" in opt_f and opt_f["mw"]["tables"].dtype == jnp.float32
+        assert params_f["tables"].dtype == jnp.bfloat16
+    # the frozen partition's params never moved (moments still advance)
+    np.testing.assert_array_equal(np.asarray(params_f["tables"][1]),
+                                  np.asarray(st.params["tables"][1]))
+    assert not np.array_equal(np.asarray(opt_f["m"]["tables"][1]), 0.0)
+
+
+# --------------------------------------------------------------------------- #
+# fused-vs-unfused parity through the trainer (the CI parity gate)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_chunk_matches_unfused_f32(backend):
+    """train_chunk with fusion on vs the unfused parity baseline: params,
+    loss trace, loss_ma and convergence mask all within 1e-5 (f32)."""
+    vols = _vols()
+    tr_f = DVNRTrainer(CFG.replace(fuse_train_step="on"), 2, impl=backend)
+    tr_u = DVNRTrainer(CFG.replace(fuse_train_step="off"), 2, impl=backend)
+    st = tr_f.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    n = 7
+
+    fused, tf = tr_f.train_chunk(_copy(st), vols, n, key=key)
+    unfused, tu = tr_u.train_chunk(_copy(st), vols, n, key=key)
+
+    assert fused.step == unfused.step == n
+    _assert_tree_allclose(fused.params, unfused.params, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(tf), np.asarray(tu), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(fused.loss_ma),
+                               np.asarray(unfused.loss_ma), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(fused.active),
+                                  np.asarray(unfused.active))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_bf16_trains_to_same_quality(backend):
+    """bf16 + f32 master under fusion: the ref composition replays the
+    unfused trajectory exactly; the Pallas kernel (f32 grad accumulation vs
+    the unfused bf16 one) must land within 1 dB PSNR after training."""
+    cfg = CFG.replace(precision="bf16")
+    vols = _vols()
+    tr_f = DVNRTrainer(cfg.replace(fuse_train_step="on"), 2, impl=backend)
+    tr_u = DVNRTrainer(cfg.replace(fuse_train_step="off"), 2, impl=backend)
+    st = tr_f.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+
+    if backend == "ref":
+        fused, tf = tr_f.train_chunk(_copy(st), vols, 7, key=key)
+        unfused, tu = tr_u.train_chunk(_copy(st), vols, 7, key=key)
+        _assert_tree_allclose(fused.opt["mw"], unfused.opt["mw"], atol=1e-7)
+        np.testing.assert_allclose(np.asarray(tf), np.asarray(tu), atol=1e-7)
+        assert fused.params["tables"].dtype == jnp.bfloat16
+        return
+
+    sf, _ = tr_f.train(_copy(st), vols, steps=60, key=key)
+    su, _ = tr_u.train(_copy(st), vols, steps=60, key=key)
+    pf = tr_f.evaluate(sf, vols, (8, 8, 8))["psnr"]
+    pu = tr_u.evaluate(su, vols, (8, 8, 8))["psnr"]
+    assert abs(pf - pu) < 1.0, (pf, pu)
+
+
+def test_fused_step_convergence_masking():
+    """An immediately-reachable target freezes both fused drivers at the same
+    step with identical params (the gate path inside the fused op)."""
+    cfg = CFG.replace(target_loss=10.0, fuse_train_step="on")
+    vols = _vols()
+    tr = DVNRTrainer(cfg, 2)
+    tr_u = DVNRTrainer(cfg.replace(fuse_train_step="off"), 2)
+    st = tr.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(3)
+    a, _ = tr.train(_copy(st), vols, steps=6, key=key, check_every=1)
+    b, _ = tr_u.train(_copy(st), vols, steps=6, key=key, check_every=1)
+    assert a.step == b.step == 1
+    assert not bool(np.asarray(a.active).any())
+    _assert_tree_allclose(a.params, b.params, atol=1e-6)
+
+
+def test_pallas_fused_rejects_unsupported_opt_config():
+    tr, st, coords, target = _synthetic(P=1, N=64)
+    gate = jnp.ones((1,), jnp.float32)
+    res = CFG.level_resolutions()
+    with pytest.raises(ValueError, match="clip_norm"):
+        fused_train_step(st.params, st.opt, coords, target, gate,
+                         resolutions=res, opt_cfg=OptConfig(clip_norm=1.0),
+                         impl="pallas")
+    with pytest.raises(ValueError, match="moments"):
+        fused_train_step(st.params, st.opt, coords, target, gate,
+                         resolutions=res,
+                         opt_cfg=OptConfig(clip_norm=0.0,
+                                           moments_dtype="bfloat16"),
+                         impl="pallas")
+
+
+# --------------------------------------------------------------------------- #
+# zero-communication (mirror of test_dvnr_zero_comm.py, fusion forced on)
+# --------------------------------------------------------------------------- #
+_ZERO_COMM_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import re
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.launch.mesh import build_mesh
+    from repro.configs import dvnr as dvnr_cfg
+    from repro.core.trainer import DVNRTrainer
+    from repro.data.volume import make_partition
+
+    COLL = (r"\\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)\\b")
+
+    mesh = build_mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
+    cfg = dvnr_cfg.SMOKE.replace(batch_size=256, fuse_train_step="on")
+    P = 8
+    parts = [make_partition("s3d", p, (2, 2, 2), (8, 8, 8)) for p in range(P)]
+    vols = jnp.stack([p.normalized() for p in parts])
+    tr = DVNRTrainer(cfg, n_partitions=P, mesh=mesh)
+    assert tr.fuse_train_step
+    state = tr.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    hlo_chunk = tr._chunk_fn(5).lower(
+        state.params, state.opt, vols, key, jnp.int32(0), state.active,
+        state.loss_ma).compile().as_text()
+    print("CHUNK_COLLECTIVES:", len(re.findall(COLL, hlo_chunk)))
+    state, trace = tr.train_chunk(state, vols, 20, key=key)
+    print("LOSS:", float(trace[-1].mean()))
+""")
+
+
+def test_fused_scanned_chunk_has_no_collectives():
+    """Fusing the step must not reintroduce communication: the sharded scan
+    over the fused op compiles to a collective-free per-device program."""
+    r = subprocess.run([sys.executable, "-c", _ZERO_COMM_SCRIPT],
+                       capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, r.stdout + r.stderr
+    lines = dict(l.split(": ") for l in r.stdout.strip().splitlines()
+                 if ": " in l)
+    assert int(lines["CHUNK_COLLECTIVES"]) == 0, r.stdout
+    assert float(lines["LOSS"]) < 0.5
