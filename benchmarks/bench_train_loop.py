@@ -1,6 +1,8 @@
 """Training-loop dispatch overhead: per-step driver vs scan-fused chunks,
-plus the mixed-precision axis (bf16 vs f32 steps/sec) and the fused-train-step
-axis (fuse_train_step on/off parity-of-speed gate + Pallas-interpret smoke).
+plus the mixed-precision axis (bf16 vs f32 steps/sec), the fused-train-step
+axis (fuse_train_step on/off parity-of-speed gate + Pallas-interpret smoke)
+and the sampling axis (in-op counter-based sampling vs host sampling on the
+fused step, same gate + smoke structure).
 
 The paper's headline claim is compression *speed*; with small per-partition
 networks the wall clock of a Python-driven loop is dominated by per-step
@@ -79,22 +81,20 @@ def _time_chunked(tr, vols, steps, chunk) -> float:
     return time.perf_counter() - t0
 
 
-def _run_fused_axis(quick: bool) -> dict:
-    """Fused vs unfused train-step steps/sec on the scan-chunk path.
-
-    On CPU the measurable leg is the ref composition (`fuse_train_step="on"`
-    under the default backend) vs the unfused baseline — the same math, so the
-    paired-median ratio is a dispatch-path health gate (~1.0x expected; a
-    regression here means the fused dispatch added overhead). The single-kernel
-    win is TPU territory; the interpret-mode Pallas number recorded alongside
-    is a correctness-path smoke, not a speed claim.
+def _run_onoff_axis(quick: bool, cfg_by_mode: dict, *, label: str,
+                    ratio_key: str, ratio_label: str) -> dict:
+    """Shared harness for an on/off config axis on the scan-chunk path:
+    back-to-back paired samples (the per-pair ratio cancels machine-load
+    drift), median-reduced, plus an interpret-mode Pallas smoke of the "on"
+    config — the kernel path must run end to end; its steps/s is a
+    correctness smoke, not a speed claim.
     """
     steps, chunk = (16, 8) if quick else (64, 32)
     repeats = 3 if quick else 5
     parts, vols = make_volume("cloverleaf", GRIDS[1], (8, 8, 8))
     # no pre-warm needed: _time_chunked compiles its chunk lengths untimed
-    trainers = {mode: DVNRTrainer(CFG.replace(fuse_train_step=mode),
-                                  n_partitions=1) for mode in ("off", "on")}
+    trainers = {mode: DVNRTrainer(cfg, n_partitions=1)
+                for mode, cfg in cfg_by_mode.items()}
 
     samples: dict[str, list] = {m: [] for m in trainers}
     pair_ratios = []
@@ -106,9 +106,7 @@ def _run_fused_axis(quick: bool) -> dict:
         pair_ratios.append(on_sps / off_sps)
     ratio = statistics.median(pair_ratios)
 
-    # interpret-mode Pallas smoke: the kernel path must run end to end
-    tr_p = DVNRTrainer(CFG.replace(fuse_train_step="on"), n_partitions=1,
-                       impl="pallas")
+    tr_p = DVNRTrainer(cfg_by_mode["on"], n_partitions=1, impl="pallas")
     n_p = 4
     st, _ = tr_p.train(_fresh(tr_p), vols, steps=n_p, key=jax.random.PRNGKey(1),
                        check_every=n_p)                    # compile
@@ -120,17 +118,53 @@ def _run_fused_axis(quick: bool) -> dict:
     pallas_sps = n_p / (time.perf_counter() - t0)
 
     for mode in ("off", "on"):
-        print(f"[train_loop] fused={mode:>3} "
+        print(f"[train_loop] {label}={mode:>3} "
               f"{statistics.median(samples[mode]):>8.1f} steps/s "
               f"(median of {repeats})")
-    print(f"[train_loop] fused vs unfused (ref composition): {ratio:.2f}x; "
+    print(f"[train_loop] {ratio_label}: {ratio:.2f}x; "
           f"pallas-interpret {pallas_sps:.1f} steps/s")
     return {"config": {"batch_size": CFG.batch_size, "steps": steps,
                        "chunk": chunk, "backend": "ref"},
             "rows": [{"mode": m, "steps_per_s": statistics.median(samples[m]),
                       "samples": samples[m]} for m in ("off", "on")],
-            "pair_ratios": pair_ratios, "fused_vs_unfused": ratio,
+            "pair_ratios": pair_ratios, ratio_key: ratio,
             "pallas_interpret_steps_per_s": pallas_sps}
+
+
+def _run_fused_axis(quick: bool) -> dict:
+    """Fused vs unfused train-step steps/sec on the scan-chunk path.
+
+    On CPU the measurable leg is the ref composition (`fuse_train_step="on"`
+    under the default backend) vs the unfused baseline — the same math, so the
+    paired-median ratio is a dispatch-path health gate (~1.0x expected; a
+    regression here means the fused dispatch added overhead). The single-kernel
+    win is TPU territory.
+    """
+    # fuse_sampling pinned off on both legs: this axis isolates the PR 4
+    # fused step; the sampling delta is the sampling axis's job
+    return _run_onoff_axis(
+        quick, {m: CFG.replace(fuse_train_step=m, fuse_sampling="off")
+                for m in ("off", "on")},
+        label="fused", ratio_key="fused_vs_unfused",
+        ratio_label="fused vs unfused (ref composition)")
+
+
+def _run_sampling_axis(quick: bool) -> dict:
+    """Fused-with-in-op-sampling vs fused-with-host-sampling steps/sec.
+
+    Both legs run the fused train step; the only difference is whether the
+    counter-based coordinate draws + trilinear target gather happen inside
+    the fused op (``fuse_sampling="on"``) or on the host side of it. On CPU
+    both are the same ref-composition math, so the paired-median ratio is a
+    dispatch-path health gate (~1.0x expected); the in-kernel win (no
+    coords/targets/keys in HBM) is TPU territory, smoked via the
+    interpret-mode Pallas leg.
+    """
+    return _run_onoff_axis(
+        quick, {m: CFG.replace(fuse_train_step="on", fuse_sampling=m)
+                for m in ("off", "on")},
+        label="fuse_sampling", ratio_key="sampling_vs_host",
+        ratio_label="in-op vs host sampling (ref composition)")
 
 
 def _run_precision_axis(quick: bool) -> dict:
@@ -204,6 +238,7 @@ def run(quick: bool = False) -> dict:
     out["max_speedup"] = max(r["best_speedup"] for r in out["runs"])
     out["precision"] = _run_precision_axis(quick)
     out["fused"] = _run_fused_axis(quick)
+    out["sampling"] = _run_sampling_axis(quick)
     save_result("train_loop", out)
     return out
 

@@ -19,7 +19,7 @@ SUITE = {
     "scaling": ("benchmarks.bench_scaling", "Fig. 6"),
     "train_loop": ("benchmarks.bench_train_loop",
                    "dispatch overhead: loop vs scan-fused chunks "
-                   "+ precision + fused-train-step axes"),
+                   "+ precision + fused-train-step + in-op sampling axes"),
     "quality": ("benchmarks.bench_quality", "Fig. 8"),
     "model_compression": ("benchmarks.bench_model_compression",
                           "Table II / Fig. 16"),

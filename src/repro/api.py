@@ -298,7 +298,8 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
           ghost: Optional[int] = None, volumes=None,
           log_every: int = 0, check_every: int = 0,
           precision=None,
-          fuse_train_step: Optional[str] = None) -> Tuple[DVNRModel, dict]:
+          fuse_train_step: Optional[str] = None,
+          fuse_sampling: Optional[str] = None) -> Tuple[DVNRModel, dict]:
     """Train one INR per partition (zero-communication) and return the model.
 
     ``partitions``: sequence of :class:`~repro.data.volume.VolumePartition`
@@ -322,6 +323,10 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
     ``"on"`` / ``"off"``): whether each step runs as the fused
     fwd+bwd+AdamW op (:mod:`repro.kernels.fused_train_step` — one Pallas
     kernel on pallas backends) instead of the unfused value_and_grad step.
+    ``fuse_sampling`` likewise overrides ``cfg.fuse_sampling``: whether the
+    batch sampling (counter-based coordinate draws + trilinear target
+    gather) happens inside that fused op too (in-kernel on pallas backends)
+    instead of on the host — every mode draws bit-identical batches.
     """
     key = jax.random.PRNGKey(0) if key is None else key
     k_init, k_train = jax.random.split(key)
@@ -337,6 +342,14 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
                 f"fuse_train_step={fuse_train_step!r} conflicts with the "
                 f"pre-built trainer's {trainer.cfg.fuse_train_step!r}; build "
                 f"the trainer with the desired cfg.fuse_train_step instead")
+    if fuse_sampling is not None:
+        cfg = cfg.replace(fuse_sampling=fuse_sampling)
+        if trainer is not None and \
+                trainer.fuse_sampling != trainer._resolve_fuse_sampling(fuse_sampling):
+            raise ValueError(
+                f"fuse_sampling={fuse_sampling!r} conflicts with the "
+                f"pre-built trainer's {trainer.cfg.fuse_sampling!r}; build "
+                f"the trainer with the desired cfg.fuse_sampling instead")
     if precision is not None:
         cfg = cfg.replace(precision=resolve_precision(precision).name)
         if trainer is not None and trainer.precision != resolve_precision(precision):

@@ -32,8 +32,10 @@ from repro.precision import SUPPORTED_DTYPES
 # Op names used in capability sets. "fused_train_step" is the whole-step op
 # (fwd + bwd + AdamW, see repro.kernels.fused_train_step): jnp/fused backends
 # implement it as the ref composition, pallas backends as one kernel.
+# "fused_sampling" extends it with the in-op batch sampling stage (counter-
+# based coords + trilinear target gather) — in-kernel on pallas backends.
 OPS = ("hash_encoding", "fused_mlp", "composite", "flash_attention",
-       "fused_train_step")
+       "fused_train_step", "fused_sampling")
 
 
 @dataclass(frozen=True)
@@ -79,6 +81,22 @@ class Backend:
         ``DVNRConfig.fuse_train_step="auto"`` enables fusion exactly when this
         is non-empty."""
         if not self.supports("fused_train_step"):
+            return ""
+        if self.is_pallas:
+            return "pallas-interpret" if self.interpret else "pallas"
+        return "ref"
+
+    @property
+    def fused_sampling(self) -> str:
+        """Which in-op batch-sampling implementation this backend runs inside
+        its fused train step: ``""`` (none — the trainer samples on the host),
+        ``"ref"`` (the counter-based sampler + trilinear gather composed
+        outside the kernels), ``"pallas-interpret"`` or ``"pallas"`` (the
+        sampling stage inside the single train-step kernel). Only meaningful
+        when :attr:`fused_train_step` is non-empty; the trainer's
+        ``DVNRConfig.fuse_sampling="auto"`` enables it exactly when both are
+        non-empty."""
+        if not self.supports("fused_sampling"):
             return ""
         if self.is_pallas:
             return "pallas-interpret" if self.interpret else "pallas"
@@ -202,7 +220,8 @@ register_backend(Backend(
     name="fused", kind="fused",
     description="jnp with fused corner-gather hash encoding (training fast "
                 "path); ops without a fused variant fall back to ref",
-    priority=5, capabilities=frozenset({"hash_encoding", "fused_train_step"}),
+    priority=5, capabilities=frozenset({"hash_encoding", "fused_train_step",
+                                        "fused_sampling"}),
 ))
 
 register_backend(Backend(

@@ -64,6 +64,17 @@ class DVNRConfig:
     # backend can't), "off" (always the unfused step — the parity baseline).
     fuse_train_step: str = "auto"
 
+    # ----- in-op batch sampling (repro.kernels.fused_train_step sampling
+    # stage) -----
+    # "auto" (move the counter-based coordinate draws + trilinear target
+    # gather inside the fused train step whenever it is enabled and the
+    # backend advertises fused_sampling — all built-ins do), "on" (require
+    # it; error if fuse_train_step resolves off or the backend can't),
+    # "off" (sample on the host — the sampling parity baseline). All modes
+    # draw bit-identical batches for the same (key, step, partition): the
+    # sampler is counter-based (repro.core.sampling).
+    fuse_sampling: str = "auto"
+
     @property
     def resolved_base_resolution(self) -> int:
         if self.base_resolution > 0:

@@ -25,6 +25,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.dvnr import PRODUCTION, DVNRConfig
 from repro.core.inr import init_inr, param_count
 from repro.core.render import default_tf, make_distributed_render_step, make_rays, Camera
+from repro.core.sampling import step_seeds
 from repro.core.trainer import DVNRTrainer
 from repro.launch.mesh import make_production_mesh
 from repro.utils import hw
@@ -131,8 +132,7 @@ def build_train_cell(mesh, cfg: DVNRConfig = PRODUCTION, *, impl: str = "fused")
             jax.random.split(jax.random.PRNGKey(0), n)))
     opt_sds = jax.eval_shape(lambda p: jax.vmap(trainer.adam.init)(p), params_sds)
     keys_sds = jax.eval_shape(
-        lambda: jax.vmap(lambda i: jax.random.fold_in(jax.random.PRNGKey(0), i))(
-            jnp.arange(n)))
+        lambda: step_seeds(jax.random.PRNGKey(0), 0, n))
     side = PART_N + 2 * GHOST
     vols_sds = jax.ShapeDtypeStruct((n, side, side, side), jnp.float32)
     active_sds = jax.ShapeDtypeStruct((n,), jnp.bool_)

@@ -16,8 +16,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compress.codec_util import dtype_token
 from repro.compress.model_compress import compress_model, decompress_model
 from repro.configs.dvnr import DVNRConfig
+
+_RAW_KIND = "dvnr_raw_f16"
+
+
+def _raw_leaf(a) -> dict:
+    """f16 bytes + the shape/dtype needed to rebuild the leaf (the original
+    payload recorded bare bytes, which cannot be decoded back)."""
+    a = np.asarray(a)
+    return {"dtype": dtype_token(a.dtype), "shape": list(a.shape),
+            "data": np.asarray(a, np.float16).tobytes()}
+
+
+def _raw_decode_leaf(d) -> jnp.ndarray:
+    arr = np.frombuffer(d["data"], np.float16).reshape(d["shape"])
+    return jnp.asarray(arr.astype(np.dtype(d["dtype"])))
+
+
+def _decode_blob(cfg: DVNRConfig, blob: bytes) -> dict:
+    """Decode either blob flavor: the raw-f16 msgpack payload of
+    ``append(compress=False)`` (ablation: "uncomp") or a compressed model
+    (``repro.compress.model_compress``)."""
+    import msgpack
+    try:
+        d = msgpack.unpackb(blob, raw=False)
+    except Exception:
+        d = None
+    if isinstance(d, dict) and d.get("kind") == _RAW_KIND:
+        return {"tables": _raw_decode_leaf(d["tables"]),
+                "mlp": [_raw_decode_leaf(w) for w in d["mlp"]]}
+    return decompress_model(cfg, blob)
 
 
 @dataclass
@@ -59,11 +90,14 @@ class TemporalModelCache:
             one = jax.tree.map(lambda t: t[p], stacked_params)
             if compress:
                 blob, _ = compress_model(self.cfg, one, **self.codecs)
-            else:  # raw f16 serialization (ablation: "uncomp")
+            else:  # raw f16 serialization (ablation: "uncomp"); per-leaf
+                # shape/dtype ride along so the blob decodes back into a
+                # model through the same get()/window_params() path
                 import msgpack
                 blob = msgpack.packb({
-                    "tables": np.asarray(one["tables"], np.float16).tobytes(),
-                    "mlp": [np.asarray(w, np.float16).tobytes() for w in one["mlp"]],
+                    "kind": _RAW_KIND,
+                    "tables": _raw_leaf(one["tables"]),
+                    "mlp": [_raw_leaf(w) for w in one["mlp"]],
                 })
             blobs.append(blob)
         entry = CacheEntry(timestep, blobs, meta or {})
@@ -86,12 +120,12 @@ class TemporalModelCache:
     def get(self, timestep: int, partition: int) -> dict:
         for e in self._entries:
             if e.timestep == timestep:
-                return decompress_model(self.cfg, e.blobs[partition])
+                return _decode_blob(self.cfg, e.blobs[partition])
         raise KeyError(f"timestep {timestep} not in window {self.timesteps}")
 
     def window_params(self, partition: int) -> list[dict]:
         """All cached models of one partition, oldest->newest (pathline tracing)."""
-        return [decompress_model(self.cfg, e.blobs[partition]) for e in self._entries]
+        return [_decode_blob(self.cfg, e.blobs[partition]) for e in self._entries]
 
 
 class WeightCache:

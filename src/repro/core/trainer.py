@@ -26,6 +26,15 @@ model parallelism, adaptive parameters, boundary loss, convergence masking.
   hand-derived bwd + gated AdamW, partition axis as a grid dimension) on
   pallas backends. ``"off"`` keeps the unfused value_and_grad step, which
   remains the parity baseline (tests/test_fused_train_step.py).
+- in-op batch sampling (``DVNRConfig.fuse_sampling``): with the fused step
+  enabled, the coordinate draws + trilinear target gather move inside the
+  fused op too (in-kernel on pallas backends) — the whole scan body is one
+  op and no coords/targets/RNG keys materialize in HBM. Sampling is
+  COUNTER-BASED on every path (:mod:`repro.core.sampling`): per-step seeds
+  are ``step_seeds(key, step, p)`` and the draws are a pure function of
+  ``(seed, sample row)``, so unfused, fused and fused-with-sampling trainers
+  see bit-identical batches for the same ``(key, step, partition)``
+  (tests/test_fused_sampling.py).
 """
 from __future__ import annotations
 
@@ -42,9 +51,10 @@ from repro import backends
 from repro.configs.dvnr import DVNRConfig
 from repro.core.inr import _decode_grid, _inr_apply, init_inr
 from repro.core.metrics import psnr_from_mses
-from repro.core.sampling import step_keys, training_coords
+from repro.core.sampling import step_seeds, training_coords_counter
 from repro.data.volume import sample_trilinear
-from repro.kernels.fused_train_step.ops import fused_train_step
+from repro.kernels.fused_train_step.ops import (fused_train_step,
+                                                fused_train_step_sampling)
 from repro.optim.adamw import AdamW, OptConfig
 from repro.precision import Precision, resolve_precision
 
@@ -112,6 +122,7 @@ class DVNRTrainer:
                                else self.precision.compute_dtype)
         self.adam = AdamW(_opt_config(cfg, self.precision))
         self.fuse_train_step = self._resolve_fuse(cfg.fuse_train_step)
+        self.fuse_sampling = self._resolve_fuse_sampling(cfg.fuse_sampling)
         self._spmd_step = self._build_spmd_step()
         self._step_fn = jax.jit(self._spmd_step, donate_argnums=(0, 1))
         # n_steps -> jitted scan-fused chunk; LRU-bounded so a long-lived
@@ -134,6 +145,25 @@ class DVNRTrainer:
             raise ValueError(f"fuse_train_step='on' but backend "
                              f"{self.backend.name!r} does not implement it")
         return mode != "off" and advertised
+
+    def _resolve_fuse_sampling(self, mode: str) -> bool:
+        """``cfg.fuse_sampling`` ("auto"/"on"/"off") -> sample inside the
+        fused op? Requires the fused step itself (auto degrades, "on"
+        errors)."""
+        if mode not in ("auto", "on", "off"):
+            raise ValueError(f"fuse_sampling must be 'auto', 'on' or 'off', "
+                             f"got {mode!r}")
+        advertised = self.backend.supports("fused_sampling")
+        if mode == "on":
+            if not advertised:
+                raise ValueError(f"fuse_sampling='on' but backend "
+                                 f"{self.backend.name!r} does not implement "
+                                 "it")
+            if not self.fuse_train_step:
+                raise ValueError("fuse_sampling='on' requires the fused train "
+                                 "step (fuse_train_step resolved off)")
+            return True
+        return mode == "auto" and advertised and self.fuse_train_step
 
     @staticmethod
     def master_params(state: "DVNRState"):
@@ -179,12 +209,18 @@ class DVNRTrainer:
 
     # -------------------------- one SPMD step -------------------------- #
     def _build_spmd_step(self):
+        """The per-step SPMD body: ``(params, opt, vols, seeds, active,
+        loss_ma) -> (params, opt, loss, loss_ma, active)``. ``seeds`` is the
+        (P, 2) uint32 counter-seed table from
+        :func:`repro.core.sampling.step_seeds` — every path (unfused, fused,
+        fused-with-in-op-sampling) draws the same batch from it."""
         cfg, ghost, backend = self.cfg, self.ghost, self.backend
         adam, compute_dtype = self.adam, self._compute_dtype
 
-        def sample_batch(vol, key):
-            coords = training_coords(key, cfg.batch_size,
-                                     cfg.boundary_lambda, cfg.boundary_sigma)
+        def sample_batch(vol, seed):
+            coords = training_coords_counter(seed, cfg.batch_size,
+                                             cfg.boundary_lambda,
+                                             cfg.boundary_sigma)
             target = sample_trilinear(vol, coords, ghost)
             if cfg.out_dim == 1 and target.ndim == 1:
                 target = target[:, None]
@@ -197,16 +233,38 @@ class DVNRTrainer:
                 active = active & (loss_ma > cfg.target_loss)
             return loss_ma, active
 
-        if self.fuse_train_step:
-            # fused whole-step op (repro.kernels.fused_train_step): sampling is
-            # vmapped, then the stacked state goes through ONE op — the ref
-            # composition on jnp/fused backends, a single Pallas kernel (with
-            # the partition axis as a grid dimension) on pallas backends
+        if self.fuse_train_step and self.fuse_sampling:
+            # fully fused op: sampling + fwd + bwd + AdamW inside
+            # fused_train_step_sampling — the volume is an op operand and the
+            # scan body is ONE op (in-kernel sampling on pallas backends)
             resolutions = cfg.level_resolutions()
             opt_cfg = adam.cfg
 
-            def base_step(params, opt, vols, keys, active, loss_ma):
-                coords, target = jax.vmap(sample_batch)(vols, keys)
+            def base_step(params, opt, vols, seeds, active, loss_ma):
+                # scalar volumes gain an explicit channel axis so the op's
+                # target layout matches out_dim (local reshape, shard-safe)
+                vols_c = vols if vols.ndim == 5 else vols[..., None]
+                params, opt, loss = fused_train_step_sampling(
+                    params, opt, vols_c, seeds,
+                    active.astype(jnp.float32),
+                    n_batch=cfg.batch_size,
+                    boundary_lambda=cfg.boundary_lambda,
+                    sigma=cfg.boundary_sigma, ghost=ghost,
+                    resolutions=resolutions, opt_cfg=opt_cfg, impl=backend,
+                    compute_dtype=compute_dtype)
+                loss_ma, active = mask_convergence(loss, loss_ma, active)
+                return params, opt, loss, loss_ma, active
+        elif self.fuse_train_step:
+            # fused whole-step op (repro.kernels.fused_train_step): sampling is
+            # vmapped on the host side, then the stacked state goes through ONE
+            # op — the ref composition on jnp/fused backends, a single Pallas
+            # kernel (with the partition axis as a grid dimension) on pallas
+            # backends
+            resolutions = cfg.level_resolutions()
+            opt_cfg = adam.cfg
+
+            def base_step(params, opt, vols, seeds, active, loss_ma):
+                coords, target = jax.vmap(sample_batch)(vols, seeds)
                 params, opt, loss = fused_train_step(
                     params, opt, coords, target,
                     active.astype(jnp.float32), resolutions=resolutions,
@@ -217,8 +275,8 @@ class DVNRTrainer:
         else:
             # unfused fallback (and the fused path's parity baseline):
             # value_and_grad of the per-partition loss + AdamW, vmapped
-            def one_partition(params, opt, vol, key, active, loss_ma):
-                coords, target = sample_batch(vol, key)
+            def one_partition(params, opt, vol, seed, active, loss_ma):
+                coords, target = sample_batch(vol, seed)
 
                 def loss_fn(p):
                     # forward in the policy's compute dtype; the L1 reduction
@@ -251,41 +309,48 @@ class DVNRTrainer:
                 return jax.tree.map(lambda _: specs_stacked, tree,
                                     is_leaf=lambda x: hasattr(x, "ndim"))
 
-            def sharded(params, opt, vols, keys, active, loss_ma):
+            def sharded(params, opt, vols, seeds, active, loss_ma):
                 return shard_map(
                     base_step, mesh=self.mesh,
                     in_specs=(spec_like(params), spec_like(opt), part, part,
                               part, part),
                     out_specs=(spec_like(params), spec_like(opt), part, part, part),
                     check_rep=False,
-                )(params, opt, vols, keys, active, loss_ma)
+                )(params, opt, vols, seeds, active, loss_ma)
 
             spmd_step = sharded
 
         return spmd_step
 
     # -------------------------- scan-fused chunk ------------------------ #
-    def _chunk_fn(self, n_steps: int):
-        """Jitted ``n_steps``-long scan of the SPMD step (cached per length)."""
-        fn = self._chunk_fns.get(n_steps)
-        if fn is not None:
-            self._chunk_fns.move_to_end(n_steps)
-            return fn
+    def _chunk_body(self, n_steps: int):
+        """The unjitted ``n_steps``-long scan of the SPMD step. Exposed
+        separately from :meth:`_chunk_fn` so tests can inspect the traced
+        program (``jax.make_jaxpr``) — e.g. that with in-op sampling no RNG /
+        gather primitives remain outside the fused op."""
         spmd_step, P = self._spmd_step, self.P
 
         def chunk(params, opt, vols, key, step0, active, loss_ma):
             def body(carry, i):
                 params, opt, active, loss_ma = carry
-                keys = step_keys(key, step0 + i, P)
+                seeds = step_seeds(key, step0 + i, P)
                 params, opt, loss, loss_ma, active = spmd_step(
-                    params, opt, vols, keys, active, loss_ma)
+                    params, opt, vols, seeds, active, loss_ma)
                 return (params, opt, active, loss_ma), loss
 
             (params, opt, active, loss_ma), losses = jax.lax.scan(
                 body, (params, opt, active, loss_ma), jnp.arange(n_steps))
             return params, opt, active, loss_ma, losses
 
-        fn = jax.jit(chunk, donate_argnums=(0, 1))
+        return chunk
+
+    def _chunk_fn(self, n_steps: int):
+        """Jitted ``n_steps``-long scan of the SPMD step (cached per length)."""
+        fn = self._chunk_fns.get(n_steps)
+        if fn is not None:
+            self._chunk_fns.move_to_end(n_steps)
+            return fn
+        fn = jax.jit(self._chunk_body(n_steps), donate_argnums=(0, 1))
         self._chunk_fns[n_steps] = fn
         while len(self._chunk_fns) > self._chunk_fns_max:
             self._chunk_fns.popitem(last=False)
@@ -347,9 +412,9 @@ class DVNRTrainer:
         """
         losses = []
         for i in range(steps):
-            keys = step_keys(key, state.step, self.P)
+            seeds = step_seeds(key, state.step, self.P)
             params, opt, loss, loss_ma, active = self._step_fn(
-                state.params, state.opt, volumes, keys, state.active, state.loss_ma)
+                state.params, state.opt, volumes, seeds, state.active, state.loss_ma)
             state = DVNRState(params, opt, loss_ma, active, state.step + 1)
             if log_every and (i + 1) % log_every == 0:
                 losses.append((state.step, float(loss.mean())))

@@ -1,15 +1,23 @@
-"""Fused DVNR train step: hash encode + MLP forward, hand-derived backward,
-and the gated AdamW update as ONE kernel (the last layer of the dispatch-
-elimination arc: PR 2 fused the step loop, PR 3 made the carry bf16, this
-package fuses the step itself).
+"""Fused DVNR train step: batch sampling (optional), hash encode + MLP
+forward, hand-derived backward, and the gated AdamW update as ONE kernel (the
+last layer of the dispatch-elimination arc: PR 2 fused the step loop, PR 3
+made the carry bf16, PR 4 fused the step itself, this PR pulls the batch
+sampling in too — the whole scan body is one op).
 
-- ``ops.fused_train_step`` — the dispatch entry point (stacked (P, ...) state).
-- ``ref.train_step_ref``   — composition of the existing kernels + AdamW via
-  ``jax.value_and_grad``; bit-identical to the unfused trainer step and the
-  parity oracle for the Pallas kernel.
-- ``kernel.fused_train_step_pallas`` — single Pallas kernel (interpret mode on
-  CPU, compiled on TPU).
+- ``ops.fused_train_step``          — dispatch entry (stacked (P, ...) state,
+  host-sampled coords/targets).
+- ``ops.fused_train_step_sampling`` — dispatch entry with in-op sampling:
+  takes the stacked ghost-padded volumes + (P, 2) uint32 counter seeds; the
+  counter-based draws (repro.core.sampling) are bit-identical across all
+  backends.
+- ``ref.train_step_ref`` / ``ref.train_step_sampling_ref`` — composition of
+  the existing kernels + sampler + AdamW via ``jax.value_and_grad``;
+  bit-identical to the unfused trainer step and the parity oracle for the
+  Pallas kernels.
+- ``kernel.fused_train_step_pallas`` / ``kernel.fused_train_step_sampling_pallas``
+  — single Pallas kernels (interpret mode on CPU, compiled on TPU).
 """
-from repro.kernels.fused_train_step.ops import fused_train_step
+from repro.kernels.fused_train_step.ops import (fused_train_step,
+                                                fused_train_step_sampling)
 
-__all__ = ["fused_train_step"]
+__all__ = ["fused_train_step", "fused_train_step_sampling"]

@@ -1,11 +1,17 @@
-"""Pallas kernel: one DVNR train step — fwd + hand-derived bwd + gated AdamW —
-as a SINGLE ``pallas_call`` (the tiny-cuda-nn "fully fused" training regime,
-translated to TPU blocking).
+"""Pallas kernel: one DVNR train step — (optionally) batch sampling + fwd +
+hand-derived bwd + gated AdamW — as a SINGLE ``pallas_call`` (the
+tiny-cuda-nn "fully fused" training regime, translated to TPU blocking).
 
 Grid = (P partitions, N/BLOCK_N batch tiles), partition-major. Per partition:
   - the hash tables, MLP weights, Adam moments (and f32 masters under the
     mixed-precision policy) are pinned in VMEM for all batch tiles — one HBM
     round trip per partition per step instead of one per op;
+  - with the SAMPLING stage fused (``fused_train_step_sampling_pallas``) the
+    ghost-padded local volume is pinned alongside and each tile derives its
+    own coordinates from the counter-based RNG of
+    :mod:`repro.core.sampling` (global sample ids as Threefry counters, so
+    tiling does not change the draws) and gathers its trilinear targets
+    in-VMEM — no coordinates, targets or RNG keys ever materialize in HBM;
   - each (BLOCK_N, 3) coordinate tile runs encode -> MLP -> L1 cotangent ->
     MLP backward -> 8-corner scatter-add entirely in VMEM/VREGs, accumulating
     f32 gradients into scratch across tiles (the TPU grid is sequential, so
@@ -16,22 +22,25 @@ Grid = (P partitions, N/BLOCK_N batch tiles), partition-major. Per partition:
     gradient or intermediate activation ever materializes in HBM.
 
 Mixed precision follows the stack's ``Precision`` policy: forward/backward
-matmuls run in the compute dtype (bf16 under ``"bf16"``), gradient
+matmuls run in the compute dtype (bf16 under ``"bf16"``), the sampling stage
+is always f32 (coordinates/targets are f32 on every path), gradient
 accumulation and the optimizer update are f32, and the new working params are
 re-derived from the f32 master by casting — the exact sequence of
 :meth:`repro.optim.adamw.AdamW.step`.
 
 The schedule scalars (lr, bias corrections, convergence gate) arrive via
 scalar prefetch as a (P, 4) table — they depend on the traced step counter,
-which the scan-fused chunk advances on device.
+which the scan-fused chunk advances on device; the sampling variant prefetches
+the (P, 2) uint32 per-(step, partition) seed words next to them.
 
 VMEM budget: params + m + v (+ master) + f32 grad scratch ~= 5 f32 copies of
-the per-partition model; the III-B adaptive rule keeps per-partition T at
-2^11..2^13 under strong scaling (<= ~2 MB at F=4), well inside the ~16 MB
-VMEM envelope. Giant-table offline configs (T=2^16+) need a table-sharded
-grid axis — a TPU-hardware follow-up, not reachable from the in situ path.
-Validated in interpret mode on CPU (the CI backend matrix runs it on every
-push).
+the per-partition model, plus (sampling variant) the ghost-padded local
+volume; the III-B adaptive rule keeps per-partition T at 2^11..2^13 under
+strong scaling (<= ~2 MB at F=4), well inside the ~16 MB VMEM envelope.
+Giant-table offline configs (T=2^16+) need a table-sharded grid axis, and
+256^3 local partitions need a volume-tiled gather — TPU-hardware follow-ups,
+not reachable from the in situ smoke path. Validated in interpret mode on CPU
+(the CI backend matrix runs it on every push).
 """
 from __future__ import annotations
 
@@ -42,8 +51,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.sampling import counter_coords
+
 BLOCK_N = 512
 _P0, _P1, _P2 = 1, 2_654_435_761, 805_459_861
+_STATE_KEYS = ("tab", "win", "whid", "wout")
 
 
 def _encode_fwd(res_ref, coords, tables, cdt):
@@ -86,10 +98,46 @@ def _encode_fwd(res_ref, coords, tables, cdt):
     return jnp.concatenate(feats, axis=-1), residuals
 
 
-def _train_step_kernel(res_ref, sc_ref, coords_ref, target_ref, refs,
-                       g_tab, g_win, g_whid, g_wout, loss_acc,
-                       *, n_hidden, n_valid, b1, b2, eps, wd, cdt, has_master):
-    """refs: flat input/output refs, unpacked below (param/m/v[/mw] groups)."""
+def _gather_trilinear(vol, coords, ghost: int):
+    """In-kernel mirror of :func:`repro.data.volume.sample_trilinear`.
+
+    ``vol``: (nx, ny, nz[, C]) ghost-padded partition resident in VMEM;
+    ``coords``: (N, 3) f32 in [0,1]^3 over the owned region. Same cell-center
+    mapping, index/weight clamping and corner order (dz fastest) as the host
+    sampler, expressed as ``jnp.take`` on the flattened volume + an unrolled
+    8-corner weighted sum so it is Pallas-legal."""
+    nx, ny, nz = vol.shape[0], vol.shape[1], vol.shape[2]
+    chan = vol.ndim == 4
+    flat = vol.reshape((nx * ny * nz,) + vol.shape[3:])
+    los, ws = [], []
+    for ax, n in enumerate((nx, ny, nz)):
+        owned = jnp.float32(n - 2 * ghost)
+        pos = coords[:, ax] * owned - 0.5 + jnp.float32(ghost)
+        lo = jnp.clip(jnp.floor(pos), 0.0, jnp.float32(n - 2))
+        los.append(lo.astype(jnp.int32))
+        ws.append(jnp.clip(pos - lo, 0.0, 1.0))
+    acc = None
+    for dx in (0, 1):
+        for dy in (0, 1):
+            for dz in (0, 1):
+                lin = ((los[0] + dx) * ny + (los[1] + dy)) * nz + (los[2] + dz)
+                vals = jnp.take(flat, lin, axis=0)        # (N[, C])
+                ww = (ws[0] if dx else 1.0 - ws[0]) \
+                    * (ws[1] if dy else 1.0 - ws[1]) \
+                    * (ws[2] if dz else 1.0 - ws[2])
+                term = ww[:, None] * vals if chan else ww * vals
+                acc = term if acc is None else acc + term
+    return acc
+
+
+def _train_step_core(res_ref, sc_ref, coords, target, refs,
+                     g_tab, g_win, g_whid, g_wout, loss_acc,
+                     *, n_hidden, n_valid, b1, b2, eps, wd, cdt, has_master):
+    """The shared per-tile body: forward, L1 cotangent, backward scatter and
+    (on the last tile) the gated AdamW update. ``coords``/``target`` are the
+    tile's (BN, 3)/(BN, D_out) f32 arrays — read from HBM-fed refs by the
+    plain kernel, derived in-VMEM by the sampling kernel. ``refs``: flat
+    input/output state refs, unpacked below (param/m/v[/mw] groups)."""
     p = pl.program_id(0)
     i = pl.program_id(1)
     n_tiles = pl.num_programs(1)
@@ -117,8 +165,6 @@ def _train_step_kernel(res_ref, sc_ref, coords_ref, target_ref, refs,
         g_wout[...] = jnp.zeros_like(g_wout)
         loss_acc[...] = jnp.zeros_like(loss_acc)
 
-    coords = coords_ref[0]                            # (BN, 3) f32
-    target = target_ref[0]                            # (BN, D_out) f32
     tables = tab_ref[0]                               # (L, T, F) param dtype
     w_in = win_ref[0].astype(cdt)
     w_hid = whid_ref[0].astype(cdt)
@@ -201,6 +247,49 @@ def _train_step_kernel(res_ref, sc_ref, coords_ref, target_ref, refs,
         loss_ref[0, 0] = loss_acc[0, 0] / (n_valid * target.shape[1])
 
 
+# --------------------------------------------------------------------------- #
+# shared pallas_call layout
+# --------------------------------------------------------------------------- #
+def _full_spec(shape):
+    """One partition's full block, indexed by the partition grid axis."""
+    return pl.BlockSpec((1,) + tuple(shape),
+                        lambda p, i, *_: (p,) + (0,) * len(shape))
+
+
+def _state_layout(params, moments_m, moments_v, masters, P):
+    """Specs/out-shapes/operands/scratch for the param+m+v[+mw] state groups
+    (shared by both kernel variants)."""
+    has_master = masters is not None
+    shapes = {k: params[k].shape[1:] for k in _STATE_KEYS}
+    group_specs = [_full_spec(shapes[k]) for k in _STATE_KEYS]
+    state_specs = group_specs * (3 + has_master)
+    out_specs = group_specs * (3 + has_master) \
+        + [pl.BlockSpec((1, 1), lambda p, i, *_: (p, 0))]
+    param_shapes = [jax.ShapeDtypeStruct((P,) + shapes[k], params[k].dtype)
+                    for k in _STATE_KEYS]
+    f32_shapes = [jax.ShapeDtypeStruct((P,) + shapes[k], jnp.float32)
+                  for k in _STATE_KEYS]
+    out_shape = param_shapes + f32_shapes * (2 + has_master) \
+        + [jax.ShapeDtypeStruct((P, 1), jnp.float32)]
+    operands = [params[k] for k in _STATE_KEYS] \
+        + [moments_m[k] for k in _STATE_KEYS] \
+        + [moments_v[k] for k in _STATE_KEYS] \
+        + ([masters[k] for k in _STATE_KEYS] if has_master else [])
+    scratch = [pltpu.VMEM(shapes[k], jnp.float32) for k in _STATE_KEYS] \
+        + [pltpu.VMEM((1, 1), jnp.float32)]
+    return shapes, state_specs, out_specs, out_shape, operands, scratch
+
+
+def _unpack_outs(outs, has_master):
+    unpack = lambda flat: dict(zip(_STATE_KEYS, flat))
+    new_params = unpack(outs[0:4])
+    new_m = unpack(outs[4:8])
+    new_v = unpack(outs[8:12])
+    new_masters = unpack(outs[12:16]) if has_master else None
+    loss = outs[-1][:, 0]
+    return new_params, new_m, new_v, new_masters, loss
+
+
 @functools.partial(
     jax.jit, static_argnames=("n_hidden", "compute_dtype", "beta1", "beta2",
                               "eps", "weight_decay", "interpret"))
@@ -209,7 +298,7 @@ def fused_train_step_pallas(coords, target, params, moments_m, moments_v,
                             compute_dtype, beta1: float, beta2: float,
                             eps: float, weight_decay: float,
                             interpret: bool = True):
-    """One fused train step for P stacked partitions.
+    """One fused train step for P stacked partitions (host-sampled batch).
 
     coords (P, N, 3) f32; target (P, N, D_out) f32; ``params`` / ``moments_m``
     / ``moments_v`` / ``masters`` are dicts with keys ``tab`` (P, L, T, F),
@@ -225,64 +314,96 @@ def fused_train_step_pallas(coords, target, params, moments_m, moments_v,
     coords_p = jnp.pad(coords, ((0, 0), (0, n_pad), (0, 0)))
     target_p = jnp.pad(target, ((0, 0), (0, n_pad), (0, 0)))
     n_tiles = (N + n_pad) // BLOCK_N
-    keys = ("tab", "win", "whid", "wout")
-    shapes = {k: params[k].shape[1:] for k in keys}
     cdt = jnp.dtype(compute_dtype) if compute_dtype is not None \
         else params["tab"].dtype
-
-    def full(shape):
-        return pl.BlockSpec((1,) + shape, lambda p, i, *_: (p,) + (0,) * len(shape))
+    _, state_specs, out_specs, out_shape, operands, scratch = \
+        _state_layout(params, moments_m, moments_v, masters, P)
 
     def tile(*shape):
         return pl.BlockSpec((1, BLOCK_N) + shape,
                             lambda p, i, *_: (p, i) + (0,) * len(shape))
 
-    group_specs = [full(shapes[k]) for k in keys]
-    in_specs = ([tile(3), tile(target.shape[2])] + group_specs * (3 + has_master))
-    out_specs = group_specs * (3 + has_master) \
-        + [pl.BlockSpec((1, 1), lambda p, i, *_: (p, 0))]
-    param_shapes = [jax.ShapeDtypeStruct((P,) + shapes[k], params[k].dtype)
-                    for k in keys]
-    f32_shapes = [jax.ShapeDtypeStruct((P,) + shapes[k], jnp.float32)
-                  for k in keys]
-    out_shape = param_shapes + f32_shapes * (2 + has_master) \
-        + [jax.ShapeDtypeStruct((P, 1), jnp.float32)]
-
     def kernel(res_ref, sc_ref, coords_ref, target_ref, *refs):
-        _train_step_kernel(res_ref, sc_ref, coords_ref, target_ref,
-                           refs[:-5], *refs[-5:],
-                           n_hidden=n_hidden, n_valid=N, b1=beta1, b2=beta2,
-                           eps=eps, wd=weight_decay, cdt=cdt,
-                           has_master=has_master)
+        _train_step_core(res_ref, sc_ref, coords_ref[0], target_ref[0],
+                         refs[:-5], *refs[-5:],
+                         n_hidden=n_hidden, n_valid=N, b1=beta1, b2=beta2,
+                         eps=eps, wd=weight_decay, cdt=cdt,
+                         has_master=has_master)
 
-    operands = [params[k] for k in keys] \
-        + [moments_m[k] for k in keys] + [moments_v[k] for k in keys] \
-        + ([masters[k] for k in keys] if has_master else [])
-    L, T, F = shapes["tab"]
     outs = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(P, n_tiles),
-            in_specs=in_specs,
+            in_specs=[tile(3), tile(target.shape[2])] + state_specs,
             out_specs=out_specs,
-            scratch_shapes=[
-                pltpu.VMEM((L, T, F), jnp.float32),
-                pltpu.VMEM(shapes["win"], jnp.float32),
-                pltpu.VMEM(shapes["whid"], jnp.float32),
-                pltpu.VMEM(shapes["wout"], jnp.float32),
-                pltpu.VMEM((1, 1), jnp.float32),
-            ],
+            scratch_shapes=scratch,
         ),
         out_shape=out_shape,
         interpret=interpret,
     )(resolutions.astype(jnp.int32), scalars.astype(jnp.float32),
       coords_p, target_p, *operands)
+    return _unpack_outs(outs, has_master)
 
-    unpack = lambda flat: dict(zip(keys, flat))
-    new_params = unpack(outs[0:4])
-    new_m = unpack(outs[4:8])
-    new_v = unpack(outs[8:12])
-    new_masters = unpack(outs[12:16]) if has_master else None
-    loss = outs[-1][:, 0]
-    return new_params, new_m, new_v, new_masters, loss
+
+@functools.partial(
+    jax.jit, static_argnames=("n_batch", "n_uniform", "sigma", "ghost",
+                              "n_hidden", "compute_dtype", "beta1", "beta2",
+                              "eps", "weight_decay", "interpret"))
+def fused_train_step_sampling_pallas(volumes, seeds, params, moments_m,
+                                     moments_v, masters, scalars, resolutions,
+                                     *, n_batch: int, n_uniform: int,
+                                     sigma: float, ghost: int, n_hidden: int,
+                                     compute_dtype, beta1: float, beta2: float,
+                                     eps: float, weight_decay: float,
+                                     interpret: bool = True):
+    """One fused train step for P stacked partitions, sampling INCLUDED.
+
+    Instead of the host-sampled ``coords``/``target`` pair this variant takes
+    the stacked ghost-padded volumes (P, nx+2g, ny+2g, nz+2g[, C]) and the
+    per-(step, partition) counter seeds (P, 2) uint32 (from
+    :func:`repro.core.sampling.step_seeds`); every batch tile derives its own
+    coordinates with :func:`repro.core.sampling.counter_coords` (rows are
+    global sample ids, so the draws are tile-count-invariant and bit-identical
+    to the host sampler) and gathers the trilinear targets from the VMEM-
+    pinned volume. State layout and returns match
+    :func:`fused_train_step_pallas`.
+    """
+    has_master = masters is not None
+    P = volumes.shape[0]
+    n_tiles = (n_batch + (-n_batch) % BLOCK_N) // BLOCK_N
+    cdt = jnp.dtype(compute_dtype) if compute_dtype is not None \
+        else params["tab"].dtype
+    _, state_specs, out_specs, out_shape, operands, scratch = \
+        _state_layout(params, moments_m, moments_v, masters, P)
+
+    def kernel(res_ref, sc_ref, seed_ref, vol_ref, *refs):
+        p = pl.program_id(0)
+        i = pl.program_id(1)
+        rows = i * BLOCK_N + jax.lax.broadcasted_iota(
+            jnp.int32, (BLOCK_N, 1), 0)
+        coords = counter_coords(seed_ref[p, 0], seed_ref[p, 1], rows,
+                                n_uniform, sigma)
+        target = _gather_trilinear(vol_ref[0], coords, ghost)
+        if target.ndim == 1:
+            target = target[:, None]
+        _train_step_core(res_ref, sc_ref, coords, target, refs[:-5],
+                         *refs[-5:],
+                         n_hidden=n_hidden, n_valid=n_batch, b1=beta1,
+                         b2=beta2, eps=eps, wd=weight_decay, cdt=cdt,
+                         has_master=has_master)
+
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(P, n_tiles),
+            in_specs=[_full_spec(volumes.shape[1:])] + state_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(resolutions.astype(jnp.int32), scalars.astype(jnp.float32),
+      seeds.astype(jnp.uint32), volumes, *operands)
+    return _unpack_outs(outs, has_master)

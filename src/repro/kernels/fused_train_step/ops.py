@@ -1,16 +1,20 @@
 """Dispatch for the fused train step: backend -> implementation.
 
-- kind ``jnp`` / ``fused``  -> :func:`ref.train_step_ref` (composition of the
-  backend's own encode/MLP ops + ``AdamW.step``; bit-identical to the unfused
-  trainer step);
-- kind ``pallas``           -> :func:`kernel.fused_train_step_pallas`
-  (interpret mode on CPU for the ``pallas`` backend, compiled for
-  ``pallas_tpu``).
+- kind ``jnp`` / ``fused``  -> :func:`ref.train_step_ref` /
+  :func:`ref.train_step_sampling_ref` (composition of the backend's own
+  encode/MLP ops + the counter-based sampler + ``AdamW.step``; bit-identical
+  to the unfused trainer step);
+- kind ``pallas``           -> :func:`kernel.fused_train_step_pallas` /
+  :func:`kernel.fused_train_step_sampling_pallas` (interpret mode on CPU for
+  the ``pallas`` backend, compiled for ``pallas_tpu``).
 
-The entry point works on the trainer's stacked (P, ...) state directly — the
-partition axis is a kernel grid dimension, not a ``vmap`` — so it drops
+The entry points work on the trainer's stacked (P, ...) state directly — the
+partition axis is a kernel grid dimension, not a ``vmap`` — so they drop
 straight into the scan-fused ``train_chunk`` body and into ``shard_map``
-(each shard sees its local P slice).
+(each shard sees its local P slice). :func:`fused_train_step_sampling`
+additionally takes the stacked ghost-padded volume and per-(step, partition)
+counter seeds instead of host-materialized coords/targets — with it the whole
+scan body is ONE op and nothing batch-shaped touches HBM.
 """
 from __future__ import annotations
 
@@ -19,8 +23,10 @@ from typing import Sequence
 import jax.numpy as jnp
 
 from repro import backends
+from repro.core.sampling import n_boundary
 from repro.kernels.fused_train_step import ref as _ref
-from repro.kernels.fused_train_step.kernel import fused_train_step_pallas
+from repro.kernels.fused_train_step.kernel import (
+    fused_train_step_pallas, fused_train_step_sampling_pallas)
 from repro.optim.adamw import AdamW, OptConfig
 
 
@@ -48,6 +54,49 @@ def _unpack(flat, n_hidden):
     return {"tables": flat["tab"], "mlp": mlp}
 
 
+def _check_pallas_opt(opt_cfg: OptConfig, backend, compute_dtype):
+    """The shared Pallas-leg guards: unfused-only OptConfig knobs + dtype."""
+    if opt_cfg.clip_norm:
+        raise ValueError("pallas fused_train_step does not fuse global-norm "
+                         "clipping (OptConfig.clip_norm must be 0)")
+    if jnp.dtype(opt_cfg.moments_dtype) != jnp.float32:
+        raise ValueError("pallas fused_train_step keeps f32 moments "
+                         f"(got moments_dtype={opt_cfg.moments_dtype!r})")
+    if compute_dtype is not None:
+        backend.require_dtype(compute_dtype)
+
+
+def _pack_state(params, opt):
+    flat_p, n_hidden = _pack(params)
+    flat_m = _pack(opt["m"])[0]
+    flat_v = _pack(opt["v"])[0]
+    flat_mw = _pack(opt["mw"])[0] if "mw" in opt else None
+    return flat_p, flat_m, flat_v, flat_mw, n_hidden
+
+
+def _schedule_scalars(opt, opt_cfg: OptConfig, adam: AdamW, gate):
+    """(P, 4) [lr, 1-b1^t, 1-b2^t, gate] from the (traced, per-partition)
+    step counter; scalar work stays outside the kernel, tensor work inside."""
+    step = opt["step"] + 1
+    stepf = step.astype(jnp.float32)
+    lr = adam.schedule(step)
+    return step, jnp.stack([
+        jnp.broadcast_to(lr, stepf.shape),
+        1.0 - opt_cfg.beta1 ** stepf,
+        1.0 - opt_cfg.beta2 ** stepf,
+        gate.astype(jnp.float32),
+    ], axis=1)
+
+
+def _rebuild(opt, step, new_p, new_m, new_v, new_mw, n_hidden):
+    new_params = _unpack(new_p, n_hidden)
+    new_opt = {**opt, "step": step, "m": _unpack(new_m, n_hidden),
+               "v": _unpack(new_v, n_hidden)}
+    if new_mw is not None:
+        new_opt["mw"] = _unpack(new_mw, n_hidden)
+    return new_params, new_opt
+
+
 def fused_train_step(params, opt, coords, target, gate, *,
                      resolutions: Sequence[int], opt_cfg: OptConfig,
                      impl: backends.BackendLike = "ref", compute_dtype=None):
@@ -71,31 +120,9 @@ def fused_train_step(params, opt, coords, target, gate, *,
                                    resolutions, adam, backend, compute_dtype)
 
     # ---- Pallas path: the whole step as one kernel ------------------------ #
-    if opt_cfg.clip_norm:
-        raise ValueError("pallas fused_train_step does not fuse global-norm "
-                         "clipping (OptConfig.clip_norm must be 0)")
-    if jnp.dtype(opt_cfg.moments_dtype) != jnp.float32:
-        raise ValueError("pallas fused_train_step keeps f32 moments "
-                         f"(got moments_dtype={opt_cfg.moments_dtype!r})")
-    if compute_dtype is not None:
-        backend.require_dtype(compute_dtype)
-
-    flat_p, n_hidden = _pack(params)
-    flat_m = _pack(opt["m"])[0]
-    flat_v = _pack(opt["v"])[0]
-    flat_mw = _pack(opt["mw"])[0] if "mw" in opt else None
-
-    # schedule + bias corrections from the (traced, per-partition) step
-    # counter; scalar work stays outside the kernel, tensor work inside
-    step = opt["step"] + 1
-    stepf = step.astype(jnp.float32)
-    lr = adam.schedule(step)
-    scalars = jnp.stack([
-        jnp.broadcast_to(lr, stepf.shape),
-        1.0 - opt_cfg.beta1 ** stepf,
-        1.0 - opt_cfg.beta2 ** stepf,
-        gate.astype(jnp.float32),
-    ], axis=1)
+    _check_pallas_opt(opt_cfg, backend, compute_dtype)
+    flat_p, flat_m, flat_v, flat_mw, n_hidden = _pack_state(params, opt)
+    step, scalars = _schedule_scalars(opt, opt_cfg, adam, gate)
 
     new_p, new_m, new_v, new_mw, loss = fused_train_step_pallas(
         coords, target, flat_p, flat_m, flat_v, flat_mw, scalars,
@@ -105,9 +132,57 @@ def fused_train_step(params, opt, coords, target, gate, *,
         beta1=opt_cfg.beta1, beta2=opt_cfg.beta2, eps=opt_cfg.eps,
         weight_decay=opt_cfg.weight_decay, interpret=backend.interpret)
 
-    new_params = _unpack(new_p, n_hidden)
-    new_opt = {**opt, "step": step, "m": _unpack(new_m, n_hidden),
-               "v": _unpack(new_v, n_hidden)}
-    if new_mw is not None:
-        new_opt["mw"] = _unpack(new_mw, n_hidden)
+    new_params, new_opt = _rebuild(opt, step, new_p, new_m, new_v, new_mw,
+                                   n_hidden)
+    return new_params, new_opt, loss
+
+
+def fused_train_step_sampling(params, opt, volumes, seeds, gate, *,
+                              n_batch: int, boundary_lambda: float,
+                              sigma: float, ghost: int,
+                              resolutions: Sequence[int], opt_cfg: OptConfig,
+                              impl: backends.BackendLike = "ref",
+                              compute_dtype=None):
+    """One fused train step with the batch SAMPLING stage inside the op.
+
+    Same state contract as :func:`fused_train_step`, but instead of
+    host-materialized coords/targets it takes ``volumes`` — the stacked
+    ghost-padded partitions (P, nx+2g, ny+2g, nz+2g[, C]) — and ``seeds`` —
+    the (P, 2) uint32 per-(step, partition) counter words from
+    :func:`repro.core.sampling.step_seeds`. Each partition draws
+    ``n_batch`` coordinates (uniform + Eq. 2 boundary mixture, counter-based
+    so all backends produce bit-identical draws) and trilinearly gathers its
+    targets from its own volume; on pallas backends this happens inside the
+    single train-step kernel, so no coordinates, targets or RNG keys ever
+    reach HBM.
+    """
+    backend = backends.resolve(impl)
+    if not backend.supports("fused_sampling"):
+        raise ValueError(f"backend {backend.name!r} does not implement "
+                         "fused_sampling")
+    adam = AdamW(opt_cfg)
+    if not backend.is_pallas:
+        return _ref.train_step_sampling_ref(
+            params, opt, volumes, seeds, gate, resolutions, adam, backend,
+            n_batch=n_batch, boundary_lambda=boundary_lambda, sigma=sigma,
+            ghost=ghost, compute_dtype=compute_dtype)
+
+    # ---- Pallas path: sampling + fwd + bwd + AdamW as one kernel ---------- #
+    _check_pallas_opt(opt_cfg, backend, compute_dtype)
+    flat_p, flat_m, flat_v, flat_mw, n_hidden = _pack_state(params, opt)
+    step, scalars = _schedule_scalars(opt, opt_cfg, adam, gate)
+
+    new_p, new_m, new_v, new_mw, loss = fused_train_step_sampling_pallas(
+        volumes, jnp.asarray(seeds, jnp.uint32), flat_p, flat_m, flat_v,
+        flat_mw, scalars, jnp.asarray(resolutions, jnp.int32),
+        n_batch=int(n_batch),
+        n_uniform=int(n_batch) - n_boundary(int(n_batch), boundary_lambda),
+        sigma=float(sigma), ghost=int(ghost), n_hidden=n_hidden,
+        compute_dtype=(None if compute_dtype is None
+                       else jnp.dtype(compute_dtype)),
+        beta1=opt_cfg.beta1, beta2=opt_cfg.beta2, eps=opt_cfg.eps,
+        weight_decay=opt_cfg.weight_decay, interpret=backend.interpret)
+
+    new_params, new_opt = _rebuild(opt, step, new_p, new_m, new_v, new_mw,
+                                   n_hidden)
     return new_params, new_opt, loss

@@ -1,6 +1,7 @@
 """Reference composition of the fused train step.
 
 This is byte-for-byte the math of ``DVNRTrainer``'s unfused step body —
+(optionally) the counter-based batch sampler + trilinear target gather,
 forward through the backend's own hash-encode + fused-MLP ops, gradients via
 ``jax.value_and_grad``, update via :meth:`repro.optim.adamw.AdamW.step` —
 vmapped over the stacked partition axis. Backends of kind ``jnp``/``fused``
@@ -15,6 +16,8 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.sampling import training_coords_counter
+from repro.data.volume import sample_trilinear
 from repro.kernels.fused_mlp.ops import fused_mlp
 from repro.kernels.hash_encoding.ops import hash_encode
 from repro.optim.adamw import AdamW
@@ -43,3 +46,29 @@ def train_step_ref(params, opt, coords, target, gate,
         return params_p, opt_p, loss
 
     return jax.vmap(one)(params, opt, coords, target, gate)
+
+
+def train_step_sampling_ref(params, opt, volumes, seeds, gate,
+                            resolutions: Sequence[int], adam: AdamW, backend,
+                            *, n_batch: int, boundary_lambda: float,
+                            sigma: float, ghost: int, compute_dtype=None):
+    """The sampling-included fused step as its ref composition: draw the
+    counter-based batch (:func:`repro.core.sampling.training_coords_counter`
+    — bit-identical to the in-kernel draws for the same (P, 2) uint32
+    ``seeds``), gather trilinear targets from the ghost-padded ``volumes``
+    (P, nx+2g, ny+2g, nz+2g[, C]), then run :func:`train_step_ref`. This is
+    exactly the unfused trainer step's sampling + loss/grad/Adam body, so
+    jnp/fused backends replay the unfused trajectory bit-for-bit.
+    """
+
+    def sample(vol_p, seed_p):
+        coords = training_coords_counter(seed_p, n_batch, boundary_lambda,
+                                         sigma)
+        target = sample_trilinear(vol_p, coords, ghost)
+        if target.ndim == 1:
+            target = target[:, None]
+        return coords, target
+
+    coords, target = jax.vmap(sample)(volumes, seeds)
+    return train_step_ref(params, opt, coords, target, gate, resolutions,
+                          adam, backend, compute_dtype)

@@ -1,0 +1,346 @@
+"""In-op batch sampling (repro.kernels.fused_train_step sampling stage) and
+the counter-based sampler behind it (repro.core.sampling).
+
+The contract under test:
+- the counter-based draws are a pure function of (seed, global sample row) —
+  tile-invariant, so the Pallas kernel's batch tiling cannot change them;
+- fused-with-sampling is a drop-in replacement for host sampling on every
+  backend (bit-exact on ref/fused, 1e-5 f32 / <1 dB bf16 on pallas);
+- with ``fuse_train_step=on`` + ``fuse_sampling=on`` the scan-fused chunk
+  body contains NO sampling primitives outside the fused op (no threefry
+  anywhere; on the pallas leg no gather outside the pallas_call);
+- ghost-overlap samples gather identical targets from either neighboring
+  partition (paper Fig. 2A zero-exchange premise), for both the host
+  sampler and the in-kernel gather.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, backends
+from repro.configs import dvnr as dvnr_cfg
+from repro.core import sampling as S
+from repro.core.trainer import DVNRState, DVNRTrainer
+from repro.data.volume import make_partition, sample_trilinear
+from repro.kernels.fused_train_step.kernel import _gather_trilinear
+from repro.kernels.fused_train_step.ops import (fused_train_step,
+                                                fused_train_step_sampling)
+
+CFG = dvnr_cfg.SMOKE.replace(batch_size=512, n_levels=2, log2_hashmap_size=8,
+                             n_neurons=8, n_hidden_layers=1, lrate=1e-2)
+BACKENDS = ("ref", "pallas")
+
+
+def _parts(P=2, local=(8, 8, 8), kind="cloverleaf"):
+    grid = {1: (1, 1, 1), 2: (1, 1, 2), 4: (1, 2, 2)}[P]
+    return [make_partition(kind, p, grid, local, 0.3) for p in range(P)]
+
+
+def _vols(P=2, local=(8, 8, 8)):
+    return jnp.stack([p.normalized() for p in _parts(P, local)])
+
+
+def _copy(state: DVNRState) -> DVNRState:
+    c = jax.tree.map(lambda t: jnp.array(t, copy=True),
+                     (state.params, state.opt, state.loss_ma, state.active))
+    return DVNRState(*c, state.step)
+
+
+def _assert_tree_allclose(a, b, atol=1e-6):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=atol)
+
+
+# --------------------------------------------------------------------------- #
+# the counter-based sampler
+# --------------------------------------------------------------------------- #
+def test_counter_draws_are_tile_invariant():
+    """Drawing rows [0, N) in one go must equal drawing any row sub-range with
+    explicit global ids — the property that makes the kernel's BLOCK_N tiling
+    (and any future retiling) a non-event for reproducibility."""
+    seed = S.step_seeds(jax.random.PRNGKey(3), 11, 4)[2]
+    full = S.training_coords_counter(seed, 700, 0.15, 0.005)
+    n_u = 700 - S.n_boundary(700, 0.15)
+    for lo, hi in ((0, 256), (256, 512), (512, 700)):
+        rows = lo + jax.lax.broadcasted_iota(jnp.int32, (hi - lo, 1), 0)
+        tile = S.counter_coords(seed[0], seed[1], rows, n_u, 0.005)
+        np.testing.assert_array_equal(np.asarray(tile),
+                                      np.asarray(full[lo:hi]))
+
+
+def test_training_coords_layout_and_distribution():
+    key = jax.random.PRNGKey(0)
+    c = np.asarray(S.training_coords(key, 4096, 0.25, 0.005))
+    assert c.shape == (4096, 3)
+    assert c.min() >= 0.0 and c.max() <= 1.0
+    # first (1-lambda)N rows are uniform, the rest concentrate at faces
+    n_b = S.n_boundary(4096, 0.25)
+    uni, bnd = c[:4096 - n_b], c[4096 - n_b:]
+    assert abs(uni.mean() - 0.5) < 0.02
+    near = (np.minimum(bnd, 1 - bnd) < 0.02).any(axis=1).mean()
+    assert near > 0.95                      # |N(0, 0.005)| < 0.02 w.p. ~1
+    # wrapper == counter form on the same seed words
+    ctr = S.training_coords_counter(jnp.stack(S.key_words(key)), 4096,
+                                    0.25, 0.005)
+    np.testing.assert_array_equal(c, np.asarray(ctr))
+
+
+def test_step_seeds_deterministic_and_distinct():
+    key = jax.random.PRNGKey(9)
+    a = np.asarray(S.step_seeds(key, 7, 4))
+    assert a.shape == (4, 2) and a.dtype == np.uint32
+    np.testing.assert_array_equal(a, np.asarray(S.step_seeds(key, 7, 4)))
+    b = np.asarray(S.step_seeds(key, 8, 4))
+    assert not np.array_equal(a, b)                      # step sensitivity
+    assert len({tuple(r) for r in a}) == 4               # partition-distinct
+    # no jax.random primitive in the derivation chain (the scan body relies
+    # on this to stay RNG-op-free)
+    jx = jax.make_jaxpr(lambda k: S.step_seeds(k, jnp.int32(5), 4))(key)
+    assert not any("threefry" in e.primitive.name for e in jx.eqns)
+
+
+# --------------------------------------------------------------------------- #
+# the in-kernel trilinear gather vs the host sampler (satellite: Fig. 2A)
+# --------------------------------------------------------------------------- #
+def test_kernel_gather_matches_sample_trilinear():
+    """The kernel's 8-corner gather must reproduce
+    ``data.volume.sample_trilinear`` on the same draws — interior,
+    face-adjacent and out-of-range (clamped) coordinates alike."""
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.standard_normal((10, 10, 10)), jnp.float32)
+    coords = jnp.concatenate([
+        jnp.asarray(rng.uniform(0, 1, (128, 3)), jnp.float32),
+        jnp.asarray(rng.uniform(-0.05, 0.0, (16, 3)), jnp.float32),
+        jnp.asarray(rng.uniform(1.0, 1.05, (16, 3)), jnp.float32),
+        jnp.asarray([[0.0, 0.0, 0.0], [1.0, 1.0, 1.0], [0.5, 1.0, 0.0]],
+                    jnp.float32),
+    ])
+    ref = np.asarray(sample_trilinear(data, coords, 1))
+    ker = np.asarray(_gather_trilinear(data, coords, 1))
+    np.testing.assert_allclose(ker, ref, atol=1e-6)
+    # channel volumes too (velocity fields)
+    data_c = jnp.asarray(rng.standard_normal((10, 10, 10, 3)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(_gather_trilinear(data_c, coords, 1)),
+                               np.asarray(sample_trilinear(data_c, coords, 1)),
+                               atol=1e-6)
+
+
+def test_ghost_overlap_samples_consistent_across_partitions():
+    """A physical point inside the ghost-overlap band must gather the same
+    raw target from either neighboring partition (zero-exchange premise):
+    ghosts come from the simulation, so both ranks hold the same stencil."""
+    pa, pb = _parts(P=2, kind="nekrs")           # split along z at z=0.5
+    rng = np.random.default_rng(1)
+    n = 256
+    xy = rng.uniform(0.05, 0.95, (n, 2))
+    z = rng.uniform(0.5 - 0.03, 0.5 + 0.03, (n,))  # within the ghost band
+
+    def local(p, x, y, z):
+        o, e = np.asarray(p.origin), np.asarray(p.extent)
+        return jnp.asarray((np.stack([x, y, z], -1) - o) / e, jnp.float32)
+
+    ca = local(pa, xy[:, 0], xy[:, 1], z)        # z-coord slightly above 1
+    cb = local(pb, xy[:, 0], xy[:, 1], z)        # z-coord slightly below 0
+    va = np.asarray(sample_trilinear(pa.data, ca, pa.ghost))
+    vb = np.asarray(sample_trilinear(pb.data, cb, pb.ghost))
+    np.testing.assert_allclose(va, vb, atol=5e-5)
+    # the in-kernel gather agrees with the host sampler on both sides
+    np.testing.assert_allclose(np.asarray(_gather_trilinear(pa.data, ca, 1)),
+                               va, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(_gather_trilinear(pb.data, cb, 1)),
+                               vb, atol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# the fused op with in-op sampling
+# --------------------------------------------------------------------------- #
+def test_sampling_op_ref_is_bitexact_composition():
+    """On jnp/fused backends, fused_train_step_sampling must equal drawing
+    the counter batch on the host and calling fused_train_step — bit-exact."""
+    tr = DVNRTrainer(CFG, n_partitions=2)
+    st = tr.init(jax.random.PRNGKey(0))
+    vols = _vols()
+    seeds = S.step_seeds(jax.random.PRNGKey(1), 0, 2)
+    gate = jnp.ones((2,), jnp.float32)
+    res = CFG.level_resolutions()
+
+    p1, o1, l1 = fused_train_step_sampling(
+        _copy(st).params, _copy(st).opt, vols[..., None], seeds, gate,
+        n_batch=CFG.batch_size, boundary_lambda=CFG.boundary_lambda,
+        sigma=CFG.boundary_sigma, ghost=1, resolutions=res,
+        opt_cfg=tr.adam.cfg, impl="ref")
+
+    def sample(vol, seed):
+        coords = S.training_coords_counter(seed, CFG.batch_size,
+                                           CFG.boundary_lambda,
+                                           CFG.boundary_sigma)
+        return coords, sample_trilinear(vol, coords, 1)[:, None]
+
+    coords, target = jax.vmap(sample)(vols, seeds)
+    p2, o2, l2 = fused_train_step(
+        _copy(st).params, _copy(st).opt, coords, target, gate,
+        resolutions=res, opt_cfg=tr.adam.cfg, impl="ref")
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    for x, y in zip(jax.tree.leaves(p1), jax.tree.leaves(p2), strict=True):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("n_batch", [512, 700])
+def test_sampling_op_pallas_matches_ref(n_batch):
+    """The in-kernel sampling stage (single- and multi-tile) against the ref
+    composition: same loss, params within 1e-5."""
+    cfg = CFG.replace(batch_size=n_batch)
+    tr = DVNRTrainer(cfg, n_partitions=2)
+    st = tr.init(jax.random.PRNGKey(0))
+    vols = _vols()
+    seeds = S.step_seeds(jax.random.PRNGKey(1), 3, 2)
+    gate = jnp.asarray([1.0, 1.0], jnp.float32)
+    res = cfg.level_resolutions()
+    kw = dict(n_batch=n_batch, boundary_lambda=cfg.boundary_lambda,
+              sigma=cfg.boundary_sigma, ghost=1, resolutions=res,
+              opt_cfg=tr.adam.cfg)
+    p1, o1, l1 = fused_train_step_sampling(
+        _copy(st).params, _copy(st).opt, vols[..., None], seeds, gate,
+        impl="pallas", **kw)
+    p2, o2, l2 = fused_train_step_sampling(
+        _copy(st).params, _copy(st).opt, vols[..., None], seeds, gate,
+        impl="ref", **kw)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-6)
+    _assert_tree_allclose(p1, p2, atol=1e-5)
+    _assert_tree_allclose(o1["m"], o2["m"], atol=1e-5)
+
+
+# --------------------------------------------------------------------------- #
+# trainer integration: parity + flag plumbing
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_sampling_chunk_matches_unfused_f32(backend):
+    """train_chunk with in-op sampling vs the fully unfused baseline: the
+    counter-based sampler makes all paths draw the same batches, so params,
+    loss trace and convergence mask agree within the fused-step tolerance."""
+    vols = _vols()
+    tr_s = DVNRTrainer(CFG.replace(fuse_train_step="on", fuse_sampling="on"),
+                       2, impl=backend)
+    tr_u = DVNRTrainer(CFG.replace(fuse_train_step="off"), 2, impl=backend)
+    assert tr_s.fuse_sampling and not tr_u.fuse_sampling
+    st = tr_s.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    n = 7
+    fused, tf = tr_s.train_chunk(_copy(st), vols, n, key=key)
+    unfused, tu = tr_u.train_chunk(_copy(st), vols, n, key=key)
+    assert fused.step == unfused.step == n
+    _assert_tree_allclose(fused.params, unfused.params, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(tf), np.asarray(tu), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(fused.active),
+                                  np.asarray(unfused.active))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_fused_sampling_bf16(backend):
+    """bf16 + f32 master with in-op sampling: the ref composition replays the
+    host-sampled fused trajectory exactly; the Pallas kernel must land within
+    1 dB PSNR of the unfused baseline after training."""
+    cfg = CFG.replace(precision="bf16")
+    vols = _vols()
+    tr_s = DVNRTrainer(cfg.replace(fuse_train_step="on", fuse_sampling="on"),
+                       2, impl=backend)
+    st = tr_s.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    if backend == "ref":
+        tr_h = DVNRTrainer(cfg.replace(fuse_train_step="on",
+                                       fuse_sampling="off"), 2, impl=backend)
+        a, ta = tr_s.train_chunk(_copy(st), vols, 7, key=key)
+        b, tb = tr_h.train_chunk(_copy(st), vols, 7, key=key)
+        _assert_tree_allclose(a.opt["mw"], b.opt["mw"], atol=1e-7)
+        np.testing.assert_allclose(np.asarray(ta), np.asarray(tb), atol=1e-7)
+        assert a.params["tables"].dtype == jnp.bfloat16
+        return
+    tr_u = DVNRTrainer(cfg.replace(fuse_train_step="off"), 2, impl=backend)
+    sa, _ = tr_s.train(_copy(st), vols, steps=60, key=key)
+    su, _ = tr_u.train(_copy(st), vols, steps=60, key=key)
+    pa = tr_s.evaluate(sa, vols, (8, 8, 8))["psnr"]
+    pu = tr_u.evaluate(su, vols, (8, 8, 8))["psnr"]
+    assert abs(pa - pu) < 1.0, (pa, pu)
+
+
+def _walk_prims(jaxpr, acc, *, into_pallas=False):
+    for eqn in jaxpr.eqns:
+        acc.append(eqn.primitive.name)
+        if eqn.primitive.name == "pallas_call" and not into_pallas:
+            continue
+        for v in eqn.params.values():
+            for x in (v if isinstance(v, (list, tuple)) else [v]):
+                j = getattr(x, "jaxpr", None)
+                if j is not None:
+                    _walk_prims(j, acc, into_pallas=into_pallas)
+                elif hasattr(x, "eqns"):
+                    _walk_prims(x, acc, into_pallas=into_pallas)
+    return acc
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_chunk_jaxpr_has_no_sampling_ops_outside_fused_op(backend):
+    """The acceptance gate: with fuse_train_step=on + fuse_sampling=on the
+    jitted chunk body contains no RNG primitives at all (the counter seeds
+    are plain uint32 arithmetic) and, on the pallas leg, no gather outside
+    the pallas_call — sampling lives entirely inside the fused op."""
+    vols = _vols()
+    key = jax.random.PRNGKey(1)
+    tr = DVNRTrainer(CFG.replace(fuse_train_step="on", fuse_sampling="on"),
+                     2, impl=backend)
+    st = tr.init(jax.random.PRNGKey(0))
+    jx = jax.make_jaxpr(tr._chunk_body(3))(
+        st.params, st.opt, vols, key, jnp.int32(0), st.active, st.loss_ma)
+    prims = _walk_prims(jx.jaxpr, [])
+    assert not any("threefry" in p or "random_bits" in p for p in prims), prims
+    if backend == "pallas":
+        assert prims.count("pallas_call") > 0
+        assert "gather" not in prims, [p for p in prims if p == "gather"]
+    # control: with host sampling the same walk DOES see gathers (the walk
+    # is not vacuous)
+    tr_h = DVNRTrainer(CFG.replace(fuse_train_step="on", fuse_sampling="off"),
+                       2, impl=backend)
+    st_h = tr_h.init(jax.random.PRNGKey(0))
+    jx_h = jax.make_jaxpr(tr_h._chunk_body(3))(
+        st_h.params, st_h.opt, vols, key, jnp.int32(0), st_h.active,
+        st_h.loss_ma)
+    assert "gather" in _walk_prims(jx_h.jaxpr, [])
+
+
+def test_fuse_sampling_flag_resolution():
+    assert backends.resolve("ref").fused_sampling == "ref"
+    assert backends.resolve("fused").fused_sampling == "ref"
+    assert backends.resolve("pallas").fused_sampling == "pallas-interpret"
+    assert backends.resolve("pallas_tpu").fused_sampling == "pallas"
+
+    assert DVNRTrainer(CFG, 1).fuse_sampling                      # auto -> on
+    assert not DVNRTrainer(CFG.replace(fuse_sampling="off"), 1).fuse_sampling
+    with pytest.raises(ValueError, match="fuse_sampling"):
+        DVNRTrainer(CFG.replace(fuse_sampling="always"), 1)
+    # in-op sampling needs the fused step: auto degrades, "on" errors
+    assert not DVNRTrainer(CFG.replace(fuse_train_step="off"),
+                           1).fuse_sampling
+    with pytest.raises(ValueError, match="requires the fused train step"):
+        DVNRTrainer(CFG.replace(fuse_train_step="off", fuse_sampling="on"), 1)
+    # a backend without the capability: auto falls back, "on" raises
+    nosamp = backends.register_backend(backends.Backend(
+        name="nosamp_test", kind="jnp", priority=-1,
+        capabilities=frozenset({"hash_encoding", "fused_train_step"})))
+    assert nosamp.fused_sampling == ""
+    assert not DVNRTrainer(CFG, 1, impl="nosamp_test").fuse_sampling
+    assert DVNRTrainer(CFG, 1, impl="nosamp_test").fuse_train_step
+    with pytest.raises(ValueError, match="does not implement"):
+        DVNRTrainer(CFG.replace(fuse_sampling="on"), 1, impl="nosamp_test")
+
+
+def test_api_train_fuse_sampling_override():
+    parts = _parts(P=2)
+    model, info = api.train(parts, CFG, key=jax.random.PRNGKey(0), steps=3,
+                            backend="ref", fuse_sampling="on")
+    assert info["trainer"].fuse_sampling
+    assert model.cfg.fuse_sampling == "on"
+    with pytest.raises(ValueError, match="fuse_sampling"):
+        api.train(parts, CFG, key=jax.random.PRNGKey(0), steps=1,
+                  trainer=info["trainer"], fuse_sampling="off")

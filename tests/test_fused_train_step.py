@@ -177,7 +177,10 @@ def test_fused_chunk_matches_unfused_f32(backend):
     """train_chunk with fusion on vs the unfused parity baseline: params,
     loss trace, loss_ma and convergence mask all within 1e-5 (f32)."""
     vols = _vols()
-    tr_f = DVNRTrainer(CFG.replace(fuse_train_step="on"), 2, impl=backend)
+    # fuse_sampling pinned off: this file gates the host-sampled fused step
+    # (PR 4); the in-op sampling path has its own suite (test_fused_sampling)
+    tr_f = DVNRTrainer(CFG.replace(fuse_train_step="on", fuse_sampling="off"),
+                       2, impl=backend)
     tr_u = DVNRTrainer(CFG.replace(fuse_train_step="off"), 2, impl=backend)
     st = tr_f.init(jax.random.PRNGKey(0))
     key = jax.random.PRNGKey(1)
@@ -200,7 +203,7 @@ def test_fused_bf16_trains_to_same_quality(backend):
     """bf16 + f32 master under fusion: the ref composition replays the
     unfused trajectory exactly; the Pallas kernel (f32 grad accumulation vs
     the unfused bf16 one) must land within 1 dB PSNR after training."""
-    cfg = CFG.replace(precision="bf16")
+    cfg = CFG.replace(precision="bf16", fuse_sampling="off")
     vols = _vols()
     tr_f = DVNRTrainer(cfg.replace(fuse_train_step="on"), 2, impl=backend)
     tr_u = DVNRTrainer(cfg.replace(fuse_train_step="off"), 2, impl=backend)
@@ -225,7 +228,8 @@ def test_fused_bf16_trains_to_same_quality(backend):
 def test_fused_step_convergence_masking():
     """An immediately-reachable target freezes both fused drivers at the same
     step with identical params (the gate path inside the fused op)."""
-    cfg = CFG.replace(target_loss=10.0, fuse_train_step="on")
+    cfg = CFG.replace(target_loss=10.0, fuse_train_step="on",
+                      fuse_sampling="off")
     vols = _vols()
     tr = DVNRTrainer(cfg, 2)
     tr_u = DVNRTrainer(cfg.replace(fuse_train_step="off"), 2)
@@ -273,7 +277,8 @@ _ZERO_COMM_SCRIPT = textwrap.dedent("""
             r"collective-permute)\\b")
 
     mesh = build_mesh(np.asarray(jax.devices()).reshape(4, 2), ("data", "model"))
-    cfg = dvnr_cfg.SMOKE.replace(batch_size=256, fuse_train_step="on")
+    cfg = dvnr_cfg.SMOKE.replace(batch_size=256, fuse_train_step="on",
+                                 fuse_sampling="off")
     P = 8
     parts = [make_partition("s3d", p, (2, 2, 2), (8, 8, 8)) for p in range(P)]
     vols = jnp.stack([p.normalized() for p in parts])
