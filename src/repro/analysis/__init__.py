@@ -1,0 +1,86 @@
+"""repro.analysis — static verification of the stack's systems invariants.
+
+A pass library over jaxprs and post-SPMD stableHLO with a registry of named
+checks (structured IR walks, never text regexes):
+
+============================ ========= ==================================================
+check                        level     invariant
+============================ ========= ==================================================
+``zero_collectives``         hlo       distributed train/render/chunk programs contain
+                                       no all-reduce / all-gather / psum / ppermute /
+                                       collective-permute (the paper's headline claim)
+``vmem_budget``              jaxpr     every ``pallas_call``'s block + scratch footprint
+                                       fits the backend's VMEM budget (per-buffer bill)
+``precision_flow``           jaxpr     no silent f32 upcasts in bf16 compute regions;
+                                       declared f32 master state is f32
+``rng_gather_placement``     jaxpr     with fuse_sampling=on: no RNG primitive and (on
+                                       pallas legs) no gather outside the fused op
+``donation``                 lowered   the chunked carry is actually donated (aliased)
+============================ ========= ==================================================
+
+Three entry points:
+
+- CLI: ``python -m repro.analysis --config quickstart --backend ref``
+- pytest: ``assert_clean(fn, *args, checks=[...], ...)``
+- trainer startup: ``DVNRConfig.static_checks = "off" | "warn" | "error"``
+  (``api.train`` refuses violating configs under ``"error"``)
+
+This package root is import-light on purpose: the CLI must set ``XLA_FLAGS``
+before anything imports jax, so the public names resolve lazily (PEP 562).
+"""
+from __future__ import annotations
+
+_LAZY = {
+    # report / registry (jax-free)
+    "Violation": "repro.analysis.report",
+    "CheckResult": "repro.analysis.report",
+    "Report": "repro.analysis.report",
+    "StaticCheckError": "repro.analysis.report",
+    "Check": "repro.analysis.registry",
+    "register_check": "repro.analysis.registry",
+    "get_check": "repro.analysis.registry",
+    "available_checks": "repro.analysis.registry",
+    # ir / vmem
+    "ProgramArtifacts": "repro.analysis.ir",
+    "EqnSite": "repro.analysis.ir",
+    "iter_eqns": "repro.analysis.ir",
+    "capture": "repro.analysis.ir",
+    "VmemBuffer": "repro.analysis.vmem",
+    "KernelFootprint": "repro.analysis.vmem",
+    "estimate_jaxpr": "repro.analysis.vmem",
+    "footprint_of": "repro.analysis.vmem",
+    # checks / runner (importing repro.analysis.checks registers the builtins)
+    "CheckContext": "repro.analysis.checks",
+    "run_checks": "repro.analysis.checks",
+    "assert_clean": "repro.analysis.checks",
+    # standard programs
+    "analyze_config": "repro.analysis.programs",
+    "config_programs": "repro.analysis.programs",
+    "build_trainer": "repro.analysis.programs",
+    "trainer_programs": "repro.analysis.programs",
+    "render_program": "repro.analysis.programs",
+    "available_configs": "repro.analysis.programs",
+    "get_config": "repro.analysis.programs",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    mod_name = _LAZY.get(name)
+    if mod_name is None:
+        raise AttributeError(f"module 'repro.analysis' has no attribute "
+                             f"{name!r}")
+    import importlib
+
+    # registry lookups must see the built-in checks: make sure the checks
+    # module (the registration site) is loaded with the registry
+    if mod_name == "repro.analysis.registry":
+        importlib.import_module("repro.analysis.checks")
+    value = getattr(importlib.import_module(mod_name), name)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return __all__

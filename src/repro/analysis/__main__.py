@@ -1,0 +1,128 @@
+"""``python -m repro.analysis`` — run the static verifier from the shell.
+
+Examples::
+
+    # all five checks over the quickstart config's train/render programs
+    python -m repro.analysis --config quickstart --backend ref
+    python -m repro.analysis --config quickstart --backend pallas
+
+    # both backend legs, distributed over 8 fake devices (the CI repro-lint
+    # step); nonzero exit on any violation
+    python -m repro.analysis --config quickstart --backend ref,pallas
+
+    # cheap subset (no XLA compile), single check
+    python -m repro.analysis --config smoke --max-level jaxpr \\
+        --checks vmem_budget
+
+    # the known over-budget 256^3 sampling config (exits 1 with the
+    # per-buffer VMEM bill)
+    python -m repro.analysis --config production256 --backend pallas
+
+``--devices N`` forces N fake CPU devices (sets ``XLA_FLAGS`` BEFORE jax is
+imported — why this module keeps all jax imports inside ``main``); with more
+than one device and ``--mesh auto`` the train programs are built under
+``shard_map`` over all of them, so ``zero_collectives`` proves the per-device
+program of the real distributed setup.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _parse_args(argv):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static verifier for the DVNR stack's systems invariants "
+                    "(zero communication, VMEM budget, precision flow, "
+                    "RNG/gather placement, donation).")
+    ap.add_argument("--config", default="quickstart",
+                    help="named analysis config (see --list-configs)")
+    ap.add_argument("--backend", default="auto",
+                    help="backend leg(s), comma-separated (e.g. ref,pallas)")
+    ap.add_argument("--checks", default=None,
+                    help="comma-separated subset of checks (default: all)")
+    ap.add_argument("--max-level", default=None,
+                    choices=("jaxpr", "lowered", "hlo"),
+                    help="cap artifact cost: jaxpr = trace only (no XLA "
+                         "compile); default runs everything")
+    ap.add_argument("--partitions", type=int, default=None,
+                    help="partition count (default: 2, or the device count "
+                         "when a mesh is used)")
+    ap.add_argument("--local-shape", default=None,
+                    help="override the config's local volume shape, e.g. "
+                         "64,64,64")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="fake CPU device count (>1 enables the shard_map "
+                         "legs; sets XLA_FLAGS before importing jax)")
+    ap.add_argument("--mesh", default="auto", choices=("auto", "off"),
+                    help="shard the train programs over all devices "
+                         "(auto: when --devices > 1)")
+    ap.add_argument("--list-checks", action="store_true")
+    ap.add_argument("--list-configs", action="store_true")
+    return ap.parse_args(argv)
+
+
+def main(argv=None) -> int:
+    args = _parse_args(argv)
+
+    if args.devices > 1 and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={args.devices}"
+
+    # jax imports only from here on (XLA_FLAGS is now set)
+    from repro.analysis import (analyze_config, available_checks,
+                                available_configs, get_check)
+
+    if args.list_checks:
+        for name in available_checks():
+            chk = get_check(name)
+            print(f"{name:<24s} [{chk.level:<7s}] {chk.description}")
+        return 0
+    if args.list_configs:
+        print("\n".join(available_configs()))
+        return 0
+
+    mesh = None
+    n_partitions = args.partitions
+    if args.mesh == "auto" and args.devices > 1:
+        import jax
+        import numpy as np
+
+        from repro.launch.mesh import build_mesh
+
+        devs = jax.devices()
+        mesh = build_mesh(np.asarray(devs), ("dvnr",))
+        if n_partitions is None:
+            n_partitions = len(devs)
+    if n_partitions is None:
+        n_partitions = 2
+
+    local_shape = (tuple(int(d) for d in args.local_shape.split(","))
+                   if args.local_shape else None)
+    checks = args.checks.split(",") if args.checks else None
+
+    ok = True
+    for backend in args.backend.split(","):
+        print(f"== backend {backend} ==")
+        try:
+            reports = analyze_config(
+                args.config, backend=backend, local_shape=local_shape,
+                n_partitions=n_partitions, mesh=mesh, checks=checks,
+                max_level=args.max_level)
+        except ValueError as e:
+            # build-time rejection (e.g. the over-budget sampling kernel)
+            # counts as a finding, not a crash: report it and fail the run
+            print(f"REJECTED at trainer build time:\n{e}")
+            ok = False
+            continue
+        for rep in reports:
+            print(rep.render())
+            ok = ok and rep.passed
+    print("static analysis:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,349 @@
+"""The five named checks of the static verifier, plus ``run_checks`` /
+``assert_clean`` (the pytest integration).
+
+Every check is a structured walk over one of the program artifacts of
+:mod:`repro.analysis.ir` — jaxpr equations, the lowered stableHLO module's
+entry attributes, or the parsed post-SPMD HLO op graph — never a regex over
+raw module text.
+
+Registered checks (see README "Static analysis" for the user-facing table):
+
+- ``zero_collectives``   the paper's headline systems claim: the per-device
+                         program of the distributed train/render/chunk
+                         functions contains NO communication ops;
+- ``vmem_budget``        every ``pallas_call`` fits the backend's VMEM budget
+                         (per-buffer breakdown on failure);
+- ``precision_flow``     the declared :class:`~repro.precision.Precision`
+                         policy holds end-to-end: every floating matmul runs
+                         in the compute dtype (no silent upcasts), and
+                         declared f32 master state is actually f32;
+- ``rng_gather_placement`` with in-op sampling, no RNG primitive anywhere
+                         outside the fused op, and (pallas legs) no gather
+                         outside the ``pallas_call``;
+- ``donation``           the donated carry (params/opt of the scan-fused
+                         chunk) is actually aliased input->output by lowering.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+from repro.analysis import vmem as _vmem
+from repro.analysis.ir import ProgramArtifacts, capture
+from repro.analysis.registry import available_checks, get_check, register_check
+from repro.analysis.report import (CheckResult, Report, StaticCheckError,
+                                   Violation)
+
+# --------------------------------------------------------------------------- #
+# Context
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class CheckContext:
+    """What the checks know about the program besides its IR.
+
+    Unset fields make the checks that need them SKIP (reported as such, never
+    silently passed): e.g. ``precision=None`` skips ``precision_flow``,
+    ``donate_argnums=()`` skips ``donation``.
+    """
+
+    backend: Optional[object] = None          # repro.backends.Backend
+    precision: Optional[object] = None        # repro.precision.Precision
+    fuse_sampling: bool = False               # in-op sampling expected?
+    expect_pallas: bool = False               # program must contain pallas_call
+    donate_argnums: Tuple[int, ...] = ()
+    vmem_limit_bytes: Optional[int] = None    # override backend budget
+    extra: dict = field(default_factory=dict)
+
+    def resolved_vmem_limit(self) -> Optional[int]:
+        if self.vmem_limit_bytes is not None:
+            return self.vmem_limit_bytes
+        if self.backend is not None:
+            return getattr(self.backend, "vmem_limit_bytes", None)
+        return None
+
+
+# --------------------------------------------------------------------------- #
+# (1) zero-collective verifier
+# --------------------------------------------------------------------------- #
+#: jaxpr-level communication primitives (pre-SPMD intent)
+_COLLECTIVE_PRIMS = frozenset({
+    "psum", "psum2", "pmax", "pmin", "pbroadcast", "ppermute", "pgather",
+    "all_gather", "all_to_all", "reduce_scatter", "collective_permute",
+})
+#: post-SPMD HLO opcodes (what actually hits the interconnect)
+_COLLECTIVE_HLO_OPS = frozenset({
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+})
+
+
+def _is_collective_opcode(opcode: str) -> bool:
+    base = opcode[:-6] if opcode.endswith("-start") else opcode
+    return base in _COLLECTIVE_HLO_OPS
+
+
+@register_check(
+    "zero_collectives", level="hlo",
+    description="distributed program contains no communication ops "
+                "(jaxpr primitives AND post-SPMD HLO)")
+def check_zero_collectives(program: ProgramArtifacts,
+                           ctx: CheckContext) -> CheckResult:
+    violations = []
+    # jaxpr level: explicit communication intent (psum & friends) — catches
+    # deliberately-collective programs without needing a multi-device compile
+    for site in program.eqns():
+        if site.primitive in _COLLECTIVE_PRIMS:
+            violations.append(Violation(
+                "zero_collectives",
+                f"jaxpr primitive {site.primitive!r} (communication op in the "
+                "traced program)", site.path or "<top>"))
+    # post-SPMD level: the per-device compiled module (structured walk of the
+    # parsed op graph, including async -start forms)
+    n_ops = 0
+    for cname, op in program.iter_hlo_ops():
+        n_ops += 1
+        if _is_collective_opcode(op.opcode):
+            violations.append(Violation(
+                "zero_collectives",
+                f"post-SPMD HLO op {op.opcode!r} ({op.name})", cname))
+    return CheckResult("zero_collectives", not violations, violations,
+                       details={"note": f"{n_ops} HLO ops walked"})
+
+
+# --------------------------------------------------------------------------- #
+# (2) VMEM budget estimator
+# --------------------------------------------------------------------------- #
+@register_check(
+    "vmem_budget", level="jaxpr",
+    description="every pallas_call's block/scratch footprint fits the "
+                "backend VMEM budget")
+def check_vmem_budget(program: ProgramArtifacts,
+                      ctx: CheckContext) -> CheckResult:
+    limit = ctx.resolved_vmem_limit()
+    footprints = _vmem.estimate_jaxpr(program.jaxpr)
+    details = {"footprints": footprints,
+               "limit_bytes": limit,
+               "note": (f"{len(footprints)} pallas_call(s), "
+                        f"peak {max((f.total_bytes for f in footprints), default=0)} B"
+                        if footprints else "no pallas_call in program")}
+    if not footprints:
+        return CheckResult("vmem_budget", True, details=details)
+    if limit is None:
+        return CheckResult("vmem_budget", True, skipped=True,
+                           skip_reason="no VMEM budget for this backend",
+                           details=details)
+    violations = [
+        Violation("vmem_budget", msg, fp.kernel)
+        for fp, msg in _vmem.check_budget(footprints, limit)
+    ]
+    return CheckResult("vmem_budget", not violations, violations, details)
+
+
+# --------------------------------------------------------------------------- #
+# (3) precision-flow checker
+# --------------------------------------------------------------------------- #
+_MATMUL_PRIMS = ("dot_general", "conv_general_dilated")
+
+
+@register_check(
+    "precision_flow", level="jaxpr",
+    description="every floating matmul runs in the declared compute dtype; "
+                "declared f32 master state is f32")
+def check_precision_flow(program: ProgramArtifacts,
+                         ctx: CheckContext) -> CheckResult:
+    import jax.numpy as jnp
+
+    if ctx.precision is None:
+        return CheckResult("precision_flow", True, skipped=True,
+                           skip_reason="no precision policy in context")
+    prec = ctx.precision
+    cdt = jnp.dtype(prec.compute_dtype)
+    violations = []
+    n_dots = 0
+    for site in program.eqns():
+        if site.primitive not in _MATMUL_PRIMS:
+            continue
+        op_dtypes = {v.aval.dtype for v in site.eqn.invars
+                     if hasattr(v.aval, "dtype")}
+        if not any(jnp.issubdtype(d, jnp.floating) for d in op_dtypes):
+            continue                                 # integer/bool contraction
+        n_dots += 1
+        bad = sorted(str(d) for d in op_dtypes if d != cdt)
+        if bad:
+            where = "in-kernel" if site.in_pallas else "host-side"
+            violations.append(Violation(
+                "precision_flow",
+                f"{where} {site.primitive} runs on {'/'.join(bad)} operands; "
+                f"policy {prec.name!r} declares compute dtype {cdt.name!r} "
+                f"(silent {'upcast' if any('32' in b for b in bad) and cdt.itemsize < 4 else 'dtype drift'})",
+                site.path or "<top>"))
+    # declared f32 master/accumulator state: under a mixed policy every
+    # narrow (param-dtype) tensor output must be shadowed by a master-dtype
+    # output of the same shape (the f32 master + moments the policy promises)
+    if prec.needs_master:
+        pdt, mdt = jnp.dtype(prec.param_dtype), jnp.dtype(prec.master_dtype)
+        out_avals = [getattr(v, "aval", v) for v in program.jaxpr.jaxpr.outvars]
+        master_shapes = {tuple(a.shape) for a in out_avals
+                         if getattr(a, "dtype", None) == mdt}
+        for a in out_avals:
+            if getattr(a, "dtype", None) == pdt and len(a.shape) >= 2 \
+                    and tuple(a.shape) not in master_shapes:
+                violations.append(Violation(
+                    "precision_flow",
+                    f"{pdt.name} output {tuple(a.shape)} has no {mdt.name} "
+                    f"master-state shadow, but policy {prec.name!r} declares "
+                    f"{mdt.name} master/accumulate", "<outputs>"))
+    return CheckResult("precision_flow", not violations, violations,
+                       details={"note": f"{n_dots} matmul(s) checked against "
+                                        f"{cdt.name}"})
+
+
+# --------------------------------------------------------------------------- #
+# (4) RNG / gather placement checker
+# --------------------------------------------------------------------------- #
+_RNG_PRIMS = frozenset({
+    "threefry2x32", "random_bits", "random_seed", "random_fold_in",
+    "random_wrap", "random_unwrap", "random_gamma", "rng_bit_generator",
+    "rng_uniform",
+})
+
+
+@register_check(
+    "rng_gather_placement", level="jaxpr",
+    description="with fuse_sampling=on: no RNG primitive outside the fused "
+                "op; on pallas legs no gather outside the pallas_call")
+def check_rng_gather_placement(program: ProgramArtifacts,
+                               ctx: CheckContext) -> CheckResult:
+    if not ctx.fuse_sampling:
+        return CheckResult("rng_gather_placement", True, skipped=True,
+                           skip_reason="fuse_sampling not expected on")
+    violations = []
+    n_pallas = 0
+    for site in program.eqns():
+        if site.primitive == "pallas_call":
+            n_pallas += 1
+        if site.in_pallas:
+            continue                      # inside the fused op: allowed
+        if site.primitive in _RNG_PRIMS:
+            violations.append(Violation(
+                "rng_gather_placement",
+                f"RNG primitive {site.primitive!r} outside the fused op (the "
+                "counter-based sampler must not materialize draws in the "
+                "program body)", site.path or "<top>"))
+        elif ctx.expect_pallas and site.primitive == "gather":
+            violations.append(Violation(
+                "rng_gather_placement",
+                "gather outside the pallas_call (the trilinear target gather "
+                "must run in-kernel with fuse_sampling=on)",
+                site.path or "<top>"))
+    if ctx.expect_pallas and n_pallas == 0:
+        violations.append(Violation(
+            "rng_gather_placement",
+            "no pallas_call in the program (expected the fused sampling "
+            "kernel on a pallas backend)", "<top>"))
+    return CheckResult("rng_gather_placement", not violations, violations,
+                       details={"note": f"{n_pallas} pallas_call(s)"})
+
+
+# --------------------------------------------------------------------------- #
+# (5) donation / aliasing check
+# --------------------------------------------------------------------------- #
+@register_check(
+    "donation", level="lowered",
+    description="declared donated args (the chunked carry) are actually "
+                "aliased input->output by lowering")
+def check_donation(program: ProgramArtifacts, ctx: CheckContext) -> CheckResult:
+    import jax
+
+    donate = ctx.donate_argnums or program.donate_argnums
+    if not donate:
+        return CheckResult("donation", True, skipped=True,
+                           skip_reason="no donated args declared in context")
+    # map donated argnums -> flat arg-buffer indices of the entry computation
+    offsets, flat_idx = [], []
+    off = 0
+    for i, a in enumerate(program.args):
+        leaves = jax.tree_util.tree_leaves(a)
+        offsets.append((off, off + len(leaves)))
+        off += len(leaves)
+    for i in donate:
+        lo, hi = offsets[i]
+        flat_idx.extend(range(lo, hi))
+    aliased = {i for i, _ in program.donated_output_aliases()}
+    missing = [i for i in flat_idx if i not in aliased]
+    violations = []
+    if missing:
+        violations.append(Violation(
+            "donation",
+            f"{len(missing)}/{len(flat_idx)} donated buffers not aliased to "
+            f"any output (flat arg indices {missing[:8]}{'...' if len(missing) > 8 else ''}); "
+            "the carry would be copied every chunk instead of updated in place",
+            "<entry>"))
+    return CheckResult("donation", not violations, violations,
+                       details={"note": f"{len(flat_idx) - len(missing)}/"
+                                        f"{len(flat_idx)} buffers aliased"})
+
+
+# --------------------------------------------------------------------------- #
+# Runner + pytest integration
+# --------------------------------------------------------------------------- #
+_LEVEL_ORDER = {"jaxpr": 0, "lowered": 1, "hlo": 2}
+
+
+def run_checks(program: ProgramArtifacts, ctx: Optional[CheckContext] = None,
+               checks: Optional[Sequence[str]] = None,
+               max_level: Optional[str] = None) -> Report:
+    """Run the named ``checks`` (default: all registered) on ``program``.
+
+    ``max_level`` caps the artifact cost: ``"jaxpr"`` runs only trace-level
+    checks (no lowering, no compile — what the trainer-startup hook uses),
+    ``"lowered"`` adds the stableHLO checks, ``None``/``"hlo"`` runs
+    everything including the post-SPMD compile.
+    """
+    ctx = ctx or CheckContext()
+    names = list(checks) if checks is not None else list(available_checks())
+    cap = _LEVEL_ORDER[max_level] if max_level is not None else None
+    report = Report(program.name)
+    for n in names:
+        chk = get_check(n)
+        if cap is not None and _LEVEL_ORDER[chk.level] > cap:
+            report.results.append(CheckResult(
+                n, True, skipped=True,
+                skip_reason=f"needs {chk.level} artifacts (max_level="
+                            f"{max_level})"))
+            continue
+        report.results.append(chk(program, ctx))
+    return report
+
+
+def assert_clean(fn, *args, checks: Optional[Sequence[str]] = None,
+                 name: Optional[str] = None,
+                 backend=None, precision=None, fuse_sampling: bool = False,
+                 expect_pallas: bool = False,
+                 donate_argnums: Tuple[int, ...] = (),
+                 static_argnums: Tuple[int, ...] = (),
+                 vmem_limit_bytes: Optional[int] = None,
+                 max_level: Optional[str] = None) -> Report:
+    """Trace/lower/compile ``fn(*args)`` and assert the named checks pass.
+
+    The pytest-facing entry point that replaces the per-test HLO regex
+    helpers: raises :class:`StaticCheckError` (an ``AssertionError``) carrying
+    the full report on any violation, and returns the report when clean so
+    tests can additionally assert non-vacuity (op counts etc.)."""
+    from repro import backends as _backends
+    from repro.precision import resolve_precision
+
+    program = capture(fn, *args, name=name, donate_argnums=donate_argnums,
+                      static_argnums=static_argnums)
+    ctx = CheckContext(
+        backend=_backends.resolve(backend) if backend is not None else None,
+        precision=(resolve_precision(precision) if precision is not None
+                   else None),
+        fuse_sampling=fuse_sampling, expect_pallas=expect_pallas,
+        donate_argnums=donate_argnums, vmem_limit_bytes=vmem_limit_bytes)
+    report = run_checks(program, ctx, checks=checks, max_level=max_level)
+    if not report.passed:
+        raise StaticCheckError(report)
+    return report

@@ -1,0 +1,145 @@
+"""Program capture for the static verifier.
+
+A :class:`ProgramArtifacts` wraps one ``(fn, args)`` pair and lazily derives
+the three representations the checks read, each computed at most once:
+
+- ``jaxpr``        — the traced program (``jax.make_jaxpr``; abstract args OK)
+- ``lowered``      — the stableHLO module (``jax.jit(...).lower``), carrying
+                     donation as ``tf.aliasing_output`` arg attributes
+- ``hlo``          — the post-SPMD optimized HLO, parsed into the structured
+                     computation/op graph of :mod:`repro.utils.hlo` (the
+                     per-device program; collectives live here after SPMD
+                     partitioning)
+
+Plus the structured walkers checks share: :func:`iter_eqns` (recursive jaxpr
+walk that knows whether an equation sits inside a ``pallas_call`` body) and
+:func:`iter_hlo_ops` (flat walk of the parsed HLO module).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional, Tuple
+
+
+@dataclass(frozen=True)
+class EqnSite:
+    """One jaxpr equation plus where it sits."""
+
+    eqn: object
+    in_pallas: bool      # inside a pallas_call kernel body?
+    path: str            # e.g. "scan/pallas_call" — outermost first
+
+    @property
+    def primitive(self) -> str:
+        return self.eqn.primitive.name
+
+
+def iter_eqns(jaxpr, *, _in_pallas: bool = False,
+              _path: str = "") -> Iterator[EqnSite]:
+    """Depth-first walk of every equation reachable from ``jaxpr``, descending
+    into scan/cond/jit/custom-vjp sub-jaxprs AND into ``pallas_call`` kernel
+    bodies (tagged ``in_pallas=True`` so placement checks can tell inside from
+    outside)."""
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        yield EqnSite(eqn, _in_pallas, _path)
+        inside = _in_pallas or name == "pallas_call"
+        sub_path = f"{_path}/{name}" if _path else name
+        for v in eqn.params.values():
+            for x in (v if isinstance(v, (list, tuple)) else [v]):
+                inner = getattr(x, "jaxpr", None)
+                if inner is not None:
+                    yield from iter_eqns(inner, _in_pallas=inside,
+                                         _path=sub_path)
+                elif hasattr(x, "eqns"):
+                    yield from iter_eqns(x, _in_pallas=inside, _path=sub_path)
+
+
+class ProgramArtifacts:
+    """Lazy bundle of the representations of one program under analysis."""
+
+    def __init__(self, name: str, fn, args: tuple, *,
+                 donate_argnums: Tuple[int, ...] = (),
+                 static_argnums: Tuple[int, ...] = ()):
+        self.name = name
+        self.fn = fn
+        self.args = args
+        self.donate_argnums = tuple(donate_argnums)
+        self.static_argnums = tuple(static_argnums)
+        self._jaxpr = None
+        self._lowered = None
+        self._hlo_comps = None
+
+    # ---------------------------- jaxpr level --------------------------- #
+    @property
+    def jaxpr(self):
+        if self._jaxpr is None:
+            import jax
+            self._jaxpr = jax.make_jaxpr(
+                self.fn, static_argnums=self.static_argnums)(*self.args)
+        return self._jaxpr
+
+    def eqns(self) -> Iterator[EqnSite]:
+        return iter_eqns(self.jaxpr.jaxpr)
+
+    # --------------------------- lowered level -------------------------- #
+    @property
+    def lowered(self):
+        if self._lowered is None:
+            import jax
+            self._lowered = jax.jit(
+                self.fn, donate_argnums=self.donate_argnums,
+                static_argnums=self.static_argnums).lower(*self.args)
+        return self._lowered
+
+    def donated_output_aliases(self) -> list:
+        """Structured read of the stableHLO entry arg attributes: the list of
+        ``(arg index, aliased output index)`` pairs lowering recorded for
+        donated buffers (``tf.aliasing_output``)."""
+        mod = self.lowered.compiler_ir("stablehlo")
+        main = None
+        for op in mod.body.operations:
+            if getattr(op, "name", None) in ("main", '"main"') or \
+                    getattr(op, "sym_name", None) is not None and \
+                    str(op.sym_name).strip('"') == "main":
+                main = op
+                break
+        if main is None:                      # single-function modules
+            main = mod.body.operations[0]
+        out = []
+        try:
+            arg_attrs = main.arg_attrs
+        except Exception:
+            return out
+        for i, attrs in enumerate(arg_attrs):
+            d = {a.name: a.attr for a in attrs}
+            alias = d.get("tf.aliasing_output")
+            if alias is not None:
+                out.append((i, int(str(alias).split(":")[0].strip())))
+        return out
+
+    # ----------------------- compiled (post-SPMD) ----------------------- #
+    @property
+    def hlo(self):
+        """Parsed post-SPMD optimized HLO (dict name -> Computation)."""
+        if self._hlo_comps is None:
+            from repro.utils.hlo import parse_hlo
+            self._hlo_comps = parse_hlo(self.lowered.compile().as_text())
+        return self._hlo_comps
+
+    def iter_hlo_ops(self):
+        """(computation name, Op) for every op of the compiled module."""
+        for cname, comp in self.hlo.items():
+            for op in comp.ops.values():
+                yield cname, op
+
+
+def capture(fn, *args, name: Optional[str] = None,
+            donate_argnums: Tuple[int, ...] = (),
+            static_argnums: Tuple[int, ...] = ()) -> ProgramArtifacts:
+    """Wrap ``fn(*args)`` for analysis. ``args`` may be concrete arrays or
+    ``jax.ShapeDtypeStruct`` pytrees — jaxpr/lowered artifacts never execute
+    the program; only the ``hlo`` artifact triggers an XLA compile."""
+    return ProgramArtifacts(name or getattr(fn, "__name__", "program"),
+                            fn, args, donate_argnums=donate_argnums,
+                            static_argnums=static_argnums)

@@ -1,0 +1,166 @@
+"""Standard analyzed programs of a DVNR config.
+
+The verifier's unit of work is a :class:`~repro.analysis.ir.ProgramArtifacts`
+plus a :class:`~repro.analysis.checks.CheckContext`; this module builds the
+(program, context) pairs that make up "analyze this config" — the same three
+programs the paper's systems claims are about:
+
+- ``train_step``   one SPMD training step (sharded over the mesh when given),
+- ``train_chunk``  the scan-fused multi-step chunk with donated carry
+                   (the in situ hot path; donation is checked here),
+- ``render``       sort-last distributed rendering (per-rank ray march +
+                   depth compositing — the zero-communication render path).
+
+Named configs for the CLI live in :data:`CONFIGS`.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+from repro.analysis.checks import CheckContext
+from repro.analysis.ir import ProgramArtifacts, capture
+
+# --------------------------------------------------------------------------- #
+# Named configs (CLI: --config NAME)
+# --------------------------------------------------------------------------- #
+
+
+def _named_configs() -> dict:
+    from repro.configs.dvnr import PRODUCTION, SMOKE, DVNRConfig
+
+    # the examples/quickstart.py setup: 2 partitions x 24^3 voxels
+    quickstart = (DVNRConfig(n_levels=3, n_features_per_level=4,
+                             log2_hashmap_size=9, base_resolution=8,
+                             n_neurons=16, n_hidden_layers=2, epochs=10,
+                             batch_size=4096, n_train_min=200,
+                             boundary_lambda=0.15, boundary_sigma=0.005),
+                  (24, 24, 24))
+    return {
+        "quickstart": quickstart,
+        "smoke": (SMOKE, (10, 10, 10)),
+        "production": (PRODUCTION, (64, 64, 64)),
+        # the known over-budget setup: a 256^3 volume-pinned sampling kernel
+        # (~69 MiB against the ~16 MiB VMEM budget on pallas backends)
+        "production256": (PRODUCTION, (256, 256, 256)),
+    }
+
+
+def get_config(name: str):
+    """``(DVNRConfig, local_shape)`` of a named analysis config."""
+    configs = _named_configs()
+    try:
+        return configs[name]
+    except KeyError:
+        raise ValueError(f"unknown config {name!r}; available: "
+                         f"{sorted(configs)}") from None
+
+
+def available_configs() -> Tuple[str, ...]:
+    return tuple(_named_configs())
+
+
+# --------------------------------------------------------------------------- #
+# Program construction
+# --------------------------------------------------------------------------- #
+def build_trainer(cfg, *, backend="auto", n_partitions: int = 2,
+                  local_shape=(16, 16, 16), ghost: int = 1, mesh=None):
+    """A trainer declared with its volume shape (so build-time guards see the
+    real VMEM bill). Raises exactly what ``api.train`` would for a config
+    that cannot run."""
+    from repro.core.trainer import DVNRTrainer
+
+    vshape = tuple(int(d) + 2 * ghost for d in local_shape)
+    return DVNRTrainer(cfg, n_partitions, mesh=mesh, impl=backend,
+                       ghost=ghost, volume_shape=vshape)
+
+
+def trainer_programs(trainer, *, n_steps: int = 2
+                     ) -> List[Tuple[ProgramArtifacts, CheckContext]]:
+    """The (program, context) pairs of a built trainer: the SPMD step and the
+    scan-fused chunk (both donate their params/opt carry)."""
+    import jax
+    import jax.numpy as jnp
+
+    params, opt, vols, _key, _step0, active, loss_ma = \
+        trainer.abstract_chunk_args(n_steps)
+    seeds = jax.ShapeDtypeStruct((trainer.P, 2), jnp.uint32)
+    tag = trainer.backend.name
+    ctx = CheckContext(
+        backend=trainer.backend, precision=trainer.precision,
+        fuse_sampling=trainer.fuse_sampling,
+        expect_pallas=trainer.backend.is_pallas and trainer.fuse_train_step,
+        donate_argnums=(0, 1))
+    step = capture(trainer._spmd_step, params, opt, vols, seeds, active,
+                   loss_ma, name=f"train_step[{tag}]", donate_argnums=(0, 1))
+    chunk = capture(trainer._chunk_body(n_steps),
+                    *trainer.abstract_chunk_args(n_steps),
+                    name=f"train_chunk[{tag}]", donate_argnums=(0, 1))
+    return [(step, ctx), (chunk, ctx)]
+
+
+def render_program(cfg, *, backend="auto", n_partitions: int = 2,
+                   width: int = 16, height: int = 16, n_samples: int = 8
+                   ) -> Tuple[ProgramArtifacts, CheckContext]:
+    """The sort-last render path as an analyzed program: per-rank ray march
+    over the stacked params + exact depth compositing. No donation / RNG /
+    precision context — the render-relevant invariants are zero communication
+    and the VMEM budget of the inference kernels."""
+    import jax
+
+    from repro import backends
+    from repro.core.inr import init_inr
+    from repro.core.render import Camera, render_distributed
+
+    b = backends.resolve(backend)
+    # synthetic partition metadata: a z-split unit box (host-side data only —
+    # the traced program is shape-dependent, not value-dependent)
+    metas = [{"origin": (0.0, 0.0, p / n_partitions),
+              "extent": (1.0, 1.0, 1.0 / n_partitions),
+              "vmin": 0.0, "vmax": 1.0} for p in range(n_partitions)]
+    cam = Camera(eye=(1.8, 1.4, 1.6))
+
+    def build():
+        keys = jax.random.split(jax.random.PRNGKey(0), n_partitions)
+        return jax.vmap(lambda k: init_inr(cfg, k))(keys)
+
+    stacked = jax.eval_shape(build)
+
+    def fn(params):
+        return render_distributed(cfg, params, metas, cam, width, height,
+                                  (0.0, 1.0), n_samples=n_samples, impl=b)
+
+    program = capture(fn, stacked, name=f"render[{b.name}]")
+    return program, CheckContext(backend=b)
+
+
+def config_programs(cfg, local_shape, *, backend="auto", n_partitions: int = 2,
+                    ghost: int = 1, mesh=None, n_steps: int = 2,
+                    ) -> List[Tuple[ProgramArtifacts, CheckContext]]:
+    """All standard programs of one config: train step, train chunk, render."""
+    trainer = build_trainer(cfg, backend=backend, n_partitions=n_partitions,
+                            local_shape=local_shape, ghost=ghost, mesh=mesh)
+    progs = trainer_programs(trainer, n_steps=n_steps)
+    progs.append(render_program(cfg, backend=trainer.backend,
+                                n_partitions=n_partitions))
+    return progs
+
+
+def analyze_config(name_or_cfg, *, backend="auto", local_shape=None,
+                   n_partitions: int = 2, mesh=None,
+                   checks: Optional[List[str]] = None,
+                   max_level: Optional[str] = None) -> List:
+    """Run the registered checks over every standard program of a config.
+    ``name_or_cfg``: a :data:`CONFIGS` name or a ``DVNRConfig`` (then
+    ``local_shape`` is required). Returns one Report per program."""
+    from repro.analysis.checks import run_checks
+
+    if isinstance(name_or_cfg, str):
+        cfg, shape = get_config(name_or_cfg)
+        if local_shape is not None:
+            shape = tuple(local_shape)
+    else:
+        cfg, shape = name_or_cfg, tuple(local_shape or (16, 16, 16))
+    pairs = config_programs(cfg, shape, backend=backend,
+                            n_partitions=n_partitions, mesh=mesh)
+    return [run_checks(p, ctx, checks=checks, max_level=max_level)
+            for p, ctx in pairs]

@@ -1,0 +1,55 @@
+"""Named-check registry of the static verifier (jax-free, like ``report``).
+
+A check is a callable ``check(program, ctx) -> CheckResult`` registered under
+a stable name (the name the CLI table, ``assert_clean(checks=...)`` and the
+trainer-startup hook all use). Checks declare which program artifact level
+they need — ``"jaxpr"`` (trace only; cheap, runs at trainer build time),
+``"lowered"`` (stableHLO module, no XLA optimization), or ``"hlo"``
+(post-SPMD compiled module; needs a full XLA compile) — so callers can run
+the cheap subset without paying a compile.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+
+@dataclass(frozen=True)
+class Check:
+    name: str
+    fn: Callable                      # (ProgramArtifacts, CheckContext) -> CheckResult
+    level: str                        # "jaxpr" | "lowered" | "hlo"
+    description: str = ""
+
+    def __call__(self, program, ctx):
+        return self.fn(program, ctx)
+
+
+_CHECKS: Dict[str, Check] = {}
+
+
+def register_check(name: str, *, level: str, description: str = ""):
+    """Decorator: register ``fn`` as the named check. Re-registration under
+    the same name replaces (mirrors the backend registry contract)."""
+    if level not in ("jaxpr", "lowered", "hlo"):
+        raise ValueError(
+            f"check level must be 'jaxpr', 'lowered' or 'hlo', got {level!r}")
+
+    def deco(fn):
+        _CHECKS[name] = Check(name, fn, level, description)
+        return fn
+
+    return deco
+
+
+def get_check(name: str) -> Check:
+    try:
+        return _CHECKS[name]
+    except KeyError:
+        raise ValueError(f"unknown check {name!r}; registered: "
+                         f"{sorted(_CHECKS)}") from None
+
+
+def available_checks() -> Tuple[str, ...]:
+    """Registered check names, in registration order."""
+    return tuple(_CHECKS)

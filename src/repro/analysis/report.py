@@ -1,0 +1,94 @@
+"""Result/report datatypes of the static verifier (no jax imports here —
+``python -m repro.analysis`` must be able to configure ``XLA_FLAGS`` before
+anything pulls jax in, so the package root and these leaf modules stay
+import-light).
+
+A :class:`CheckResult` is the outcome of ONE named check on ONE program; a
+:class:`Report` aggregates them across the programs of a config (what the CLI
+prints and the trainer-startup hook inspects).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+
+@dataclass(frozen=True)
+class Violation:
+    """One concrete invariant violation, attributable to a program location."""
+
+    check: str                 # registered check name
+    message: str               # human-readable, actionable
+    location: str = ""         # eqn path / HLO computation / buffer name
+
+    def __str__(self) -> str:
+        loc = f" [{self.location}]" if self.location else ""
+        return f"{self.check}{loc}: {self.message}"
+
+
+@dataclass
+class CheckResult:
+    """Outcome of one check on one program."""
+
+    name: str
+    passed: bool
+    violations: List[Violation] = field(default_factory=list)
+    details: Dict = field(default_factory=dict)   # e.g. per-buffer VMEM rows
+    skipped: bool = False
+    skip_reason: str = ""
+
+    @property
+    def status(self) -> str:
+        if self.skipped:
+            return "SKIP"
+        return "PASS" if self.passed else "FAIL"
+
+    def summary(self) -> str:
+        head = f"{self.status:4s} {self.name}"
+        if self.skipped:
+            return f"{head} ({self.skip_reason})"
+        if self.passed:
+            extra = self.details.get("note", "")
+            return f"{head}{f' ({extra})' if extra else ''}"
+        return head + "".join(f"\n       - {v}" for v in self.violations)
+
+
+@dataclass
+class Report:
+    """All check results for one analyzed program (or program set)."""
+
+    program: str
+    results: List[CheckResult] = field(default_factory=list)
+
+    @property
+    def passed(self) -> bool:
+        return all(r.passed or r.skipped for r in self.results)
+
+    @property
+    def violations(self) -> List[Violation]:
+        return [v for r in self.results for v in r.violations]
+
+    def result(self, name: str) -> CheckResult:
+        for r in self.results:
+            if r.name == name:
+                return r
+        raise KeyError(f"no result for check {name!r} in program "
+                       f"{self.program!r}")
+
+    def render(self) -> str:
+        lines = [f"program {self.program}:"]
+        lines += [f"  {r.summary()}" for r in self.results]
+        return "\n".join(lines)
+
+
+class StaticCheckError(AssertionError):
+    """Raised by ``assert_clean`` / ``static_checks="error"`` on violations.
+
+    Subclasses AssertionError so pytest integration reads naturally, and
+    ValueError-style config rejection sites can catch it explicitly."""
+
+    def __init__(self, report: Report):
+        self.report = report
+        msgs = "\n".join(str(v) for v in report.violations) or report.render()
+        super().__init__(
+            f"static analysis failed for program {report.program!r}:\n{msgs}")

@@ -363,7 +363,11 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
     vols = jnp.stack([p.normalized() for p in partitions]) \
         if volumes is None else volumes
     if trainer is None:
-        trainer = DVNRTrainer(cfg, P, mesh=mesh, impl=backend, ghost=g)
+        # declaring the volume shape lets build time reject configs that
+        # could not run (VMEM budget of the volume-pinned sampling kernel,
+        # cfg.static_checks) before any compilation happens
+        trainer = DVNRTrainer(cfg, P, mesh=mesh, impl=backend, ghost=g,
+                              volume_shape=tuple(vols.shape[1:]))
     state = trainer.init(k_init, cached_params=cached_params)
     nvox = int(np.prod(partitions[0].owned_shape))
     n_steps = train_iterations(cfg, nvox) if steps is None else steps

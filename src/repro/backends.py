@@ -57,6 +57,11 @@ class Backend:
     # compute dtypes the kernels accept WITHOUT silently upcasting to f32;
     # checked by the dtype-aware op entry points and the trainer
     dtypes: Tuple[str, ...] = SUPPORTED_DTYPES
+    # per-kernel on-chip memory budget (bytes) the backend's pallas_call
+    # operands + scratch must fit — the static VMEM estimator
+    # (repro.analysis.vmem) and the fused-sampling dispatch guard check
+    # against it. None = unbounded (jnp backends emit no pallas_call).
+    vmem_limit_bytes: Optional[int] = None
 
     # ------------------------------------------------------------------ #
     @property
@@ -224,14 +229,20 @@ register_backend(Backend(
                                         "fused_sampling"}),
 ))
 
+# the ~16 MiB/core VMEM envelope the kernel docstrings budget against; the
+# interpret-mode backend enforces the same limit so CPU CI rejects exactly
+# the configs that would OOM Mosaic on hardware
+_TPU_VMEM_BYTES = 16 * 2**20
+
 register_backend(Backend(
     name="pallas", kind="pallas", interpret=True,
     description="Pallas kernels in interpret mode (CPU kernel debugging)",
-    priority=1, capabilities=_ALL_OPS,
+    priority=1, capabilities=_ALL_OPS, vmem_limit_bytes=_TPU_VMEM_BYTES,
 ))
 
 register_backend(Backend(
     name="pallas_tpu", kind="pallas", interpret=False,
     description="compiled Pallas kernels on TPU hardware",
     platforms=("tpu",), priority=100, capabilities=_ALL_OPS,
+    vmem_limit_bytes=_TPU_VMEM_BYTES,
 ))

@@ -75,6 +75,14 @@ class DVNRConfig:
     # sampler is counter-based (repro.core.sampling).
     fuse_sampling: str = "auto"
 
+    # ----- static analysis at trainer build time (repro.analysis) -----
+    # "off" (default; the cheap fused-sampling VMEM guard still runs),
+    # "warn" (trace the chunk program at build time and run the jaxpr-level
+    # checks — VMEM budget, precision flow, RNG/gather placement — warning on
+    # violations), "error" (refuse to build a violating trainer:
+    # repro.analysis.StaticCheckError).
+    static_checks: str = "off"
+
     @property
     def resolved_base_resolution(self) -> int:
         if self.base_resolution > 0:

@@ -1,10 +1,31 @@
 # The paper's primary contribution: Distributed Volumetric Neural Representation.
-from repro.core.inr import init_inr, inr_apply, decode_grid, param_bytes_f16
-from repro.core.trainer import DVNRTrainer, adaptive_config, train_iterations
-from repro.core.metrics import psnr, ssim3d, dssim
+#
+# Lazy (PEP 562) re-exports: the kernel packages import repro.core.sampling at
+# module level, and an eager `from repro.core.trainer import ...` here would
+# close the cycle kernels.ops -> core (this __init__) -> trainer -> kernels.ops.
+_LAZY = {
+    "init_inr": "repro.core.inr",
+    "inr_apply": "repro.core.inr",
+    "decode_grid": "repro.core.inr",
+    "param_bytes_f16": "repro.core.inr",
+    "DVNRTrainer": "repro.core.trainer",
+    "adaptive_config": "repro.core.trainer",
+    "train_iterations": "repro.core.trainer",
+    "psnr": "repro.core.metrics",
+    "ssim3d": "repro.core.metrics",
+    "dssim": "repro.core.metrics",
+}
 
-__all__ = [
-    "init_inr", "inr_apply", "decode_grid", "param_bytes_f16",
-    "DVNRTrainer", "adaptive_config", "train_iterations",
-    "psnr", "ssim3d", "dssim",
-]
+__all__ = list(_LAZY)
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

@@ -107,12 +107,27 @@ class DVNRState:
 
 class DVNRTrainer:
     def __init__(self, cfg: DVNRConfig, n_partitions: int, *, mesh=None,
-                 impl: backends.BackendLike = "ref", ghost: int = 1):
+                 impl: backends.BackendLike = "ref", ghost: int = 1,
+                 volume_shape=None):
+        """``volume_shape`` (optional): the ghost-padded per-partition volume
+        shape (nx+2g, ny+2g, nz+2g[, C]) this trainer will be fed. Declaring
+        it up front lets build time reject configs that could not run: the
+        VMEM budget of the volume-pinned sampling kernel is checked
+        immediately (always — a 256^3 partition with in-op sampling on a
+        pallas backend fails HERE with the per-buffer breakdown, not at
+        Mosaic compile time on the TPU), and ``cfg.static_checks`` =
+        "warn"/"error" additionally traces the chunk program and runs the
+        jaxpr-level checks of :mod:`repro.analysis` over it."""
         self.cfg = cfg
         self.P = n_partitions
         self.mesh = mesh
         self.backend = backends.resolve(impl)
         self.ghost = ghost
+        self.volume_shape = (tuple(int(d) for d in volume_shape)
+                             if volume_shape is not None else None)
+        if cfg.static_checks not in ("off", "warn", "error"):
+            raise ValueError(f"static_checks must be 'off', 'warn' or "
+                             f"'error', got {cfg.static_checks!r}")
         self.precision = resolve_precision(cfg.precision)
         self.backend.require_dtype(self.precision.param_dtype, "param")
         self.backend.require_dtype(self.precision.compute_dtype, "compute")
@@ -123,12 +138,21 @@ class DVNRTrainer:
         self.adam = AdamW(_opt_config(cfg, self.precision))
         self.fuse_train_step = self._resolve_fuse(cfg.fuse_train_step)
         self.fuse_sampling = self._resolve_fuse_sampling(cfg.fuse_sampling)
+        if (self.fuse_sampling and self.backend.is_pallas
+                and self.volume_shape is not None):
+            from repro.kernels.fused_train_step.ops import ensure_sampling_fits
+            ensure_sampling_fits(self.volume_shape, self.backend, cfg=cfg,
+                                 param_dtype=self.precision.param_dtype,
+                                 has_master=self.precision.needs_master,
+                                 P=self.P)
         self._spmd_step = self._build_spmd_step()
         self._step_fn = jax.jit(self._spmd_step, donate_argnums=(0, 1))
         # n_steps -> jitted scan-fused chunk; LRU-bounded so a long-lived
         # trainer fed varying step counts can't hoard compiled executables
         self._chunk_fns: "OrderedDict[int, object]" = OrderedDict()
         self._chunk_fns_max = 8
+        if cfg.static_checks != "off":
+            self.run_static_checks(strict=cfg.static_checks == "error")
 
     @property
     def impl(self) -> str:
@@ -355,6 +379,53 @@ class DVNRTrainer:
         while len(self._chunk_fns) > self._chunk_fns_max:
             self._chunk_fns.popitem(last=False)
         return fn
+
+    # -------------------------- static analysis ------------------------- #
+    def abstract_chunk_args(self, n_steps: int = 2):
+        """ShapeDtypeStruct pytree of :meth:`_chunk_body` arguments — what the
+        static verifier traces instead of real buffers. The volume uses the
+        declared ``volume_shape`` when given, else a nominal 8^3 placeholder
+        (fine for the precision/RNG checks; pass ``volume_shape`` for real
+        VMEM estimates)."""
+        g = self.ghost
+        vshape = self.volume_shape or (8 + 2 * g,) * 3
+
+        def build():
+            st = self.init(jax.random.PRNGKey(0))
+            return st.params, st.opt, st.active, st.loss_ma
+
+        params, opt, active, loss_ma = jax.eval_shape(build)
+        vols = jax.ShapeDtypeStruct((self.P,) + tuple(vshape), jnp.float32)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        step0 = jax.ShapeDtypeStruct((), jnp.int32)
+        return (params, opt, vols, key, step0, active, loss_ma)
+
+    def run_static_checks(self, *, strict: bool = True, n_steps: int = 2):
+        """Trace the scan-fused chunk and run the jaxpr-level checks of
+        :mod:`repro.analysis` over it (VMEM budget, precision flow, RNG/gather
+        placement — no XLA compile). ``strict`` raises
+        :class:`repro.analysis.StaticCheckError` on violations; otherwise
+        they are issued as a warning. Returns the report."""
+        import warnings
+
+        from repro.analysis import (CheckContext, StaticCheckError, capture,
+                                    run_checks)
+
+        program = capture(
+            self._chunk_body(n_steps), *self.abstract_chunk_args(n_steps),
+            name=f"train_chunk[{self.backend.name}]", donate_argnums=(0, 1))
+        ctx = CheckContext(
+            backend=self.backend, precision=self.precision,
+            fuse_sampling=self.fuse_sampling,
+            expect_pallas=self.backend.is_pallas and self.fuse_train_step,
+            donate_argnums=(0, 1))
+        report = run_checks(program, ctx, max_level="jaxpr")
+        if not report.passed:
+            if strict:
+                raise StaticCheckError(report)
+            warnings.warn("static checks failed (static_checks='warn'):\n"
+                          + report.render(), stacklevel=2)
+        return report
 
     def train_chunk(self, state: DVNRState, volumes, n_steps: int, *,
                     key) -> tuple[DVNRState, jnp.ndarray]:

@@ -17,3 +17,14 @@ def composite(rgba, impl: backends.BackendLike = "ref", *, compute_dtype=None):
     if b.is_pallas:
         return composite_pallas(rgba, interpret=b.interpret)
     return _ref.composite_ref(rgba)
+
+
+def vmem_footprint(rgba, impl: backends.BackendLike = "pallas"):
+    """Static VMEM bill of the compositing op: one
+    :class:`repro.analysis.vmem.KernelFootprint` per ``pallas_call`` the op
+    would emit for this sample-buffer shape (empty on jnp backends). ``rgba``
+    may be a ``jax.ShapeDtypeStruct`` — nothing executes."""
+    from repro.analysis.vmem import footprint_of
+
+    b = backends.resolve(impl)
+    return footprint_of(lambda r: composite(r, b), rgba)

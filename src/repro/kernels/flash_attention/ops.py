@@ -41,6 +41,21 @@ def flash_attention(q, k, v, causal: bool = True,
     return _flash_attention(q, k, v, causal, window, backend)
 
 
+def vmem_footprint(q, k, v, causal: bool = True,
+                   window: Optional[int] = None,
+                   impl: backends.BackendLike = "pallas"):
+    """Static VMEM bill of the attention forward: one
+    :class:`repro.analysis.vmem.KernelFootprint` per ``pallas_call`` the op
+    would emit for these operand shapes (empty on jnp backends). ``q``/``k``/
+    ``v`` may be ``jax.ShapeDtypeStruct``s — nothing executes."""
+    from repro.analysis.vmem import footprint_of
+
+    backend = backends.resolve(impl)
+    return footprint_of(
+        lambda q_, k_, v_: _fwd_impl(q_, k_, v_, causal, window, backend),
+        q, k, v)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
 def _flash_attention(q, k, v, causal: bool, window: Optional[int],
                      backend: backends.Backend):

@@ -43,6 +43,18 @@ def fused_mlp(x, weights, impl: backends.BackendLike = "ref", *,
     return _fused_mlp(x, weights, backend)
 
 
+def vmem_footprint(x, weights, impl: backends.BackendLike = "pallas"):
+    """Static VMEM bill of the forward MLP: one
+    :class:`repro.analysis.vmem.KernelFootprint` per ``pallas_call`` the op
+    would emit for these operand shapes (empty on jnp backends). ``x`` /
+    ``weights`` may be ``jax.ShapeDtypeStruct``s — nothing executes."""
+    from repro.analysis.vmem import footprint_of
+
+    backend = backends.resolve(impl)
+    return footprint_of(lambda xx, *ww: _fwd_impl(xx, list(ww), backend),
+                        x, *weights)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _fused_mlp(x, weights, backend: backends.Backend):
     return _fwd_impl(x, weights, backend)

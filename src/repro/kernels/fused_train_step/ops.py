@@ -23,10 +23,9 @@ from typing import Sequence
 import jax.numpy as jnp
 
 from repro import backends
-from repro.core.sampling import n_boundary
 from repro.kernels.fused_train_step import ref as _ref
 from repro.kernels.fused_train_step.kernel import (
-    fused_train_step_pallas, fused_train_step_sampling_pallas)
+    _STATE_KEYS, fused_train_step_pallas, fused_train_step_sampling_pallas)
 from repro.optim.adamw import AdamW, OptConfig
 
 
@@ -95,6 +94,101 @@ def _rebuild(opt, step, new_p, new_m, new_v, new_mw, n_hidden):
     if new_mw is not None:
         new_opt["mw"] = _unpack(new_mw, n_hidden)
     return new_params, new_opt
+
+
+# --------------------------------------------------------------------------- #
+# VMEM budget guard for the volume-pinned sampling kernel
+# --------------------------------------------------------------------------- #
+def _cfg_state_shapes(cfg) -> dict:
+    """Per-partition state-group shapes of a :class:`DVNRConfig` — the
+    closed-form mirror of what :func:`_pack` produces from real params."""
+    L, T, F = cfg.n_levels, cfg.table_size, cfg.n_features_per_level
+    W, H, D = cfg.n_neurons, cfg.n_hidden_layers, cfg.out_dim
+    return {"tab": (L, T, F), "win": (L * F, W),
+            "whid": (max(H - 1, 1), W, W), "wout": (W, D)}
+
+
+def sampling_vmem_footprint(volume_shape, state_shapes, param_dtype,
+                            has_master: bool, *, P: int = 1, n_tiles: int = 1):
+    """Closed-form VMEM bill of ``fused_train_step_sampling_pallas`` — the
+    same buffer list ``kernel._state_layout`` would allocate, without tracing.
+
+    ``volume_shape``: ONE ghost-padded partition (nx, ny, nz[, C]).
+    Mirrors the traced estimator's accounting (repro.analysis.vmem): every
+    partition-indexed block is double-buffered, scratch is charged once
+    (tests/test_analysis.py asserts closed-form == traced).
+    """
+    from repro.analysis import vmem as _vmem
+
+    vol_shape = tuple(int(d) for d in volume_shape)
+    if len(vol_shape) == 3:
+        vol_shape += (1,)                # trainer adds the channel axis
+    keys = ("tab", "win", "whid", "wout")
+    bufs = [_vmem.VmemBuffer("in[0]:volume", "in", (1,) + vol_shape,
+                             "float32", pipelined=True)]
+    groups = [("p", str(jnp.dtype(param_dtype))), ("m", "float32"),
+              ("v", "float32")] + ([("mw", "float32")] if has_master else [])
+    i = 1
+    for gname, dt in groups:
+        for k in keys:
+            bufs.append(_vmem.VmemBuffer(f"in[{i}]:{gname}.{k}", "in",
+                                         (1,) + state_shapes[k], dt,
+                                         pipelined=True))
+            i += 1
+    o = 0
+    for gname, dt in [("p", str(jnp.dtype(param_dtype))), ("m", "float32"),
+                      ("v", "float32")] + ([("mw", "float32")]
+                                           if has_master else []):
+        for k in keys:
+            bufs.append(_vmem.VmemBuffer(f"out[{o}]:{gname}.{k}", "out",
+                                         (1,) + state_shapes[k], dt,
+                                         pipelined=True))
+            o += 1
+    bufs.append(_vmem.VmemBuffer(f"out[{o}]:loss", "out", (1, 1), "float32",
+                                 pipelined=True))
+    for j, k in enumerate(keys):
+        bufs.append(_vmem.VmemBuffer(f"scratch[{j}]:grad.{k}", "scratch",
+                                     state_shapes[k], "float32"))
+    bufs.append(_vmem.VmemBuffer("scratch[4]:loss", "scratch", (1, 1),
+                                 "float32"))
+    return _vmem.KernelFootprint(kernel="fused_train_step_sampling",
+                                 grid=(P, n_tiles), buffers=bufs)
+
+
+def ensure_sampling_fits(volume_shape, backend, *, cfg=None,
+                         state_shapes=None, param_dtype="float32",
+                         has_master: bool = False, P: int = 1,
+                         n_batch: int = 0) -> None:
+    """Fail fast when the volume-pinned sampling kernel cannot fit VMEM.
+
+    Raises ``ValueError`` with the per-buffer breakdown when the closed-form
+    footprint exceeds ``backend.vmem_limit_bytes`` (e.g. a 256^3 local
+    partition is ~69 MiB of pinned volume against the ~16 MiB budget —
+    a config that only OOMs at Mosaic compile time on real TPUs otherwise).
+    Shapes come either from ``cfg`` (a DVNRConfig, trainer build time) or an
+    explicit ``state_shapes`` dict (dispatch time, from the real operands).
+    """
+    from repro.analysis import vmem as _vmem
+    from repro.kernels.fused_train_step.kernel import BLOCK_N
+
+    limit = getattr(backend, "vmem_limit_bytes", None)
+    if limit is None:
+        return
+    if state_shapes is None:
+        if cfg is None:
+            raise TypeError("ensure_sampling_fits needs cfg or state_shapes")
+        state_shapes = _cfg_state_shapes(cfg)
+        if n_batch == 0:
+            n_batch = cfg.batch_size
+    n_tiles = max(1, (n_batch + BLOCK_N - 1) // BLOCK_N)
+    fp = sampling_vmem_footprint(volume_shape, state_shapes, param_dtype,
+                                 has_master, P=P, n_tiles=n_tiles)
+    msg = _vmem.over_budget(fp, limit)
+    if msg is not None:
+        raise ValueError(
+            f"fused in-op sampling cannot run on backend {backend.name!r}: "
+            f"{msg}\nhint: set fuse_sampling='off' (host-side sampling keeps "
+            "the volume in HBM) or shrink the local partition / hash table")
 
 
 def fused_train_step(params, opt, coords, target, gate, *,
@@ -170,6 +264,17 @@ def fused_train_step_sampling(params, opt, volumes, seeds, gate, *,
     # ---- Pallas path: sampling + fwd + bwd + AdamW as one kernel ---------- #
     _check_pallas_opt(opt_cfg, backend, compute_dtype)
     flat_p, flat_m, flat_v, flat_mw, n_hidden = _pack_state(params, opt)
+    # fail fast (at trace time, with the per-buffer bill) when the volume-
+    # pinned kernel cannot fit the backend's VMEM budget — otherwise this
+    # only surfaces as a Mosaic OOM at compile time on real TPU hardware
+    ensure_sampling_fits(
+        volumes.shape[1:], backend,
+        state_shapes={k: tuple(flat_p[k].shape[1:]) for k in _STATE_KEYS},
+        param_dtype=flat_p["tab"].dtype, has_master=flat_mw is not None,
+        P=int(volumes.shape[0]), n_batch=int(n_batch))
+    # deferred: repro.core.sampling pulls in repro.core (-> trainer), which
+    # imports this module — a top-level import would be circular
+    from repro.core.sampling import n_boundary
     step, scalars = _schedule_scalars(opt, opt_cfg, adam, gate)
 
     new_p, new_m, new_v, new_mw, loss = fused_train_step_sampling_pallas(

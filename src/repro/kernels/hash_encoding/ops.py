@@ -38,6 +38,19 @@ def hash_encode(coords, tables, resolutions: Sequence[int],
     return _hash_encode(coords, tables, resolutions, backend)
 
 
+def vmem_footprint(coords, tables, resolutions: Sequence[int],
+                   impl: backends.BackendLike = "pallas"):
+    """Static VMEM bill of the forward encode: one
+    :class:`repro.analysis.vmem.KernelFootprint` per ``pallas_call`` the op
+    would emit for these operand shapes (empty on jnp backends). ``coords`` /
+    ``tables`` may be ``jax.ShapeDtypeStruct``s — nothing executes."""
+    from repro.analysis.vmem import footprint_of
+
+    backend = backends.resolve(impl)
+    return footprint_of(lambda c, t: _fwd_impl(c, t, resolutions, backend),
+                        coords, tables)
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
 def _hash_encode(coords, tables, resolutions, backend: backends.Backend):
     return _fwd_impl(coords, tables, resolutions, backend)

@@ -265,48 +265,39 @@ def test_fused_sampling_bf16(backend):
     assert abs(pa - pu) < 1.0, (pa, pu)
 
 
-def _walk_prims(jaxpr, acc, *, into_pallas=False):
-    for eqn in jaxpr.eqns:
-        acc.append(eqn.primitive.name)
-        if eqn.primitive.name == "pallas_call" and not into_pallas:
-            continue
-        for v in eqn.params.values():
-            for x in (v if isinstance(v, (list, tuple)) else [v]):
-                j = getattr(x, "jaxpr", None)
-                if j is not None:
-                    _walk_prims(j, acc, into_pallas=into_pallas)
-                elif hasattr(x, "eqns"):
-                    _walk_prims(x, acc, into_pallas=into_pallas)
-    return acc
-
-
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_chunk_jaxpr_has_no_sampling_ops_outside_fused_op(backend):
-    """The acceptance gate: with fuse_train_step=on + fuse_sampling=on the
-    jitted chunk body contains no RNG primitives at all (the counter seeds
-    are plain uint32 arithmetic) and, on the pallas leg, no gather outside
-    the pallas_call — sampling lives entirely inside the fused op."""
+    """The acceptance gate, via the static verifier: with fuse_train_step=on
+    + fuse_sampling=on the chunk body passes ``rng_gather_placement`` — no
+    RNG primitives anywhere outside the fused op (the counter seeds are plain
+    uint32 arithmetic) and, on the pallas leg, no gather outside the
+    pallas_call."""
+    from repro.analysis import StaticCheckError, assert_clean
+
     vols = _vols()
     key = jax.random.PRNGKey(1)
     tr = DVNRTrainer(CFG.replace(fuse_train_step="on", fuse_sampling="on"),
                      2, impl=backend)
     st = tr.init(jax.random.PRNGKey(0))
-    jx = jax.make_jaxpr(tr._chunk_body(3))(
-        st.params, st.opt, vols, key, jnp.int32(0), st.active, st.loss_ma)
-    prims = _walk_prims(jx.jaxpr, [])
-    assert not any("threefry" in p or "random_bits" in p for p in prims), prims
-    if backend == "pallas":
-        assert prims.count("pallas_call") > 0
-        assert "gather" not in prims, [p for p in prims if p == "gather"]
-    # control: with host sampling the same walk DOES see gathers (the walk
-    # is not vacuous)
+    args = (st.params, st.opt, vols, key, jnp.int32(0), st.active, st.loss_ma)
+    rep = assert_clean(tr._chunk_body(3), *args,
+                       checks=["rng_gather_placement"], backend=backend,
+                       fuse_sampling=True,
+                       expect_pallas=(backend == "pallas"))
+    if backend == "pallas":                       # the walk is not vacuous
+        note = rep.result("rng_gather_placement").details["note"]
+        assert int(note.split()[0]) >= 1, note    # "N pallas_call(s)"
+    # control: a host-sampling chunk held to the same in-kernel standard must
+    # FAIL the placement check (gathers outside / no pallas_call)
     tr_h = DVNRTrainer(CFG.replace(fuse_train_step="on", fuse_sampling="off"),
                        2, impl=backend)
     st_h = tr_h.init(jax.random.PRNGKey(0))
-    jx_h = jax.make_jaxpr(tr_h._chunk_body(3))(
-        st_h.params, st_h.opt, vols, key, jnp.int32(0), st_h.active,
-        st_h.loss_ma)
-    assert "gather" in _walk_prims(jx_h.jaxpr, [])
+    args_h = (st_h.params, st_h.opt, vols, key, jnp.int32(0), st_h.active,
+              st_h.loss_ma)
+    with pytest.raises(StaticCheckError, match="gather|pallas_call"):
+        assert_clean(tr_h._chunk_body(3), *args_h,
+                     checks=["rng_gather_placement"], backend=backend,
+                     fuse_sampling=True, expect_pallas=True)
 
 
 def test_fuse_sampling_flag_resolution():
