@@ -8,6 +8,9 @@ programs the paper's systems claims are about:
 - ``train_step``   one SPMD training step (sharded over the mesh when given),
 - ``train_chunk``  the scan-fused multi-step chunk with donated carry
                    (the in situ hot path; donation is checked here),
+- ``train_chunk_degraded``  the chunk under a degraded-partition mask plus the
+                   last-good restore merge (repro.resilience) — proves the
+                   resilience path adds no cross-partition communication,
 - ``render``       sort-last distributed rendering (per-rank ray march +
                    depth compositing — the zero-communication render path).
 
@@ -95,7 +98,49 @@ def trainer_programs(trainer, *, n_steps: int = 2
     chunk = capture(trainer._chunk_body(n_steps),
                     *trainer.abstract_chunk_args(n_steps),
                     name=f"train_chunk[{tag}]", donate_argnums=(0, 1))
-    return [(step, ctx), (chunk, ctx)]
+    degraded = capture(degraded_chunk_fn(trainer, n_steps=n_steps),
+                       *degraded_chunk_args(trainer, n_steps=n_steps),
+                       name=f"train_chunk_degraded[{tag}]",
+                       donate_argnums=(0, 1))
+    return [(step, ctx), (chunk, ctx), (degraded, ctx)]
+
+
+def degraded_chunk_fn(trainer, *, n_steps: int = 2):
+    """The degraded-partition training program of the resilience layer:
+    masked partitions are excluded from training via the convergence gate and
+    restored to their last-good snapshot after the chunk (the ``frozen``
+    merge of :func:`repro.resilience.train_with_recovery` / the
+    ``train_mask`` path of ``api.train``). The whole construction is
+    per-partition selects over the stacked axis — the static checks prove it
+    introduces no collectives and no stray RNG/gather."""
+    from repro.resilience.recovery import merge_partitions
+
+    body = trainer._chunk_body(n_steps)
+
+    def fn(params, opt, vols, key, step0, active, loss_ma, mask,
+           snap_params, snap_opt):
+        p, o, a, lm, fin, losses = body(params, opt, vols, key, step0,
+                                        active & mask, loss_ma)
+        p = merge_partitions(~mask, snap_params, p)
+        o = merge_partitions(~mask, snap_opt, o)
+        return p, o, a, lm, fin, losses
+
+    return fn
+
+
+def degraded_chunk_args(trainer, *, n_steps: int = 2):
+    """Abstract arguments of :func:`degraded_chunk_fn`: the chunk arguments
+    plus the (P,) healthy mask and the last-good params/opt snapshots."""
+    import copy
+
+    import jax
+    import jax.numpy as jnp
+
+    params, opt, vols, key, step0, active, loss_ma = \
+        trainer.abstract_chunk_args(n_steps)
+    mask = jax.ShapeDtypeStruct((trainer.P,), jnp.bool_)
+    return (params, opt, vols, key, step0, active, loss_ma, mask,
+            copy.deepcopy(params), copy.deepcopy(opt))
 
 
 def render_program(cfg, *, backend="auto", n_partitions: int = 2,

@@ -299,7 +299,8 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
           log_every: int = 0, check_every: int = 0,
           precision=None,
           fuse_train_step: Optional[str] = None,
-          fuse_sampling: Optional[str] = None) -> Tuple[DVNRModel, dict]:
+          fuse_sampling: Optional[str] = None,
+          recovery=None, train_mask=None) -> Tuple[DVNRModel, dict]:
     """Train one INR per partition (zero-communication) and return the model.
 
     ``partitions``: sequence of :class:`~repro.data.volume.VolumePartition`
@@ -327,6 +328,14 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
     batch sampling (counter-based coordinate draws + trilinear target
     gather) happens inside that fused op too (in-kernel on pallas backends)
     instead of on the host — every mode draws bit-identical batches.
+
+    ``recovery`` (a :class:`repro.resilience.RecoveryPolicy`) routes training
+    through the non-finite recovery driver — partitions tripping the
+    on-device detector are retried (reseed → rollback → lr-backoff) and
+    frozen at their last-good params when attempts run out; the info dict
+    then carries a ``"recovery"`` entry. ``train_mask`` ((P,) bool) excludes
+    partitions from training from step 0 (their INRs keep the warm-start /
+    cached params — the degraded-rank restore path of the in situ session).
     """
     key = jax.random.PRNGKey(0) if key is None else key
     k_init, k_train = jax.random.split(key)
@@ -369,11 +378,15 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
         trainer = DVNRTrainer(cfg, P, mesh=mesh, impl=backend, ghost=g,
                               volume_shape=tuple(vols.shape[1:]))
     state = trainer.init(k_init, cached_params=cached_params)
+    if train_mask is not None:
+        mask = jnp.asarray(np.asarray(train_mask, bool))
+        state = dataclasses.replace(state, active=state.active & mask)
     nvox = int(np.prod(partitions[0].owned_shape))
     n_steps = train_iterations(cfg, nvox) if steps is None else steps
     t0 = time.time()
     state, hist = trainer.train(state, vols, steps=n_steps, key=k_train,
-                                log_every=log_every, check_every=check_every)
+                                log_every=log_every, check_every=check_every,
+                                recovery=recovery)
     jax.block_until_ready(state.params)
     train_time_s = time.time() - t0
     metas = _meta_tuple(partitions)
@@ -381,6 +394,8 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
     info = {"train_time_s": train_time_s, "steps": int(state.step),
             "loss_history": hist.get("loss", []), "state": state,
             "trainer": trainer}
+    if "recovery" in hist:
+        info["recovery"] = hist["recovery"]
     return model, info
 
 

@@ -41,6 +41,7 @@ class CheckpointManager:
         self.keep_last = keep_last
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         self._sweep_tmp()
 
     # ------------------------------------------------------------------ #
@@ -73,8 +74,17 @@ class CheckpointManager:
             os.replace(tmp, final)                       # atomic publish
             self._gc()
 
+        def guarded_write():
+            # a daemon thread swallows exceptions — capture the failure so
+            # the next wait()/save() surfaces it instead of training on while
+            # silently never checkpointing (full disk, dead mount, ...)
+            try:
+                write()
+            except BaseException as e:       # noqa: BLE001 — re-raised later
+                self._error = e
+
         if self.async_save and not blocking:
-            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread = threading.Thread(target=guarded_write, daemon=True)
             self._thread.start()
         else:
             write()
@@ -84,6 +94,10 @@ class CheckpointManager:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint write failed: {err!r}") from err
 
     # ------------------------------------------------------------------ #
     def all_steps(self) -> list[int]:
@@ -115,6 +129,24 @@ class CheckpointManager:
         if len(leaves) != len(host):
             raise ValueError(
                 f"checkpoint has {len(host)} leaves, template has {len(leaves)}")
+        # validate the loaded arrays against the manifest (torn/corrupted
+        # npz) AND against the template (restoring into the wrong model
+        # config must fail loudly, not reshape-garble)
+        for i, a in enumerate(host):
+            want_shape = tuple(manifest["shapes"][i])
+            want_dtype = np.dtype(manifest["dtypes"][i])
+            if a.shape != want_shape or a.dtype != want_dtype:
+                raise ValueError(
+                    f"checkpoint leaf {i} is {a.dtype}{a.shape}, but its "
+                    f"manifest recorded {want_dtype}{want_shape} — corrupt "
+                    f"or torn checkpoint at step {step}")
+            tmpl = leaves[i]
+            t_shape = tuple(getattr(tmpl, "shape", ()))
+            if t_shape and a.shape != t_shape:
+                raise ValueError(
+                    f"checkpoint leaf {i} has shape {a.shape}, template "
+                    f"expects {t_shape} — wrong model config for this "
+                    f"checkpoint")
         if shardings is not None:
             shard_leaves, _ = _flatten(shardings)
             out = [jax.device_put(a, s) for a, s in zip(host, shard_leaves)]

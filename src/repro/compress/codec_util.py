@@ -5,6 +5,13 @@ stdlib ``zlib`` takes over (worse ratio, same API). Every blob is prefixed
 with a one-byte coder tag so blobs written on one installation decode on
 another — or fail with an actionable error instead of a low-level one when
 the zstd coder is required but absent.
+
+Integrity: every blob written through :func:`compress_bytes` carries a CRC32
+frame (``b"C"`` + 4-byte big-endian CRC of the rest). :func:`decompress_bytes`
+verifies it and raises :class:`BlobIntegrityError` on mismatch, so a
+bit-rotted cache entry is *detected* instead of decoding into garbage params
+(the temporal model cache uses this to fall back to the previous clean
+entry). Legacy unframed blobs still decode — verification is skipped.
 """
 from __future__ import annotations
 
@@ -25,15 +32,48 @@ except ModuleNotFoundError:
 # (0x78) nor a zstd frame magic (0x28) so legacy untagged blobs are detected
 _TAG_ZSTD = b"Z"
 _TAG_ZLIB = b"L"
+# CRC32 integrity frame: b"C" + crc32(rest).to_bytes(4) + rest. 0x43 collides
+# with no coder tag, no zlib header and no zstd magic, so framed and legacy
+# blobs are distinguishable from the first byte.
+_TAG_CRC = b"C"
+
+
+class BlobIntegrityError(ValueError):
+    """A blob's CRC32 integrity tag does not match its payload."""
+
+
+def crc_frame(data: bytes) -> bytes:
+    """Wrap ``data`` in a CRC32 integrity frame (see :func:`crc_unframe`)."""
+    return _TAG_CRC + (_zlib.crc32(data) & 0xFFFFFFFF).to_bytes(4, "big") + data
+
+
+def crc_unframe(data: bytes) -> bytes:
+    """Verify and strip a CRC32 frame; unframed (legacy) blobs pass through.
+
+    Raises :class:`BlobIntegrityError` when the stored checksum does not
+    match the payload (bit rot, truncation, torn write)."""
+    if data[:1] != _TAG_CRC:
+        return data
+    want = int.from_bytes(data[1:5], "big")
+    body = data[5:]
+    got = _zlib.crc32(body) & 0xFFFFFFFF
+    if got != want:
+        raise BlobIntegrityError(
+            f"blob integrity check failed: stored CRC32 {want:#010x} != "
+            f"computed {got:#010x} over {len(body)} payload bytes")
+    return body
 
 
 def compress_bytes(data: bytes, level: int = 6) -> bytes:
     if HAVE_ZSTD:
-        return _TAG_ZSTD + _zstd.ZstdCompressor(level=level).compress(data)
-    return _TAG_ZLIB + _zlib.compress(data, min(max(level, 1), 9))
+        body = _TAG_ZSTD + _zstd.ZstdCompressor(level=level).compress(data)
+    else:
+        body = _TAG_ZLIB + _zlib.compress(data, min(max(level, 1), 9))
+    return crc_frame(body)
 
 
 def decompress_bytes(data: bytes) -> bytes:
+    data = crc_unframe(data)
     tag, body = data[:1], data[1:]
     if tag == _TAG_ZSTD:
         if not HAVE_ZSTD:

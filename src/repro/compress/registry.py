@@ -11,6 +11,13 @@ codec modules, so new codecs plug in with one ``register_codec`` call:
 - ``zstd``       lossless entropy baseline (``tol`` ignored; zlib fallback)
 
 Lossy codecs guarantee ``max |x - decode(encode(x, tol))| <= tol``.
+
+Integrity: finalized blobs (everything written through
+:func:`repro.compress.codec_util.compress_bytes` — model blobs, temporal
+cache entries) carry a CRC32 frame; decoding a corrupted blob raises
+:class:`BlobIntegrityError` (re-exported here) instead of returning garbage,
+and the temporal model cache uses it to fall back to the previous clean
+entry.
 """
 from __future__ import annotations
 
@@ -20,6 +27,7 @@ from typing import Callable, Dict, Optional, Tuple, Union
 import numpy as np
 
 from repro.compress.blockt import blockt_decode, blockt_encode
+from repro.compress.codec_util import BlobIntegrityError  # noqa: F401 — re-export
 from repro.compress.interp import interp_decode, interp_encode
 from repro.compress.quantizer import quant_decode, quant_encode
 from repro.compress.zstd_codec import zstd_decode, zstd_encode

@@ -75,6 +75,15 @@ class DVNRConfig:
     # sampler is counter-based (repro.core.sampling).
     fuse_sampling: str = "auto"
 
+    # ----- non-finite training guard (repro.resilience) -----
+    # True folds a cheap per-partition isfinite reduction into the scan-fused
+    # train chunk (per-step loss check in the scan carry + a per-leaf params
+    # check at the chunk boundary — no collectives, no extra host syncs) and
+    # reports it as DVNRState.finite. RecoveryPolicy consumes it; with the
+    # guard off the detector is skipped entirely and the traced program is
+    # unchanged from the pre-resilience stack.
+    guard_nonfinite: bool = True
+
     # ----- static analysis at trainer build time (repro.analysis) -----
     # "off" (default; the cheap fused-sampling VMEM guard still runs),
     # "warn" (trace the chunk program at build time and run the jaxpr-level

@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.compress.codec_util import dtype_token
+from repro.compress.codec_util import (BlobIntegrityError, crc_frame,
+                                       crc_unframe, dtype_token)
 from repro.compress.model_compress import compress_model, decompress_model
 from repro.configs.dvnr import DVNRConfig
 
@@ -39,8 +40,11 @@ def _raw_decode_leaf(d) -> jnp.ndarray:
 def _decode_blob(cfg: DVNRConfig, blob: bytes) -> dict:
     """Decode either blob flavor: the raw-f16 msgpack payload of
     ``append(compress=False)`` (ablation: "uncomp") or a compressed model
-    (``repro.compress.model_compress``)."""
+    (``repro.compress.model_compress``). Both flavors carry a CRC32 frame;
+    a corrupted blob raises :class:`BlobIntegrityError` here rather than
+    decoding into garbage params."""
     import msgpack
+    blob = crc_unframe(blob)
     try:
         d = msgpack.unpackb(blob, raw=False)
     except Exception:
@@ -94,11 +98,11 @@ class TemporalModelCache:
                 # shape/dtype ride along so the blob decodes back into a
                 # model through the same get()/window_params() path
                 import msgpack
-                blob = msgpack.packb({
+                blob = crc_frame(msgpack.packb({
                     "kind": _RAW_KIND,
                     "tables": _raw_leaf(one["tables"]),
                     "mlp": [_raw_leaf(w) for w in one["mlp"]],
-                })
+                }))
             blobs.append(blob)
         entry = CacheEntry(timestep, blobs, meta or {})
         self._entries.append(entry)
@@ -118,14 +122,51 @@ class TemporalModelCache:
         return sum(e.bytes for e in self._entries)
 
     def get(self, timestep: int, partition: int) -> dict:
-        for e in self._entries:
-            if e.timestep == timestep:
-                return _decode_blob(self.cfg, e.blobs[partition])
-        raise KeyError(f"timestep {timestep} not in window {self.timesteps}")
+        """Decode one partition's model at ``timestep``.
+
+        A corrupted blob (CRC mismatch) falls back to the newest OLDER clean
+        entry for the same partition — the in situ window is temporally
+        coherent, so the previous timestep's model is the best available
+        stand-in (paper §III-E uses the same observation for warm starts).
+        Raises :class:`BlobIntegrityError` only when no clean fallback exists.
+        """
+        idx = next((i for i, e in enumerate(self._entries)
+                    if e.timestep == timestep), None)
+        if idx is None:
+            raise KeyError(f"timestep {timestep} not in window {self.timesteps}")
+        last_err = None
+        for i in range(idx, -1, -1):       # requested entry, then older ones
+            try:
+                return _decode_blob(self.cfg, self._entries[i].blobs[partition])
+            except BlobIntegrityError as err:
+                last_err = err
+        raise last_err
 
     def window_params(self, partition: int) -> list[dict]:
-        """All cached models of one partition, oldest->newest (pathline tracing)."""
-        return [_decode_blob(self.cfg, e.blobs[partition]) for e in self._entries]
+        """All cached models of one partition, oldest->newest (pathline
+        tracing). A corrupted entry is replaced by its nearest older clean
+        neighbor (newer, for a corrupt oldest entry) so trace length always
+        matches the window; raises only when every entry is corrupt."""
+        decoded: list = []
+        bad: list[int] = []
+        for i, e in enumerate(self._entries):
+            try:
+                decoded.append(_decode_blob(self.cfg, e.blobs[partition]))
+            except BlobIntegrityError:
+                decoded.append(None)
+                bad.append(i)
+        if len(bad) == len(decoded):
+            raise BlobIntegrityError(
+                f"all {len(decoded)} cached blobs for partition {partition} "
+                "failed integrity checks; no clean fallback")
+        for i in bad:
+            j = next((k for k in range(i - 1, -1, -1) if decoded[k] is not None),
+                     None)
+            if j is None:
+                j = next(k for k in range(i + 1, len(decoded))
+                         if decoded[k] is not None)
+            decoded[i] = decoded[j]
+        return decoded
 
 
 class WeightCache:

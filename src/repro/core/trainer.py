@@ -103,6 +103,11 @@ class DVNRState:
     loss_ma: jnp.ndarray  # (P,) moving-average loss
     active: jnp.ndarray   # (P,) convergence mask
     step: int = 0
+    # (P,) bool non-finite detector output of the last chunk (None before any
+    # chunk ran, or with cfg.guard_nonfinite=False). False means the partition
+    # saw a NaN/Inf loss while active, or holds NaN/Inf params — the signal
+    # RecoveryPolicy (repro.resilience) acts on.
+    finite: Optional[jnp.ndarray] = None
 
 
 class DVNRTrainer:
@@ -232,14 +237,17 @@ class DVNRTrainer:
                          jnp.ones((self.P,), bool), 0)
 
     # -------------------------- one SPMD step -------------------------- #
-    def _build_spmd_step(self):
+    def _build_spmd_step(self, adam: Optional[AdamW] = None):
         """The per-step SPMD body: ``(params, opt, vols, seeds, active,
         loss_ma) -> (params, opt, loss, loss_ma, active)``. ``seeds`` is the
         (P, 2) uint32 counter-seed table from
         :func:`repro.core.sampling.step_seeds` — every path (unfused, fused,
-        fused-with-in-op-sampling) draws the same batch from it."""
+        fused-with-in-op-sampling) draws the same batch from it. ``adam``
+        overrides the trainer's optimizer (lr-backoff retries from
+        :mod:`repro.resilience` rebuild the step with a scaled lr)."""
         cfg, ghost, backend = self.cfg, self.ghost, self.backend
-        adam, compute_dtype = self.adam, self._compute_dtype
+        adam = self.adam if adam is None else adam
+        compute_dtype = self._compute_dtype
 
         def sample_batch(vol, seed):
             coords = training_coords_counter(seed, cfg.batch_size,
@@ -347,35 +355,66 @@ class DVNRTrainer:
         return spmd_step
 
     # -------------------------- scan-fused chunk ------------------------ #
-    def _chunk_body(self, n_steps: int):
+    def _chunk_body(self, n_steps: int, lr_scale: float = 1.0):
         """The unjitted ``n_steps``-long scan of the SPMD step. Exposed
         separately from :meth:`_chunk_fn` so tests can inspect the traced
         program (``jax.make_jaxpr``) — e.g. that with in-op sampling no RNG /
-        gather primitives remain outside the fused op."""
-        spmd_step, P = self._spmd_step, self.P
+        gather primitives remain outside the fused op.
+
+        With ``cfg.guard_nonfinite`` the chunk also carries a (P,) ``finite``
+        flag through the scan (``isfinite(loss) | ~active`` per step — a
+        frozen partition's stale NaN loss is not a new failure) and ANDs in a
+        per-leaf params isfinite reduction at the chunk boundary. Both
+        reductions run over the NON-sharded per-partition axes only, so the
+        per-device program stays collective-free (zero_collectives holds).
+
+        ``lr_scale != 1`` rebuilds the SPMD step around an AdamW with
+        ``lr * lr_scale`` — the lr-backoff rung of
+        :class:`repro.resilience.RecoveryPolicy`."""
+        if lr_scale == 1.0:
+            spmd_step = self._spmd_step
+        else:
+            import dataclasses
+            adam = AdamW(dataclasses.replace(
+                self.adam.cfg, lr=self.adam.cfg.lr * float(lr_scale)))
+            spmd_step = self._build_spmd_step(adam)
+        P, guard = self.P, self.cfg.guard_nonfinite
 
         def chunk(params, opt, vols, key, step0, active, loss_ma):
             def body(carry, i):
-                params, opt, active, loss_ma = carry
+                params, opt, active, loss_ma, finite = carry
                 seeds = step_seeds(key, step0 + i, P)
+                active_in = active
                 params, opt, loss, loss_ma, active = spmd_step(
                     params, opt, vols, seeds, active, loss_ma)
-                return (params, opt, active, loss_ma), loss
+                if guard:
+                    finite = finite & (jnp.isfinite(loss) | ~active_in)
+                return (params, opt, active, loss_ma, finite), loss
 
-            (params, opt, active, loss_ma), losses = jax.lax.scan(
-                body, (params, opt, active, loss_ma), jnp.arange(n_steps))
-            return params, opt, active, loss_ma, losses
+            finite0 = jnp.ones((P,), bool)
+            (params, opt, active, loss_ma, finite), losses = jax.lax.scan(
+                body, (params, opt, active, loss_ma, finite0),
+                jnp.arange(n_steps))
+            if guard:
+                leaf_ok = [jnp.all(jnp.isfinite(x.astype(jnp.float32)),
+                                   axis=tuple(range(1, x.ndim)))
+                           for x in jax.tree.leaves(params)]
+                finite = finite & jnp.stack(leaf_ok).all(axis=0)
+            return params, opt, active, loss_ma, finite, losses
 
         return chunk
 
-    def _chunk_fn(self, n_steps: int):
-        """Jitted ``n_steps``-long scan of the SPMD step (cached per length)."""
-        fn = self._chunk_fns.get(n_steps)
+    def _chunk_fn(self, n_steps: int, lr_scale: float = 1.0):
+        """Jitted ``n_steps``-long scan of the SPMD step (cached per
+        (length, lr_scale))."""
+        cache_key = (n_steps, float(lr_scale))
+        fn = self._chunk_fns.get(cache_key)
         if fn is not None:
-            self._chunk_fns.move_to_end(n_steps)
+            self._chunk_fns.move_to_end(cache_key)
             return fn
-        fn = jax.jit(self._chunk_body(n_steps), donate_argnums=(0, 1))
-        self._chunk_fns[n_steps] = fn
+        fn = jax.jit(self._chunk_body(n_steps, lr_scale),
+                     donate_argnums=(0, 1))
+        self._chunk_fns[cache_key] = fn
         while len(self._chunk_fns) > self._chunk_fns_max:
             self._chunk_fns.popitem(last=False)
         return fn
@@ -428,25 +467,29 @@ class DVNRTrainer:
         return report
 
     def train_chunk(self, state: DVNRState, volumes, n_steps: int, *,
-                    key) -> tuple[DVNRState, jnp.ndarray]:
+                    key, lr_scale: float = 1.0) -> tuple[DVNRState, jnp.ndarray]:
         """Run ``n_steps`` training steps as ONE device program (no host round
         trips): a ``jax.lax.scan`` over the SPMD step under a single ``jit``
         with donated params/opt, per-step/per-partition keys derived inside the
         scan, and the (n_steps, P) loss trace accumulated on device.
 
         Returns the advanced state and the on-device loss trace; nothing is
-        transferred to the host until the caller inspects either.
+        transferred to the host until the caller inspects either. The
+        ``state.finite`` field carries the non-finite detector output (all
+        True when ``cfg.guard_nonfinite`` is off).
         """
         n_steps = int(n_steps)
-        params, opt, active, loss_ma, losses = self._chunk_fn(n_steps)(
-            state.params, state.opt, volumes, key, jnp.int32(state.step),
-            state.active, state.loss_ma)
+        params, opt, active, loss_ma, finite, losses = \
+            self._chunk_fn(n_steps, lr_scale)(
+                state.params, state.opt, volumes, key, jnp.int32(state.step),
+                state.active, state.loss_ma)
         return DVNRState(params, opt, loss_ma, active,
-                         state.step + n_steps), losses
+                         state.step + n_steps, finite), losses
 
     # -------------------------- drivers -------------------------------- #
     def train(self, state: DVNRState, volumes, *, steps: int, key,
-              log_every: int = 0, check_every: int = 0) -> tuple[DVNRState, dict]:
+              log_every: int = 0, check_every: int = 0,
+              recovery=None) -> tuple[DVNRState, dict]:
         """Chunked training driver. volumes: (P, nx+2g, ny+2g, nz+2g)
         pre-normalized partitions.
 
@@ -455,7 +498,20 @@ class DVNRTrainer:
         0 picks a default: the whole run as one chunk when early stopping is
         off, else 64-step chunks (at most 63 extra masked steps vs per-step
         checking; masked partitions are frozen, so quality is unaffected).
+
+        ``recovery`` (a :class:`repro.resilience.RecoveryPolicy`) routes the
+        run through the non-finite recovery driver: each chunk is snapshotted
+        before it runs, partitions whose detector flag trips are retried on a
+        reseed → moment-reset → lr-backoff ladder and frozen at their
+        last-good params once attempts are exhausted; healthy partitions keep
+        their first-attempt results bit-for-bit (zero-comm independence).
         """
+        if recovery is not None:
+            from repro.resilience.recovery import train_with_recovery
+            return train_with_recovery(self, state, volumes, steps=steps,
+                                       key=key, log_every=log_every,
+                                       check_every=check_every,
+                                       policy=recovery)
         if steps <= 0:
             return state, {"loss": [], "final_step": state.step}
         if check_every <= 0:

@@ -3,9 +3,12 @@
 The checkpoint stores *global* (host-gathered) arrays; restoring places each
 leaf with the TARGET mesh's shardings, so losing a pod (512 -> 256 chips) or
 gaining one (256 -> 512) is a restore + relower, not a migration. DVNR adds a
-second, cheaper safety net: per-timestep compressed models (kilobytes) are
-themselves checkpoints — a failed rank's partition retrains from the weight
-cache in seconds (paper §III-E).
+second, cheaper safety net, implemented in the runtime itself: a rank that
+publishes nothing (or garbage) is structurally sanitized out of the batch
+(:func:`repro.resilience.sanitize_partitions`), masked from training, and its
+INR keeps the §III-E weight-cache warm start — see ``dvnr_node(resilient=)``
+and ``InSituSession(fault_plan=/recovery=/deadline_s=)``; restored partitions
+retrain from the cache in the next healthy tick.
 
 ``plan_restart`` is the control-plane helper: given surviving device count it
 picks the new mesh and returns the shardings to restore with.

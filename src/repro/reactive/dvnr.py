@@ -32,6 +32,12 @@ class DVNRValue:
     train_time_s: float
     steps: int
     compressed: Optional[list] = None  # per-partition blobs if compression on
+    # resilience surfaces (repro.resilience): ranks that did not train this
+    # tick (structurally degraded publishes + recovery-frozen partitions —
+    # their INRs hold the weight-cache warm start), and the recovery retry
+    # count spent on this tick's training
+    degraded_partitions: tuple = ()
+    retries: int = 0
 
     # ------- legacy field access (pre-DVNRModel call sites) ------------- #
     @property
@@ -59,18 +65,27 @@ class DVNRValue:
 
 def _train_once(cfg: DVNRConfig, partitions, trainer: DVNRTrainer,
                 wcache: Optional[WeightCache], field_name: str,
-                key, compress: bool, check_every: int = 0) -> DVNRValue:
+                key, compress: bool, check_every: int = 0,
+                recovery=None, train_mask=None,
+                degraded: tuple = ()) -> DVNRValue:
     cached = wcache.get(field_name, cfg) if wcache is not None else None
     model, info = api.train(partitions, cfg, trainer=trainer, key=key,
-                            cached_params=cached, check_every=check_every)
+                            cached_params=cached, check_every=check_every,
+                            recovery=recovery, train_mask=train_mask)
     if wcache is not None:
         # cache the highest-precision view (f32 master under bf16 policies):
         # the next tick's warm start seeds both working copy and master from
         # it, so bf16 rounding never re-enters the cached trajectory
+        # (degraded/frozen partitions held their warm start, so re-putting
+        # them is the identity — the cache never absorbs a poisoned state)
         wcache.put(field_name, cfg,
                    DVNRTrainer.master_params(info["state"]))
     blobs = model.compress() if compress else None
-    return DVNRValue(model, info["train_time_s"], info["steps"], blobs)
+    rec = info.get("recovery", {})
+    degraded_all = tuple(sorted(set(degraded)
+                                | set(rec.get("frozen_partitions", ()))))
+    return DVNRValue(model, info["train_time_s"], info["steps"], blobs,
+                     degraded_all, int(rec.get("retries", 0)))
 
 
 def dvnr_node(runtime: Runtime, field_node: Node, cfg: DVNRConfig, *,
@@ -78,7 +93,8 @@ def dvnr_node(runtime: Runtime, field_node: Node, cfg: DVNRConfig, *,
               impl: backends.BackendLike = "ref",
               weight_caching: bool = True, compress: bool = True,
               seed: int = 0, name: Optional[str] = None,
-              check_every: int = 0, precision=None) -> Node:
+              check_every: int = 0, precision=None,
+              recovery=None, resilient: bool = False) -> Node:
     """Reactive constructor: volume partitions -> trained DVNRValue (lazy).
 
     Each tick's training runs through the trainer's scan-fused chunk path;
@@ -86,16 +102,37 @@ def dvnr_node(runtime: Runtime, field_node: Node, cfg: DVNRConfig, *,
     per-tick training loop performs no other host round trips. ``precision``
     overrides ``cfg.precision`` (e.g. ``"bf16"`` for mixed-precision per-tick
     training with f32 AdamW master state).
+
+    ``resilient=True`` structurally sanitizes every published partition list
+    (:func:`repro.resilience.sanitize_partitions`): dropped/truncated ranks
+    are stood in for by the previous tick's data (or zeros) and masked out of
+    training, so their INRs keep the §III-E weight-cache warm start.
+    ``recovery`` (a :class:`repro.resilience.RecoveryPolicy`) additionally
+    routes training through the non-finite retry ladder. Both leave the
+    fault-free trace of the node byte-identical to the plain path.
     """
     if precision is not None:
         from repro.precision import resolve_precision
         cfg = cfg.replace(precision=resolve_precision(precision).name)
     trainer = DVNRTrainer(cfg, n_partitions, mesh=mesh, impl=impl)
     wcache = WeightCache() if (weight_caching and cfg.weight_caching) else None
+    last_clean: dict = {"parts": None}
 
     def construct(partitions):
         key = jax.random.fold_in(jax.random.PRNGKey(seed), runtime.tick)
+        degraded: tuple = ()
+        train_mask = None
+        if resilient:
+            from repro.resilience.runtime import sanitize_partitions
+            partitions, degraded = sanitize_partitions(
+                partitions, n_partitions, template=last_clean["parts"])
+            last_clean["parts"] = list(partitions)
+            if degraded:
+                import numpy as np
+                train_mask = np.ones(n_partitions, bool)
+                train_mask[list(degraded)] = False
         return _train_once(cfg, partitions, trainer, wcache, field_name, key,
-                           compress, check_every)
+                           compress, check_every, recovery=recovery,
+                           train_mask=train_mask, degraded=degraded)
 
     return Node(runtime, name or f"dvnr[{field_name}]", [field_node], construct)

@@ -1,0 +1,43 @@
+"""repro.resilience — fault injection, non-finite recovery, degradation.
+
+The paper's reactive in situ loop must never stall or crash the host
+simulation (§II, §III-E: the per-timestep weight cache doubles as a
+seconds-scale restart path for failed ranks). This package supplies the three
+layers that make our runtime honor that contract, plus the tooling to prove
+it:
+
+- :mod:`repro.resilience.faults` — a seedable, fully deterministic
+  :class:`FaultPlan` (NaN/Inf field values, dropped/truncated partitions,
+  artificial tick latency, corrupted compressed blobs, forced kernel
+  exceptions) and :class:`FaultySimulation`, a transparent wrapper over
+  :class:`repro.insitu.simulation.SyntheticSimulation` that injects the plan
+  at ``publish``/``step`` time. Same seed → bit-identical faults, so every
+  failure mode is reproducible in tests and CI.
+- :mod:`repro.resilience.recovery` — :class:`RecoveryPolicy` and the
+  chunk-granular recovery driver consuming the on-device non-finite detector
+  (``DVNRState.finite``): skip-and-reseed → rollback + optimizer-moment reset
+  → lr-backoff retries, bounded attempts, then freezing the partition at its
+  last-good params. Healthy partitions keep their first-attempt results
+  bit-for-bit (zero-comm partition independence).
+- :mod:`repro.resilience.runtime` — structural sanitization of published
+  partitions (missing/truncated ranks are stood in for by the previous tick's
+  data or zeros, and excluded from training via the convergence mask) so the
+  stacked SPMD program never sees a malformed batch.
+
+``InSituSession`` wires all three together (``fault_plan=``, ``recovery=``,
+``deadline_s=``) and surfaces per-cycle outcomes via ``StepRecord`` /
+``InSituSession.health()``.
+"""
+from repro.resilience.faults import (FAULT_KINDS, FaultPlan, FaultSpec,
+                                     FaultySimulation, InjectedKernelFault)
+from repro.resilience.recovery import (RecoveryPolicy, merge_partitions,
+                                       snapshot_state, train_with_recovery)
+from repro.resilience.runtime import sanitize_partitions
+
+__all__ = [
+    "FAULT_KINDS", "FaultPlan", "FaultSpec", "FaultySimulation",
+    "InjectedKernelFault",
+    "RecoveryPolicy", "merge_partitions", "snapshot_state",
+    "train_with_recovery",
+    "sanitize_partitions",
+]

@@ -1,0 +1,222 @@
+"""Non-finite recovery for chunked DVNR training.
+
+The trainer's on-device detector (``cfg.guard_nonfinite``) reports a (P,)
+``finite`` flag with every chunk. This module turns that flag into a bounded
+retry ladder, applied at chunk granularity by :func:`train_with_recovery`
+(reached via ``DVNRTrainer.train(recovery=...)`` / ``api.train(recovery=)``):
+
+1. **skip-and-reseed** — rerun the chunk for the tripped partitions from the
+   pre-chunk snapshot with a folded-in retry key; a sparse NaN/Inf poisoning
+   of the volume is usually dodged by resampling.
+2. **rollback + moment reset** — additionally reinitialize the tripped
+   partitions' AdamW moments (divergence carried in the optimizer state).
+3. **lr-backoff** — additionally scale the learning rate down by
+   ``policy.lr_backoff`` per further attempt (numerical blow-ups from an
+   over-aggressive lr).
+
+After ``policy.max_retries`` attempts a partition is **frozen**: restored to
+its last-good params and masked out of training (``active=False``), exactly
+the paper's weight-cache degradation story — the rest of the partitions keep
+training normally.
+
+Healthy partitions always keep their FIRST attempt's results: retries rerun
+the whole stacked program (SPMD ranks stay in lockstep) but only the tripped
+partitions' columns are merged back. Because training is zero-communication,
+a partition's trajectory is independent of its neighbors' data, so the kept
+columns are bit-identical to a fault-free run (asserted by
+tests/test_resilience.py on both ref and pallas backends).
+
+Everything here is host-side orchestration around the donated chunk program —
+the only device→host syncs are the per-chunk ``finite`` reads the driver
+already paid for.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class RecoveryPolicy:
+    """Knobs of the retry ladder (see module docstring for rung semantics).
+
+    ``max_retries`` bounds attempts per chunk per partition; ``reseed=False``
+    disables the resample rung (retries then rerun the identical program —
+    only useful to prove determinism); ``rollback=False`` disables the
+    moment-reset rung; ``lr_backoff`` is the per-attempt lr multiplier of
+    rung 3 (1.0 disables); ``freeze_on_failure=False`` raises instead of
+    degrading when the ladder is exhausted."""
+
+    max_retries: int = 3
+    reseed: bool = True
+    rollback: bool = True
+    lr_backoff: float = 0.5
+    freeze_on_failure: bool = True
+
+
+class NonFiniteTrainingError(RuntimeError):
+    """Raised when recovery is exhausted and ``freeze_on_failure`` is off."""
+
+
+def snapshot_state(state):
+    """Deep-copied state (donation-safe: the chunk program may consume the
+    original's buffers without invalidating the snapshot)."""
+    from repro.core.trainer import DVNRState
+
+    cp = jax.tree.map(lambda t: jnp.array(t, copy=True),
+                      (state.params, state.opt, state.loss_ma, state.active))
+    finite = (None if state.finite is None
+              else jnp.array(state.finite, copy=True))
+    return DVNRState(*cp, state.step, finite)
+
+
+def merge_partitions(mask, take, keep):
+    """Per-partition pytree select: ``mask[p] ? take[p] : keep[p]``.
+
+    Every leaf carries the stacked partition axis first (trainer invariant),
+    so the (P,) mask broadcasts against it. ``jnp.where`` materializes fresh
+    buffers — the output never aliases either input, keeping the donation
+    contract of the chunk program intact."""
+    mask = jnp.asarray(mask)
+
+    def sel(a, b):
+        m = mask.reshape((-1,) + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+
+    return jax.tree.map(sel, take, keep)
+
+
+def _fold_retry_key(key, attempt: int):
+    # large odd constant keeps retry keys disjoint from the per-tick
+    # fold_in(seed, tick) stream of the reactive layer
+    return jax.random.fold_in(key, 1000003 + attempt)
+
+
+def _reset_moments(trainer, opt, params):
+    """Fresh AdamW state for every partition (merged per-mask by callers).
+    ``adam.init`` rebuilds the f32 master from the working params when the
+    policy keeps one — for a partition being rolled back that is exactly the
+    restore-from-snapshot semantics we want."""
+    return jax.vmap(trainer.adam.init)(params)
+
+
+def train_with_recovery(trainer, state, volumes, *, steps: int, key,
+                        log_every: int = 0, check_every: int = 0,
+                        policy: Optional[RecoveryPolicy] = None):
+    """Chunked training driver with the non-finite retry ladder.
+
+    Mirrors :meth:`repro.core.trainer.DVNRTrainer.train` (same chunking, same
+    loss-log format, same early stop) and additionally returns a
+    ``"recovery"`` entry in the info dict: total retries, per-chunk events,
+    and the recovered/frozen partition sets.
+    """
+    from repro.core.trainer import DVNRState
+
+    policy = policy or RecoveryPolicy()
+    if not trainer.cfg.guard_nonfinite:
+        raise ValueError("recovery requires cfg.guard_nonfinite=True (the "
+                         "on-device detector is the signal it acts on)")
+    if steps <= 0:
+        return state, {"loss": [], "final_step": state.step,
+                       "recovery": {"retries": 0, "events": [],
+                                    "recovered_partitions": (),
+                                    "frozen_partitions": ()}}
+    if check_every <= 0:
+        check_every = (steps if trainer.cfg.target_loss <= 0
+                       else min(steps, 64))
+
+    P = trainer.P
+    frozen = np.zeros(P, bool)
+    recovered: set = set()
+    retries_total = 0
+    events: list = []
+    losses, done = [], 0
+
+    while done < steps:
+        n = min(check_every, steps - done)
+        start = state.step
+        pre = snapshot_state(state)
+        cand, trace = trainer.train_chunk(state, volumes, n, key=key)
+        finite = np.asarray(cand.finite)
+        bad = ~finite & ~frozen
+
+        if bad.any():
+            event = {"step": int(start), "tripped": tuple(np.flatnonzero(bad)),
+                     "attempts": 0}
+            for attempt in range(1, policy.max_retries + 1):
+                base = snapshot_state(pre)
+                if attempt >= 2 and policy.rollback:
+                    fresh = _reset_moments(trainer, base.opt, base.params)
+                    base = DVNRState(
+                        base.params,
+                        merge_partitions(jnp.asarray(bad), fresh, base.opt),
+                        base.loss_ma, base.active, base.step, base.finite)
+                k = _fold_retry_key(key, attempt) if policy.reseed else key
+                lr_scale = (policy.lr_backoff ** max(attempt - 2, 0)
+                            if policy.lr_backoff != 1.0 else 1.0)
+                r_state, r_trace = trainer.train_chunk(
+                    base, volumes, n, key=k, lr_scale=lr_scale)
+                retries_total += 1
+                event["attempts"] = attempt
+                r_finite = np.asarray(r_state.finite)
+                fixed = bad & r_finite
+                if fixed.any():
+                    m = jnp.asarray(fixed)
+                    cand = DVNRState(
+                        merge_partitions(m, r_state.params, cand.params),
+                        merge_partitions(m, r_state.opt, cand.opt),
+                        jnp.where(m, r_state.loss_ma, cand.loss_ma),
+                        jnp.where(m, r_state.active, cand.active),
+                        cand.step,
+                        jnp.where(m, r_state.finite, cand.finite))
+                    trace = jnp.where(m[None, :], r_trace, trace)
+                    recovered.update(int(p) for p in np.flatnonzero(fixed))
+                    bad = bad & ~r_finite
+                if not bad.any():
+                    break
+
+            if bad.any():
+                if not policy.freeze_on_failure:
+                    raise NonFiniteTrainingError(
+                        f"partitions {sorted(np.flatnonzero(bad))} stayed "
+                        f"non-finite after {policy.max_retries} recovery "
+                        f"attempts at step {start}")
+                frozen |= bad
+                event["frozen"] = tuple(int(p) for p in np.flatnonzero(bad))
+            events.append(event)
+
+        if frozen.any():
+            # frozen partitions are pinned at their last-good state every
+            # chunk: pre holds it by induction, and the restore also scrubs
+            # the gated-update NaN leak (0 * NaN update) a frozen partition
+            # with poisoned volume data would otherwise accumulate
+            m = jnp.asarray(frozen)
+            safe_ma = jnp.where(jnp.isfinite(pre.loss_ma), pre.loss_ma, 0.0)
+            cand = DVNRState(
+                merge_partitions(m, pre.params, cand.params),
+                merge_partitions(m, pre.opt, cand.opt),
+                jnp.where(m, safe_ma, cand.loss_ma),
+                jnp.where(m, False, cand.active),
+                cand.step,
+                jnp.where(m, True, cand.finite))
+            trace = jnp.where(m[None, :], safe_ma[None, :], trace)
+
+        state = cand
+        if log_every:
+            mean = np.asarray(trace.mean(axis=1))
+            losses += [(start + i + 1, float(mean[i])) for i in range(n)
+                       if (done + i + 1) % log_every == 0]
+        done += n
+        if trainer.cfg.target_loss > 0 and not bool(state.active.any()):
+            break
+
+    info = {"loss": losses, "final_step": state.step,
+            "recovery": {"retries": retries_total, "events": events,
+                         "recovered_partitions": tuple(sorted(recovered)),
+                         "frozen_partitions": tuple(
+                             int(p) for p in np.flatnonzero(frozen))}}
+    return state, info

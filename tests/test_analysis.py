@@ -174,7 +174,7 @@ def test_closed_form_sampling_footprint_matches_traced():
     tr = build_trainer(cfg, backend="pallas", n_partitions=2,
                        local_shape=(10, 10, 10), ghost=1)
     assert tr.fuse_sampling
-    (step_prog, _), _ = trainer_programs(tr, n_steps=2)
+    (step_prog, _), *_rest = trainer_programs(tr, n_steps=2)
     traced = max(f.total_bytes for f in estimate_jaxpr(step_prog.jaxpr))
     closed = fts_ops.sampling_vmem_footprint(
         tr.volume_shape, fts_ops._cfg_state_shapes(cfg),

@@ -69,6 +69,64 @@ def test_restore_mismatch_raises(tmp_path):
         mgr.restore({"only_one": jnp.zeros(3)})
 
 
+def test_async_save_error_surfaces_on_wait(tmp_path, monkeypatch):
+    """A failing async write (full disk, dead mount) must re-raise at the
+    next sync point instead of training on while silently never
+    checkpointing. The manager stays usable afterwards."""
+    mgr = CheckpointManager(tmp_path)
+
+    def boom(*a, **k):
+        raise OSError("no space left on device")
+
+    monkeypatch.setattr(np, "savez", boom)
+    mgr.save(1, _tree())                             # async; thread captures
+    with pytest.raises(RuntimeError, match="async checkpoint write failed"):
+        mgr.wait()
+    monkeypatch.undo()
+    mgr.save(2, _tree(2), blocking=True)             # error cleared: usable
+    assert mgr.latest_step() == 2
+
+
+def test_crash_mid_write_recovers_to_previous_step(tmp_path):
+    """A crash between array write and the atomic rename leaves only .tmp-*
+    junk: a fresh manager sweeps it and latest_step() falls back to the last
+    fully published checkpoint."""
+    mgr = CheckpointManager(tmp_path, keep_last=3)
+    mgr.save(1, _tree(1), blocking=True)
+    torn = tmp_path / "step_000000000002.tmp-9999"   # simulated dead writer
+    torn.mkdir()
+    (torn / "arrays.npz").write_bytes(b"partial garbage")
+
+    mgr2 = CheckpointManager(tmp_path)
+    assert not torn.exists()                         # swept on startup
+    assert mgr2.latest_step() == 1
+    rec, _ = mgr2.restore(_tree(1))
+    np.testing.assert_array_equal(np.asarray(rec["w"]),
+                                  np.asarray(_tree(1)["w"]))
+
+
+def test_restore_detects_torn_arrays_vs_manifest(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    t = _tree()
+    final = mgr.save(1, t, blocking=True)
+    with np.load(final / "arrays.npz") as z:
+        arrs = {k: z[k] for k in z.files}
+    arrs["leaf_0"] = arrs["leaf_0"][:3]              # truncated leaf
+    np.savez(final / "arrays.npz", **arrs)
+    with pytest.raises(ValueError, match="corrupt or torn"):
+        mgr.restore(t, 1)
+
+
+def test_restore_into_wrong_config_template_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    mgr.save(1, _tree(), blocking=True)
+    wrong = {"w": jnp.zeros((8, 8), jnp.float32),    # wrong model shape
+             "b": jnp.zeros(64, jnp.float32),
+             "step": jnp.asarray(0, jnp.int32)}
+    with pytest.raises(ValueError, match="wrong model config"):
+        mgr.restore(wrong, 1)
+
+
 if HAVE_HYPOTHESIS:
     @settings(max_examples=15, deadline=None)
     @given(st.integers(0, 2**31 - 1), st.sampled_from([1e-2, 1e-3, 1e-4]))

@@ -1,0 +1,407 @@
+"""repro.resilience: the fault-tolerant in situ runtime.
+
+Covers the full injection->detection->recovery->reporting chain:
+
+- seeded :class:`FaultPlan` determinism (bit-identical faults per seed),
+- :class:`FaultySimulation` value/structural injection with clean originals,
+- :func:`sanitize_partitions` structural repair + degraded-rank reporting,
+- the trainer's on-device non-finite detector (``cfg.guard_nonfinite``),
+- the :func:`train_with_recovery` retry ladder (reseed -> moment reset ->
+  lr-backoff -> freeze), exercised deterministically via a flaky chunk stub,
+- end-to-end ``api.train(recovery=)``: a NaN-poisoned run ends finite and the
+  healthy partition is f32 BIT-EXACT vs the clean run (zero-communication
+  independence) — runs under the CI backend matrix (``backend="auto"``),
+- the 20-step acceptance session: every fault kind injected, the run never
+  raises, ``health()`` reports each fault exactly where it was injected and
+  is bit-identical across re-runs of the same seed,
+- the degraded-partition training program stays free of collectives and of
+  misplaced RNG/gather ops (static checks).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.analysis import run_checks
+from repro.configs import dvnr as dvnr_cfg
+from repro.core.trainer import DVNRState, DVNRTrainer
+from repro.insitu.session import InSituSession
+from repro.insitu.simulation import SimulationConfig, SyntheticSimulation
+from repro.resilience import (FaultPlan, FaultSpec, FaultySimulation,
+                              InjectedKernelFault, RecoveryPolicy,
+                              sanitize_partitions, train_with_recovery)
+from repro.resilience.recovery import NonFiniteTrainingError
+
+CFG = dvnr_cfg.SMOKE
+SIM = SimulationConfig("cloverleaf", n_ranks=2, local_shape=(10, 10, 10))
+
+
+def _parts(seed_cycle=1):
+    sim = SyntheticSimulation(SIM)
+    for _ in range(seed_cycle):
+        sim.step()
+    return list(sim.publish(sim.field_names[0]))
+
+
+def _all_nan(part):
+    from repro.data.volume import VolumePartition
+    data = np.full_like(np.asarray(part.data), np.nan)
+    return VolumePartition(data, part.origin, part.extent, part.ghost,
+                           part.vmin, part.vmax)
+
+
+# --------------------------------------------------------------------------- #
+# FaultPlan: seeded determinism
+# --------------------------------------------------------------------------- #
+
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("cosmic_ray", cycle=1)
+
+
+def test_corrupt_bytes_deterministic_per_seed():
+    spec = FaultSpec("corrupt_blob", cycle=3, partition=1, magnitude=0.05)
+    blob = bytes(range(256)) * 4
+    a = FaultPlan(7, [spec]).corrupt_bytes(blob, spec)
+    b = FaultPlan(7, [spec]).corrupt_bytes(blob, spec)
+    c = FaultPlan(8, [spec]).corrupt_bytes(blob, spec)
+    assert a == b
+    assert a != blob
+    assert a != c                       # the seed actually participates
+    assert len(a) == len(blob)          # flips, not truncation
+
+
+def test_nan_injection_bit_identical_across_plan_instances():
+    def run(seed):
+        plan = FaultPlan(seed, [FaultSpec("nan_field", cycle=1, partition=0,
+                                          magnitude=0.02)])
+        sim = FaultySimulation(SyntheticSimulation(SIM), plan)
+        sim.step()
+        return np.asarray(sim.publish(sim.field_names[0])[0].data)
+
+    a, b, c = run(5), run(5), run(6)
+    assert np.isnan(a).any()
+    np.testing.assert_array_equal(np.isnan(a), np.isnan(b))
+    np.testing.assert_array_equal(a[~np.isnan(a)], b[~np.isnan(b)])
+    assert not np.array_equal(np.isnan(a), np.isnan(c))
+
+
+# --------------------------------------------------------------------------- #
+# FaultySimulation: injection semantics
+# --------------------------------------------------------------------------- #
+
+def test_faulty_simulation_injects_and_keeps_originals_clean():
+    plan = FaultPlan(0, [
+        FaultSpec("nan_field", cycle=1, partition=1, magnitude=0.01),
+        FaultSpec("drop_partition", cycle=2, partition=0),
+        FaultSpec("truncate_partition", cycle=3, partition=1),
+        FaultSpec("slow_tick", cycle=4, latency_s=2.5),
+    ])
+    inner = SyntheticSimulation(SIM)
+    sim = FaultySimulation(inner, plan)
+    f = sim.field_names[0]
+
+    sim.step()                                       # cycle 1: NaN values
+    parts = sim.publish(f)
+    assert np.isnan(parts[1].data).any()
+    assert not np.isnan(parts[0].data).any()
+    assert np.isfinite(parts[1].vmin) and np.isfinite(parts[1].vmax)
+    assert sim.publish(f) is parts                   # memoized faulted handle
+    for p in inner.publish(f):                       # originals never mutated
+        assert np.isfinite(p.data).all()
+
+    sim.step()                                       # cycle 2: dropped rank
+    parts = sim.publish(f)
+    assert parts[0] is None and parts[1] is not None
+    assert sim.injected_latency_s == 0.0
+
+    sim.step()                                       # cycle 3: torn transport
+    parts = sim.publish(f)
+    good = tuple(parts[0].data.shape)
+    assert tuple(parts[1].data.shape) != good
+    assert parts[1].data.shape[0] == good[0] // 2
+
+    sim.step()                                       # cycle 4: virtual latency
+    assert sim.injected_latency_s == 2.5             # accounted, not slept
+    assert plan.should_raise(4) is False
+    assert plan.latency(4) == 2.5
+
+
+# --------------------------------------------------------------------------- #
+# sanitize_partitions: structural repair
+# --------------------------------------------------------------------------- #
+
+def test_sanitize_repairs_drop_truncate_and_short_list():
+    parts = _parts()
+    template = list(parts)
+    shape = tuple(parts[0].data.shape)
+
+    dropped = [None, parts[1]]
+    clean, degraded = sanitize_partitions(dropped, 2)
+    assert degraded == (0,)
+    assert tuple(clean[0].data.shape) == shape
+    assert np.all(clean[0].data == 0)                # placeholder, no template
+    assert clean[1] is parts[1]
+
+    clean, degraded = sanitize_partitions(dropped, 2, template=template)
+    assert degraded == (0,)
+    np.testing.assert_array_equal(np.asarray(clean[0].data),
+                                  np.asarray(template[0].data))
+
+    from repro.resilience.faults import _truncate
+    torn = [parts[0], _truncate(parts[1])]
+    clean, degraded = sanitize_partitions(torn, 2)
+    assert degraded == (1,)
+    assert tuple(clean[1].data.shape) == shape
+
+    clean, degraded = sanitize_partitions(parts[:1], 2)   # short publish list
+    assert degraded == (1,)
+    assert len(clean) == 2
+
+    with pytest.raises(ValueError, match="every published partition"):
+        sanitize_partitions([None, None], 2)
+    # ... but a template from the previous tick saves the all-degraded case
+    clean, degraded = sanitize_partitions([None, None], 2, template=template)
+    assert degraded == (0, 1)
+
+
+def test_placeholder_box_placement_matches_simulation():
+    parts = _parts()
+    clean, _ = sanitize_partitions([parts[0], None], 2)
+    assert clean[1].origin == parts[1].origin
+    assert clean[1].extent == parts[1].extent
+    assert clean[1].ghost == parts[1].ghost
+
+
+# --------------------------------------------------------------------------- #
+# On-device non-finite detector
+# --------------------------------------------------------------------------- #
+
+def test_finite_detector_flags_exactly_the_poisoned_partition():
+    parts = _parts()
+    tr = DVNRTrainer(CFG, 2, impl="auto")
+    state = tr.init(jax.random.PRNGKey(0))
+    vols = jnp.stack([p.normalized() for p in parts])
+
+    s_clean, _ = tr.train_chunk(state, vols, 4, key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(s_clean.finite), [True, True])
+
+    poisoned = vols.at[1].set(jnp.nan)
+    state = tr.init(jax.random.PRNGKey(0))
+    s_bad, _ = tr.train_chunk(state, poisoned, 4, key=jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(s_bad.finite), [True, False])
+
+
+def test_detector_off_means_finite_is_all_true():
+    cfg = CFG.replace(guard_nonfinite=False)
+    tr = DVNRTrainer(cfg, 2, impl="auto")
+    state = tr.init(jax.random.PRNGKey(0))
+    vols = jnp.full((2, 12, 12, 12), jnp.nan)
+    s, _ = tr.train_chunk(state, vols, 2, key=jax.random.PRNGKey(1))
+    assert bool(np.asarray(s.finite).all())
+    with pytest.raises(ValueError, match="guard_nonfinite"):
+        train_with_recovery(tr, state, vols, steps=2,
+                            key=jax.random.PRNGKey(1))
+
+
+# --------------------------------------------------------------------------- #
+# Recovery ladder (deterministic flaky-chunk stub)
+# --------------------------------------------------------------------------- #
+
+def _make_flaky(trainer, fail_calls: int, part: int = 1):
+    """Wrap ``trainer.train_chunk``: partition ``part`` reports non-finite for
+    the first ``fail_calls`` invocations, then healthy. Records the lr_scale
+    of every invocation so rung order is assertable."""
+    real = trainer.train_chunk
+    rec = {"calls": 0, "lr_scales": []}
+
+    def fake(state, volumes, n_steps, *, key, lr_scale=1.0):
+        i, rec["calls"] = rec["calls"], rec["calls"] + 1
+        rec["lr_scales"].append(float(lr_scale))
+        s2, trace = real(state, volumes, n_steps, key=key, lr_scale=lr_scale)
+        finite = np.ones(trainer.P, bool)
+        if i < fail_calls:
+            finite[part] = False
+        return DVNRState(s2.params, s2.opt, s2.loss_ma, s2.active, s2.step,
+                         jnp.asarray(finite)), trace
+
+    trainer.train_chunk = fake
+    return rec
+
+
+def _fresh(trainer, seed=0):
+    return trainer.init(jax.random.PRNGKey(seed))
+
+
+def test_ladder_recovers_on_reseed_rung():
+    tr = DVNRTrainer(CFG, 2, impl="ref")
+    rec = _make_flaky(tr, fail_calls=1)
+    vols = jnp.stack([p.normalized() for p in _parts()])
+    state, info = train_with_recovery(tr, _fresh(tr), vols, steps=4,
+                                      key=jax.random.PRNGKey(2))
+    r = info["recovery"]
+    assert r["retries"] == 1
+    assert r["recovered_partitions"] == (1,)
+    assert r["frozen_partitions"] == ()
+    assert r["events"][0]["tripped"] == (1,)
+    assert r["events"][0]["attempts"] == 1
+    assert rec["lr_scales"] == [1.0, 1.0]            # rung 1: reseed only
+    assert bool(np.asarray(state.finite).all())
+
+
+def test_ladder_escalates_to_lr_backoff_then_freezes():
+    tr = DVNRTrainer(CFG, 2, impl="ref")
+    rec = _make_flaky(tr, fail_calls=3)              # initial + 2 retries fail
+    vols = jnp.stack([p.normalized() for p in _parts()])
+    pre = _fresh(tr)
+    pre_p1 = [np.array(leaf[1]) for leaf in jax.tree.leaves(pre.params)]
+    state, info = train_with_recovery(
+        tr, pre, vols, steps=4, key=jax.random.PRNGKey(2),
+        policy=RecoveryPolicy(max_retries=3, lr_backoff=0.5))
+    r = info["recovery"]
+    assert r["retries"] == 3
+    assert r["recovered_partitions"] == (1,)
+    # rungs: attempt1 reseed (lr 1.0), attempt2 moment reset (lr 1.0),
+    # attempt3 lr-backoff (lr 0.5)
+    assert rec["lr_scales"] == [1.0, 1.0, 1.0, 0.5]
+
+    # exhaust the ladder -> frozen at the pre-chunk params, masked inactive
+    tr2 = DVNRTrainer(CFG, 2, impl="ref")
+    _make_flaky(tr2, fail_calls=10**9)
+    pre2 = _fresh(tr2)
+    state2, info2 = train_with_recovery(
+        tr2, pre2, vols, steps=4, key=jax.random.PRNGKey(2),
+        policy=RecoveryPolicy(max_retries=2))
+    r2 = info2["recovery"]
+    assert r2["frozen_partitions"] == (1,)
+    assert r2["recovered_partitions"] == ()
+    assert r2["events"][0]["frozen"] == (1,)
+    assert not bool(np.asarray(state2.active)[1])
+    assert bool(np.asarray(state2.finite).all())     # frozen == repaired
+    for got, want in zip(jax.tree.leaves(state2.params), pre_p1):
+        np.testing.assert_array_equal(np.asarray(got[1]), want)
+
+
+def test_ladder_raises_when_freezing_disabled():
+    tr = DVNRTrainer(CFG, 2, impl="ref")
+    _make_flaky(tr, fail_calls=10**9)
+    vols = jnp.stack([p.normalized() for p in _parts()])
+    with pytest.raises(NonFiniteTrainingError, match="stayed non-finite"):
+        train_with_recovery(
+            tr, _fresh(tr), vols, steps=4, key=jax.random.PRNGKey(2),
+            policy=RecoveryPolicy(max_retries=1, freeze_on_failure=False))
+
+
+# --------------------------------------------------------------------------- #
+# End-to-end: api.train(recovery=) under real NaN poisoning
+# --------------------------------------------------------------------------- #
+
+def test_recovery_ends_finite_and_healthy_partition_is_bit_exact():
+    """Acceptance: a NaN-injected run under RecoveryPolicy ends with finite
+    params, and the unaffected partition's f32 params are BIT-EXACT vs a
+    clean run — zero-communication independence means a neighbor's fault
+    cannot perturb a healthy trajectory. Runs on the pinned CI backend
+    (``backend="auto"``: ref and interpret-pallas legs)."""
+    parts = _parts()
+    key = jax.random.PRNGKey(3)
+    clean_model, _ = api.train(parts, CFG, backend="auto", key=key)
+
+    poisoned = [parts[0], _all_nan(parts[1])]        # unrecoverable by design
+    model, info = api.train(poisoned, CFG, backend="auto", key=key,
+                            recovery=RecoveryPolicy(max_retries=2))
+    r = info["recovery"]
+    assert r["retries"] >= 1
+    assert r["frozen_partitions"] == (1,)
+    for leaf in jax.tree.leaves(model.params):
+        assert np.isfinite(np.asarray(leaf, np.float32)).all()
+    for got, want in zip(jax.tree.leaves(model.params),
+                         jax.tree.leaves(clean_model.params)):
+        np.testing.assert_array_equal(np.asarray(got[0], np.float32),
+                                      np.asarray(want[0], np.float32))
+
+
+def test_recovery_noop_on_clean_run_matches_plain_train():
+    """The recovery driver is a byte-identical no-op when nothing trips."""
+    parts = _parts()
+    key = jax.random.PRNGKey(4)
+    plain, _ = api.train(parts, CFG, backend="auto", key=key)
+    guarded, info = api.train(parts, CFG, backend="auto", key=key,
+                              recovery=RecoveryPolicy())
+    assert info["recovery"]["retries"] == 0
+    assert info["recovery"]["events"] == []
+    for a, b in zip(jax.tree.leaves(plain.params),
+                    jax.tree.leaves(guarded.params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# --------------------------------------------------------------------------- #
+# In situ session: the acceptance scenario
+# --------------------------------------------------------------------------- #
+
+def _acceptance_health():
+    plan = FaultPlan(11, [
+        FaultSpec("nan_field", cycle=3, partition=1, magnitude=1.0),
+        FaultSpec("drop_partition", cycle=7, partition=0),
+        FaultSpec("corrupt_blob", cycle=11, partition=0, magnitude=0.02),
+        FaultSpec("slow_tick", cycle=15, latency_s=9.0),
+        FaultSpec("kernel_exception", cycle=18),
+    ])
+    sess = InSituSession(SIM, CFG, impl="auto", window=4,
+                         fault_plan=plan, deadline_s=1.0,
+                         deadline_clock="injected",
+                         recovery=RecoveryPolicy(max_retries=1))
+    records = sess.run(20)
+    assert len(records) == 20
+    return sess.health()
+
+
+def test_acceptance_session_survives_every_fault_and_is_deterministic():
+    h = _acceptance_health()
+    assert h["cycles"] == 20
+    # each fault surfaced exactly where it was injected:
+    assert h["retry_cycles"] == (3,)                 # NaN field -> retry ladder
+    assert dict(h["degraded"]) == {3: (1,), 7: (0,)}
+    assert h["blob_repair_cycles"] == (11,)
+    assert h["blob_repairs"] == 1
+    assert h["deadline_missed"] == (15,)
+    assert h["fallbacks"] == (15, 18)                # slow tick + kernel fault
+    assert h["trained"] == 18                        # 20 - the two fallbacks
+    # bit-identical across a full re-run of the same seeded plan
+    assert _acceptance_health() == h
+
+
+def test_kernel_fault_on_first_tick_raises_without_fallback():
+    plan = FaultPlan(0, [FaultSpec("kernel_exception", cycle=1)])
+    sess = InSituSession(SIM, CFG, impl="auto", window=2, fault_plan=plan)
+    with pytest.raises(InjectedKernelFault):
+        sess.run(1)
+
+
+def test_fault_free_resilient_session_reports_clean_health():
+    sess = InSituSession(SIM, CFG, impl="auto", window=2,
+                         recovery=RecoveryPolicy(), deadline_s=60.0)
+    sess.run(2)
+    h = sess.health()
+    assert h["cycles"] == 2 and h["trained"] == 2
+    assert h["retries"] == 0 and h["degraded"] == {}
+    assert h["deadline_missed"] == () and h["fallbacks"] == ()
+
+
+# --------------------------------------------------------------------------- #
+# Static checks on the degraded-partition training program
+# --------------------------------------------------------------------------- #
+
+def test_degraded_chunk_program_is_zero_comm_and_rng_clean():
+    from repro.analysis.programs import build_trainer, trainer_programs
+
+    trainer = build_trainer(CFG, backend="auto", n_partitions=2,
+                            local_shape=(8, 8, 8))
+    pairs = [(p, c) for p, c in trainer_programs(trainer)
+             if "degraded" in p.name]
+    assert len(pairs) == 1                           # the program is wired in
+    prog, ctx = pairs[0]
+    rep = run_checks(prog, ctx, checks=["zero_collectives",
+                                        "rng_gather_placement", "donation"])
+    assert rep.passed, rep.render()

@@ -59,6 +59,51 @@ def test_raw_blobs_window_params_and_mixed_window():
     assert cache.total_bytes > 0
 
 
+def test_corrupt_blob_falls_back_to_previous_clean_entry():
+    """CRC-framed blobs: a corrupted entry must raise BlobIntegrityError at
+    decode (never garbage params), and get()/window_params() fall back to the
+    nearest clean neighbor."""
+    from repro.compress.codec_util import BlobIntegrityError
+
+    cache = TemporalModelCache(CFG, window=3)
+    p0, p1, p2 = _stacked(key=0), _stacked(key=1), _stacked(key=2)
+    cache.append(0, p0)
+    cache.append(1, p1)
+    cache.append(2, p2)
+    ref1 = cache.get(1, 0)
+
+    blob = cache._entries[2].blobs[0]
+    cache._entries[2].blobs[0] = blob[:5] + bytes([blob[5] ^ 0xFF]) + blob[6:]
+
+    dec = cache.get(2, 0)                # falls back to timestep 1's model
+    np.testing.assert_array_equal(np.asarray(dec["tables"]),
+                                  np.asarray(ref1["tables"]))
+    assert cache.get(2, 1)["tables"].shape == ref1["tables"].shape  # clean col
+
+    window = cache.window_params(partition=0)
+    assert len(window) == 3              # trace length always matches window
+    np.testing.assert_array_equal(np.asarray(window[2]["tables"]),
+                                  np.asarray(window[1]["tables"]))
+
+    # every entry corrupt -> no fallback exists, loud failure
+    for e in cache._entries:
+        b = e.blobs[0]
+        e.blobs[0] = b[:7] + bytes([b[7] ^ 0xAA]) + b[8:]  # body byte flip
+    with pytest.raises(BlobIntegrityError):
+        cache.window_params(partition=0)
+
+
+def test_corrupt_oldest_entry_falls_forward_in_window():
+    cache = TemporalModelCache(CFG, window=2)
+    cache.append(0, _stacked(key=0))
+    cache.append(1, _stacked(key=1))
+    blob = cache._entries[0].blobs[1]
+    cache._entries[0].blobs[1] = blob[:9] + bytes([blob[9] ^ 0x55]) + blob[10:]
+    window = cache.window_params(partition=1)
+    np.testing.assert_array_equal(np.asarray(window[0]["tables"]),
+                                  np.asarray(window[1]["tables"]))
+
+
 def test_raw_roundtrip_preserves_bf16_param_dtype():
     params = jax.tree.map(lambda t: t.astype(jnp.bfloat16), _stacked())
     cache = TemporalModelCache(CFG, window=2)
