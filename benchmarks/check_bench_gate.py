@@ -1,0 +1,97 @@
+"""Perf-trend gate: compare a fresh BENCH_<name>.json trend record against
+the committed baseline (the copy at HEAD) and fail on large regressions.
+
+  PYTHONPATH=src python -m benchmarks.check_bench_gate            # all TREND
+  PYTHONPATH=src python -m benchmarks.check_bench_gate --only train_loop
+  PYTHONPATH=src python -m benchmarks.check_bench_gate --threshold 0.25
+
+Workflow (CI ref leg): ``benchmarks.run --quick`` rewrites the repo-root
+``BENCH_*.json`` files in the working tree; this script then diffs them
+against ``git show HEAD:BENCH_<name>.json``. Only *ratio* metrics are gated —
+paired-median ratios cancel machine-load drift, so they are comparable
+across runners, while absolute steps/s are not (those are recorded for the
+trend but never gated). A missing baseline (first record, or a bench newly
+added to TREND) warns and passes so the bootstrap commit can land.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
+# bench name -> ratio metrics gated against the committed baseline. These are
+# paired-median ratios (machine-drift-cancelling); see bench_train_loop.py.
+GATED = {
+    "train_loop": ("fused_vs_unfused", "sampling_vs_host"),
+}
+
+
+def _baseline(name: str) -> dict | None:
+    """The committed record at HEAD, or None if it has never been committed."""
+    try:
+        out = subprocess.run(
+            ["git", "show", f"HEAD:BENCH_{name}.json"], cwd=REPO_ROOT,
+            capture_output=True, text=True, check=True).stdout
+        return json.loads(out)
+    except (subprocess.CalledProcessError, json.JSONDecodeError, OSError):
+        return None
+
+
+def check(name: str, threshold: float) -> list[str]:
+    """Gate one bench. Returns a list of failure strings (empty = pass)."""
+    fresh_path = REPO_ROOT / f"BENCH_{name}.json"
+    if not fresh_path.exists():
+        return [f"{name}: fresh record {fresh_path.name} missing "
+                f"(run `python -m benchmarks.run --quick --only {name}`)"]
+    fresh = json.loads(fresh_path.read_text())
+    base = _baseline(name)
+    if base is None:
+        print(f"[bench-gate] {name}: no committed baseline at HEAD — "
+              f"skipping (bootstrap record)")
+        return []
+    fails = []
+    for key in GATED[name]:
+        f, b = fresh["metrics"].get(key), base["metrics"].get(key)
+        if f is None or b is None or b <= 0:
+            print(f"[bench-gate] {name}/{key}: incomparable "
+                  f"(fresh={f} baseline={b}) — skipping")
+            continue
+        floor = b * (1.0 - threshold)
+        verdict = "FAIL" if f < floor else "ok"
+        print(f"[bench-gate] {name}/{key}: fresh {f:.3f} vs baseline "
+              f"{b:.3f} (floor {floor:.3f}) {verdict}")
+        if f < floor:
+            fails.append(f"{name}/{key}: {f:.3f} < {floor:.3f} "
+                         f"(baseline {b:.3f}, threshold {threshold:.0%})")
+    return fails
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated bench names (default: all gated)")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional regression (default 0.25)")
+    args = ap.parse_args(argv)
+
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or \
+        list(GATED)
+    unknown = [n for n in names if n not in GATED]
+    if unknown:
+        print(f"[bench-gate] unknown bench(es): {unknown}; "
+              f"gated: {list(GATED)}")
+        return 2
+    fails = [f for n in names for f in check(n, args.threshold)]
+    if fails:
+        print("[bench-gate] REGRESSION:\n  " + "\n  ".join(fails))
+        return 1
+    print(f"[bench-gate] {len(names)} bench(es) within "
+          f"{args.threshold:.0%} of committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,14 +3,25 @@
   PYTHONPATH=src python -m benchmarks.run             # full suite
   PYTHONPATH=src python -m benchmarks.run --quick     # CI-sized
   PYTHONPATH=src python -m benchmarks.run --only compressors,kernels
+
+Benches named in ``TREND`` additionally emit a small normalized record to
+``BENCH_<name>.json`` at the repo root. Unlike results/bench/*.json (full
+raw payloads, gitignored), these records are COMMITTED — each one is the
+perf baseline ``benchmarks/check_bench_gate.py`` compares a fresh run
+against in CI, so the trend survives across PRs without external storage.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
 import json
+import os
+import subprocess
 import time
 import traceback
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
 
 # name -> (module, paper artifact)
 SUITE = {
@@ -31,6 +42,49 @@ SUITE = {
     "roofline": ("benchmarks.roofline", "EXPERIMENTS.md §Roofline"),
 }
 
+# benches whose run() return value feeds a committed BENCH_<name>.json trend
+# record: bench name -> list of (metric key in the record, extractor over the
+# raw run() payload). Extractors must only touch stable schema keys.
+TREND = {
+    "train_loop": [
+        ("chunk_max_speedup_vs_loop", lambda out: out["max_speedup"]),
+        ("bf16_vs_f32", lambda out: out["precision"]["bf16_vs_f32"]),
+        ("fused_vs_unfused", lambda out: out["fused"]["fused_vs_unfused"]),
+        ("sampling_vs_host", lambda out: out["sampling"]["sampling_vs_host"]),
+        ("pallas_interpret_steps_per_s",
+         lambda out: out["sampling"]["pallas_interpret_steps_per_s"]),
+    ],
+}
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(["git", "rev-parse", "HEAD"], cwd=REPO_ROOT,
+                              capture_output=True, text=True,
+                              check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def emit_trend_record(name: str, out: dict, quick: bool) -> Path | None:
+    """Normalize one bench payload into BENCH_<name>.json at the repo root."""
+    if name not in TREND or not isinstance(out, dict):
+        return None
+    metrics = {}
+    for key, pick in TREND[name]:
+        try:
+            metrics[key] = float(pick(out))
+        except Exception:
+            metrics[key] = None          # schema drift: record the hole
+    rec = {"bench": name, "schema": 1, "git_sha": _git_sha(),
+           "quick": bool(quick),
+           "backend": os.environ.get("REPRO_BACKEND", "ref"),
+           "config": out.get("config", {}), "metrics": metrics}
+    p = REPO_ROOT / f"BENCH_{name}.json"
+    p.write_text(json.dumps(rec, indent=1, default=float) + "\n")
+    print(f"[{name}] trend record -> {p.name}")
+    return p
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
@@ -46,7 +100,8 @@ def main(argv=None) -> int:
         t0 = time.time()
         try:
             mod = importlib.import_module(mod_name)
-            mod.run(quick=args.quick)
+            out = mod.run(quick=args.quick)
+            emit_trend_record(name, out, args.quick)
             print(f"----- {name} ok in {time.time()-t0:.1f}s")
         except Exception:
             traceback.print_exc()

@@ -76,6 +76,13 @@ class KernelFootprint:
     def total_bytes(self) -> int:
         return sum(b.charged_bytes for b in self.buffers)
 
+    def fits(self, limit_bytes: Optional[int]) -> bool:
+        """Does this kernel fit a VMEM budget? (``None`` = unbounded.) The
+        assertion form of :func:`over_budget`, for tests and capability
+        probes — e.g. the 256^3 brick-tiled sampling footprint vs the 16 MiB
+        TPU envelope."""
+        return limit_bytes is None or self.total_bytes <= limit_bytes
+
     def breakdown(self) -> str:
         lines = [f"pallas_call {self.kernel} grid={self.grid}: "
                  f"{_fmt_bytes(self.total_bytes)} VMEM"]

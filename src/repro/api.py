@@ -300,6 +300,7 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
           precision=None,
           fuse_train_step: Optional[str] = None,
           fuse_sampling: Optional[str] = None,
+          sampling_brick=None,
           recovery=None, train_mask=None) -> Tuple[DVNRModel, dict]:
     """Train one INR per partition (zero-communication) and return the model.
 
@@ -328,6 +329,11 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
     batch sampling (counter-based coordinate draws + trilinear target
     gather) happens inside that fused op too (in-kernel on pallas backends)
     instead of on the host — every mode draws bit-identical batches.
+    ``sampling_brick`` overrides ``cfg.sampling_brick`` (``"auto"`` /
+    ``"pinned"`` / an int cube edge): whether the in-kernel gather pins the
+    whole partition in VMEM or streams HBM-resident bricks through a
+    double-buffered VMEM block — both layouts are bit-identical; ``"auto"``
+    tiles exactly when the partition cannot fit pinned.
 
     ``recovery`` (a :class:`repro.resilience.RecoveryPolicy`) routes training
     through the non-finite recovery driver — partitions tripping the
@@ -359,6 +365,16 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
                 f"fuse_sampling={fuse_sampling!r} conflicts with the "
                 f"pre-built trainer's {trainer.cfg.fuse_sampling!r}; build "
                 f"the trainer with the desired cfg.fuse_sampling instead")
+    if sampling_brick is not None:
+        cfg = cfg.replace(sampling_brick=sampling_brick)
+        # the brick feeds the trainer's traced step directly — a pre-built
+        # trainer has already committed to its cfg's layout
+        if trainer is not None and \
+                trainer.cfg.sampling_brick != sampling_brick:
+            raise ValueError(
+                f"sampling_brick={sampling_brick!r} conflicts with the "
+                f"pre-built trainer's {trainer.cfg.sampling_brick!r}; build "
+                f"the trainer with the desired cfg.sampling_brick instead")
     if precision is not None:
         cfg = cfg.replace(precision=resolve_precision(precision).name)
         if trainer is not None and trainer.precision != resolve_precision(precision):

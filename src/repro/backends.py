@@ -34,8 +34,13 @@ from repro.precision import SUPPORTED_DTYPES
 # implement it as the ref composition, pallas backends as one kernel.
 # "fused_sampling" extends it with the in-op batch sampling stage (counter-
 # based coords + trilinear target gather) — in-kernel on pallas backends.
+# "tiled_sampling" means the in-op sampling stage can keep the volume in HBM
+# and stream bricks through on-chip memory (the sampling_brick knob): on
+# pallas backends the brick-tiled kernel, on jnp backends trivially true
+# (their gather is HBM-resident already). Without it, fused_sampling is
+# limited to volumes that fit vmem_limit_bytes pinned.
 OPS = ("hash_encoding", "fused_mlp", "composite", "flash_attention",
-       "fused_train_step", "fused_sampling")
+       "fused_train_step", "fused_sampling", "tiled_sampling")
 
 
 @dataclass(frozen=True)
@@ -102,6 +107,22 @@ class Backend:
         ``DVNRConfig.fuse_sampling="auto"`` enables it exactly when both are
         non-empty."""
         if not self.supports("fused_sampling"):
+            return ""
+        if self.is_pallas:
+            return "pallas-interpret" if self.interpret else "pallas"
+        return "ref"
+
+    @property
+    def tiled_sampling(self) -> str:
+        """Which volume-tiled in-op sampling implementation this backend can
+        run when the partition exceeds :attr:`vmem_limit_bytes`: ``""``
+        (none — only VMEM-pinned volumes work), ``"ref"`` (jnp gathers are
+        HBM-resident already), ``"pallas-interpret"`` or ``"pallas"`` (the
+        brick-tiled train-step kernel). Only meaningful when
+        :attr:`fused_sampling` is non-empty; ``sampling_brick="auto"``
+        falls back to the pinned layout when this is empty."""
+        if not (self.supports("tiled_sampling")
+                and self.supports("fused_sampling")):
             return ""
         if self.is_pallas:
             return "pallas-interpret" if self.interpret else "pallas"
@@ -226,7 +247,7 @@ register_backend(Backend(
     description="jnp with fused corner-gather hash encoding (training fast "
                 "path); ops without a fused variant fall back to ref",
     priority=5, capabilities=frozenset({"hash_encoding", "fused_train_step",
-                                        "fused_sampling"}),
+                                        "fused_sampling", "tiled_sampling"}),
 ))
 
 # the ~16 MiB/core VMEM envelope the kernel docstrings budget against; the

@@ -75,6 +75,20 @@ class DVNRConfig:
     # sampler is counter-based (repro.core.sampling).
     fuse_sampling: str = "auto"
 
+    # ----- in-op sampling volume layout (sampling_brick) -----
+    # Only meaningful when fuse_sampling resolves on and the backend is
+    # pallas. "auto" (default) keeps the whole ghost-padded partition pinned
+    # in VMEM when it fits the backend's vmem_limit_bytes (the PR 5 layout,
+    # bit-for-bit) and otherwise streams the HBM-resident volume through
+    # VMEM one brick at a time (largest cube brick that fits the budget —
+    # what production 256^3 partitions use). An int > 0 forces the tiled
+    # kernel with that cube edge; 0 / "pinned" forces the pinned kernel
+    # (the negative control: over-budget volumes are rejected at build
+    # time). All layouts produce bit-identical training trajectories.
+    # Kept as str-or-int for msgpack/jit-static hashing, like the knobs
+    # above.
+    sampling_brick: object = "auto"
+
     # ----- non-finite training guard (repro.resilience) -----
     # True folds a cheap per-partition isfinite reduction into the scan-fused
     # train chunk (per-step loss check in the scan carry + a per-leaf params
@@ -168,6 +182,16 @@ PRODUCTION = DVNRConfig(
     per_level_scale=2.0, n_neurons=16, n_hidden_layers=2, epochs=14,
     batch_size=65_536,
 )
+
+# The strong-scaled production rank: one 256^3 local partition of a 512^3
+# global volume under the III-B adaptive rule
+# (T = max(T_min, T_ref * Nvox/Nvox_global), R0 = floor(R_ref * cbrt(T/T_ref)))
+# applied to PRODUCTION's T_ref = 2^16, R_ref = 8 at an 8-rank split:
+# T = 2^13, R0 = 4. This is the per-partition table the fused-train-step
+# kernel budgets VMEM against (its state groups stay ~4 MiB, leaving room
+# for the brick-tiled sampling stage at 256^3); giant-T offline tables need
+# the still-open table-sharded grid axis instead.
+PRODUCTION256 = PRODUCTION.replace(log2_hashmap_size=13, base_resolution=4)
 
 # Reduced config for CPU smoke tests.
 SMOKE = DVNRConfig(

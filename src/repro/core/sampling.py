@@ -120,6 +120,65 @@ def counter_coords(k0, k1, rows, n_uniform: int, sigma: float):
     return u3 * (1.0 - is_b) + boundary * is_b
 
 
+def gather_trilinear_bricked(vol, coords, ghost: int, brick):
+    """Host-side oracle of the brick-TILED in-kernel gather
+    (:func:`repro.kernels.fused_train_step.kernel.fused_train_step_sampling_tiled_pallas`).
+
+    Visits the ghost-padded volume one ``brick`` = (bx, by, bz) block at a
+    time (a python loop standing in for the kernel's brick grid axis), banks
+    the raw values of the 8 trilinear corners OWNED by each brick
+    (``corner_voxel // brick == brick_index`` per axis — owner bricks
+    partition the corner voxels, so each (corner, sample) slot is written
+    exactly once), then combines the banked values in the canonical
+    (dx, dy, dz) corner order with the cell-center weights of
+    :func:`repro.data.volume.sample_trilinear`. Bit-exact vs the in-kernel
+    pinned/tiled gathers (same expressions, same summation order); equal to
+    ``sample_trilinear`` up to floating-point summation order.
+
+    ``vol``: (nx, ny, nz[, C]) ghost-padded partition; ``coords``: (N, 3)
+    f32 in [0, 1]^3 over the owned region. Returns (N, C) f32.
+    """
+    vol = vol if vol.ndim == 4 else vol[..., None]
+    nx, ny, nz, C = vol.shape
+    bx, by, bz = (min(int(b), int(n)) for b, n in zip(brick, (nx, ny, nz)))
+    los, ws = [], []
+    for ax, n in enumerate((nx, ny, nz)):
+        owned = jnp.float32(n - 2 * ghost)
+        pos = coords[:, ax].astype(jnp.float32) * owned - 0.5 \
+            + jnp.float32(ghost)
+        lo = jnp.clip(jnp.floor(pos), 0.0, jnp.float32(n - 2))
+        los.append(lo.astype(jnp.int32))
+        ws.append(jnp.clip(pos - lo, 0.0, 1.0))
+    n_samples = coords.shape[0]
+    corners = [jnp.zeros((n_samples, C), jnp.float32) for _ in range(8)]
+    offsets = [(dx, dy, dz) for dx in (0, 1) for dy in (0, 1)
+               for dz in (0, 1)]
+    for bxi in range(-(-nx // bx)):
+        for byi in range(-(-ny // by)):
+            for bzi in range(-(-nz // bz)):
+                sub = vol[bxi * bx:(bxi + 1) * bx, byi * by:(byi + 1) * by,
+                          bzi * bz:(bzi + 1) * bz]
+                sx, sy, sz = sub.shape[:3]
+                flat = sub.reshape(sx * sy * sz, C).astype(jnp.float32)
+                for k, (dx, dy, dz) in enumerate(offsets):
+                    cx, cy, cz = los[0] + dx, los[1] + dy, los[2] + dz
+                    own = ((cx // bx == bxi) & (cy // by == byi)
+                           & (cz // bz == bzi))
+                    rx = jnp.clip(cx - bxi * bx, 0, sx - 1)
+                    ry = jnp.clip(cy - byi * by, 0, sy - 1)
+                    rz = jnp.clip(cz - bzi * bz, 0, sz - 1)
+                    vals = jnp.take(flat, (rx * sy + ry) * sz + rz, axis=0)
+                    corners[k] = jnp.where(own[:, None], vals, corners[k])
+    acc = None
+    for k, (dx, dy, dz) in enumerate(offsets):
+        ww = (ws[0] if dx else 1.0 - ws[0]) \
+            * (ws[1] if dy else 1.0 - ws[1]) \
+            * (ws[2] if dz else 1.0 - ws[2])
+        term = ww[:, None] * corners[k]
+        acc = term if acc is None else acc + term
+    return acc
+
+
 def training_coords_counter(seed, n_batch: int, boundary_lambda: float,
                             sigma: float):
     """Counter-based batch: (2,) uint32 seed words -> (N, 3) coords.

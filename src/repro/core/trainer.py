@@ -34,7 +34,11 @@ model parallelism, adaptive parameters, boundary loss, convergence masking.
   are ``step_seeds(key, step, p)`` and the draws are a pure function of
   ``(seed, sample row)``, so unfused, fused and fused-with-sampling trainers
   see bit-identical batches for the same ``(key, step, partition)``
-  (tests/test_fused_sampling.py).
+  (tests/test_fused_sampling.py). ``DVNRConfig.sampling_brick`` picks the
+  kernel's volume layout on pallas backends: VMEM-pinned when the partition
+  fits the budget, HBM-resident with bricks streamed through a
+  double-buffered VMEM block otherwise (production 256^3 partitions) — the
+  trainer rejects at build time only configs neither layout can fit.
 """
 from __future__ import annotations
 
@@ -143,8 +147,17 @@ class DVNRTrainer:
         self.adam = AdamW(_opt_config(cfg, self.precision))
         self.fuse_train_step = self._resolve_fuse(cfg.fuse_train_step)
         self.fuse_sampling = self._resolve_fuse_sampling(cfg.fuse_sampling)
+        if not isinstance(cfg.sampling_brick, (int, str)) \
+                or (isinstance(cfg.sampling_brick, str)
+                    and cfg.sampling_brick not in ("auto", "pinned")) \
+                or (isinstance(cfg.sampling_brick, int)
+                    and cfg.sampling_brick < 0):
+            raise ValueError("sampling_brick must be 'auto', 'pinned' or an "
+                             f"int brick edge, got {cfg.sampling_brick!r}")
         if (self.fuse_sampling and self.backend.is_pallas
                 and self.volume_shape is not None):
+            # resolves pinned-vs-brick-tiled and rejects configs whose
+            # resolved sampling layout cannot fit the VMEM budget
             from repro.kernels.fused_train_step.ops import ensure_sampling_fits
             ensure_sampling_fits(self.volume_shape, self.backend, cfg=cfg,
                                  param_dtype=self.precision.param_dtype,
@@ -283,7 +296,8 @@ class DVNRTrainer:
                     boundary_lambda=cfg.boundary_lambda,
                     sigma=cfg.boundary_sigma, ghost=ghost,
                     resolutions=resolutions, opt_cfg=opt_cfg, impl=backend,
-                    compute_dtype=compute_dtype)
+                    compute_dtype=compute_dtype,
+                    sampling_brick=cfg.sampling_brick)
                 loss_ma, active = mask_convergence(loss, loss_ma, active)
                 return params, opt, loss, loss_ma, active
         elif self.fuse_train_step:

@@ -15,7 +15,10 @@ sampling in too — the whole scan body is one op).
   bit-identical to the unfused trainer step and the parity oracle for the
   Pallas kernels.
 - ``kernel.fused_train_step_pallas`` / ``kernel.fused_train_step_sampling_pallas``
-  — single Pallas kernels (interpret mode on CPU, compiled on TPU).
+  / ``kernel.fused_train_step_sampling_tiled_pallas`` — single Pallas kernels
+  (interpret mode on CPU, compiled on TPU); the ``_tiled`` variant keeps the
+  volume in HBM and streams bricks through VMEM (``DVNRConfig.sampling_brick``
+  picks pinned vs tiled, ``ops.resolve_sampling_brick`` sizes the brick).
 """
 from repro.kernels.fused_train_step.ops import (fused_train_step,
                                                 fused_train_step_sampling)

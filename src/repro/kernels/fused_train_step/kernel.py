@@ -34,13 +34,19 @@ which the scan-fused chunk advances on device; the sampling variant prefetches
 the (P, 2) uint32 per-(step, partition) seed words next to them.
 
 VMEM budget: params + m + v (+ master) + f32 grad scratch ~= 5 f32 copies of
-the per-partition model, plus (sampling variant) the ghost-padded local
-volume; the III-B adaptive rule keeps per-partition T at 2^11..2^13 under
-strong scaling (<= ~2 MB at F=4), well inside the ~16 MB VMEM envelope.
-Giant-table offline configs (T=2^16+) need a table-sharded grid axis, and
-256^3 local partitions need a volume-tiled gather — TPU-hardware follow-ups,
-not reachable from the in situ smoke path. Validated in interpret mode on CPU
-(the CI backend matrix runs it on every push).
+the per-partition model, plus the sampling stage's volume traffic; the III-B
+adaptive rule keeps per-partition T at 2^11..2^13 under strong scaling
+(<= ~2 MB at F=4), well inside the ~16 MB VMEM envelope. The sampling stage
+has two layouts: the PINNED kernel holds the whole ghost-padded volume in
+VMEM (smoke/in situ sizes), and the brick-TILED kernel
+(:func:`fused_train_step_sampling_tiled_pallas`) keeps the volume in HBM and
+streams (bx, by, bz) bricks through a double-buffered VMEM block — banking
+each brick's trilinear corner values into scratch before the batch tiles run
+— which is what fits production 256^3 partitions. Dispatch between them is
+``ops.resolve_sampling_brick`` (the ``DVNRConfig.sampling_brick`` knob).
+Giant-table offline configs (T=2^16+) still need a table-sharded grid axis —
+a TPU-hardware follow-up. Validated in interpret mode on CPU (the CI backend
+matrix runs it on every push).
 """
 from __future__ import annotations
 
@@ -132,15 +138,18 @@ def _gather_trilinear(vol, coords, ghost: int):
 
 def _train_step_core(res_ref, sc_ref, coords, target, refs,
                      g_tab, g_win, g_whid, g_wout, loss_acc,
-                     *, n_hidden, n_valid, b1, b2, eps, wd, cdt, has_master):
+                     *, p, i, n_tiles, n_hidden, n_valid, b1, b2, eps, wd,
+                     cdt, has_master):
     """The shared per-tile body: forward, L1 cotangent, backward scatter and
     (on the last tile) the gated AdamW update. ``coords``/``target`` are the
     tile's (BN, 3)/(BN, D_out) f32 arrays — read from HBM-fed refs by the
-    plain kernel, derived in-VMEM by the sampling kernel. ``refs``: flat
-    input/output state refs, unpacked below (param/m/v[/mw] groups)."""
-    p = pl.program_id(0)
-    i = pl.program_id(1)
-    n_tiles = pl.num_programs(1)
+    plain kernel, derived in-VMEM by the sampling kernels. ``p``/``i``/
+    ``n_tiles`` are the partition id and batch-tile position: the grid axes
+    for the pinned kernels, ``s - n_bricks`` on the second axis for the
+    brick-tiled sampling kernel (whose grid interleaves brick-gather steps
+    before the batch tiles; program_id must be read OUTSIDE ``pl.when``
+    branches, hence the parameters). ``refs``: flat input/output state refs,
+    unpacked below (param/m/v[/mw] groups)."""
     (tab_ref, win_ref, whid_ref, wout_ref,
      m_tab_ref, m_win_ref, m_whid_ref, m_wout_ref,
      v_tab_ref, v_win_ref, v_whid_ref, v_wout_ref) = refs[:12]
@@ -326,6 +335,8 @@ def fused_train_step_pallas(coords, target, params, moments_m, moments_v,
     def kernel(res_ref, sc_ref, coords_ref, target_ref, *refs):
         _train_step_core(res_ref, sc_ref, coords_ref[0], target_ref[0],
                          refs[:-5], *refs[-5:],
+                         p=pl.program_id(0), i=pl.program_id(1),
+                         n_tiles=pl.num_programs(1),
                          n_hidden=n_hidden, n_valid=N, b1=beta1, b2=beta2,
                          eps=eps, wd=weight_decay, cdt=cdt,
                          has_master=has_master)
@@ -389,6 +400,7 @@ def fused_train_step_sampling_pallas(volumes, seeds, params, moments_m,
             target = target[:, None]
         _train_step_core(res_ref, sc_ref, coords, target, refs[:-5],
                          *refs[-5:],
+                         p=p, i=i, n_tiles=pl.num_programs(1),
                          n_hidden=n_hidden, n_valid=n_batch, b1=beta1,
                          b2=beta2, eps=eps, wd=weight_decay, cdt=cdt,
                          has_master=has_master)
@@ -399,6 +411,176 @@ def fused_train_step_sampling_pallas(volumes, seeds, params, moments_m,
             num_scalar_prefetch=3,
             grid=(P, n_tiles),
             in_specs=[_full_spec(volumes.shape[1:])] + state_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(resolutions.astype(jnp.int32), scalars.astype(jnp.float32),
+      seeds.astype(jnp.uint32), volumes, *operands)
+    return _unpack_outs(outs, has_master)
+
+
+def brick_counts(volume_shape, brick) -> tuple:
+    """Per-axis brick counts of a ghost-padded (nx, ny, nz[, C]) partition
+    under a (bx, by, bz) brick — ``ceil(n / b)`` per axis. The flat brick id
+    enumerates x-major, z fastest: ``b = (bx_i * nby + by_i) * nbz + bz_i``
+    (the same decomposition the tiled kernel's BlockSpec index map uses)."""
+    return tuple(-(-int(n) // int(b))
+                 for n, b in zip(volume_shape[:3], brick))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("brick", "n_batch", "n_uniform", "sigma",
+                              "ghost", "n_hidden", "compute_dtype", "beta1",
+                              "beta2", "eps", "weight_decay", "interpret"))
+def fused_train_step_sampling_tiled_pallas(volumes, seeds, params, moments_m,
+                                           moments_v, masters, scalars,
+                                           resolutions, *, brick,
+                                           n_batch: int, n_uniform: int,
+                                           sigma: float, ghost: int,
+                                           n_hidden: int, compute_dtype,
+                                           beta1: float, beta2: float,
+                                           eps: float, weight_decay: float,
+                                           interpret: bool = True):
+    """The sampling-included fused step with the volume TILED through VMEM.
+
+    Same contract (state layout, seeds, returns, bit-exact draws/targets) as
+    :func:`fused_train_step_sampling_pallas`, but the ghost-padded volume
+    stays in HBM and streams through VMEM one ``brick`` = (bx, by, bz) block
+    at a time — Pallas double-buffers the moving block, so the DMA of brick
+    ``s+1`` overlaps the gather over brick ``s``. The second grid axis is
+    phase-structured: ``n_bricks`` gather steps, then ``n_tiles`` batch
+    tiles, per partition.
+
+    - step ``s == 0`` additionally draws ALL ``n_batch`` coordinates with one
+      :func:`repro.core.sampling.counter_coords` call (rows are the same
+      global sample ids the pinned kernel uses per tile, so the draws are
+      bit-identical) into a (3, N) VMEM scratch;
+    - each gather step banks the raw values of the 8 trilinear corners whose
+      voxels land in the resident brick into an (8*C, N) scratch — owner
+      bricks partition the corner voxels, so every (corner, sample) slot is
+      written exactly once per partition sweep. This is the sort-free TPU
+      analogue of bucketing the draws by brick: instead of reordering
+      samples, each brick claims its corner fetches via owner masks
+      (select-on-mask, never multiply — out-of-range boundary bricks are
+      padded with uninitialized values);
+    - each batch tile re-derives the trilinear weights from the coordinate
+      scratch (the exact `_gather_trilinear` expressions over the full
+      static volume dims) and sums the banked corner values in the same
+      canonical (dx, dy, dz) order, so the assembled targets are bit-exact
+      vs the pinned kernel, then runs the unchanged fwd+bwd+AdamW core.
+
+    VMEM: state groups + one double-buffered brick + the two sampling
+    scratches — bounded by the brick size, not the partition size, which is
+    what lets production 256^3 partitions fit the ~16 MiB envelope.
+    """
+    has_master = masters is not None
+    if volumes.ndim == 4:                   # scalar field: add channel axis
+        volumes = volumes[..., None]
+    P = volumes.shape[0]
+    nx, ny, nz, C = volumes.shape[1:]
+    brick = tuple(min(int(b), int(n)) for b, n in zip(brick, (nx, ny, nz)))
+    bx, by, bz = brick
+    nbx, nby, nbz = brick_counts((nx, ny, nz), brick)
+    n_bricks = nbx * nby * nbz
+    n_batch_p = n_batch + (-n_batch) % BLOCK_N
+    n_tiles = n_batch_p // BLOCK_N
+    cdt = jnp.dtype(compute_dtype) if compute_dtype is not None \
+        else params["tab"].dtype
+    _, state_specs, out_specs, out_shape, operands, scratch = \
+        _state_layout(params, moments_m, moments_v, masters, P)
+    scratch = scratch + [pltpu.VMEM((3, n_batch_p), jnp.float32),
+                         pltpu.VMEM((8 * C, n_batch_p), jnp.float32)]
+
+    def vol_index(p, s, *_):
+        b = jnp.minimum(s, n_bricks - 1)    # batch tiles re-park on the last
+        return (p, b // (nby * nbz), (b // nbz) % nby, b % nbz, 0)
+
+    vol_spec = pl.BlockSpec((1, bx, by, bz, C), vol_index)
+
+    def corner_axes(coords_ax, ax_dim):
+        """Per-axis lo index + in-cell weight — the `_gather_trilinear`
+        expressions, evaluated from the coordinate scratch."""
+        owned = jnp.float32(ax_dim - 2 * ghost)
+        pos = coords_ax * owned - 0.5 + jnp.float32(ghost)
+        lo = jnp.clip(jnp.floor(pos), 0.0, jnp.float32(ax_dim - 2))
+        return lo.astype(jnp.int32), jnp.clip(pos - lo, 0.0, 1.0)
+
+    def kernel(res_ref, sc_ref, seed_ref, vol_ref, *refs):
+        p = pl.program_id(0)
+        s = pl.program_id(1)
+        coords_scr, corners_scr = refs[-2], refs[-1]
+
+        @pl.when(s == 0)
+        def _draw():
+            rows = jax.lax.broadcasted_iota(jnp.int32, (n_batch_p, 1), 0)
+            c = counter_coords(seed_ref[p, 0], seed_ref[p, 1], rows,
+                               n_uniform, sigma)
+            coords_scr[...] = c.T
+
+        @pl.when(s < n_bricks)
+        def _bank():
+            bxi = s // (nby * nbz)
+            byi = (s // nbz) % nby
+            bzi = s % nbz
+            los = [corner_axes(coords_scr[ax, :], n)[0]
+                   for ax, n in enumerate((nx, ny, nz))]
+            flat = vol_ref[0].reshape(bx * by * bz, C)
+            k = 0
+            for dx in (0, 1):
+                for dy in (0, 1):
+                    for dz in (0, 1):
+                        cx = los[0] + dx
+                        cy = los[1] + dy
+                        cz = los[2] + dz
+                        own = ((cx // bx == bxi) & (cy // by == byi)
+                               & (cz // bz == bzi))
+                        rx = jnp.clip(cx - bxi * bx, 0, bx - 1)
+                        ry = jnp.clip(cy - byi * by, 0, by - 1)
+                        rz = jnp.clip(cz - bzi * bz, 0, bz - 1)
+                        vals = jnp.take(flat, (rx * by + ry) * bz + rz,
+                                        axis=0)            # (N, C)
+                        for ch in range(C):
+                            corners_scr[k * C + ch, :] = jnp.where(
+                                own, vals[:, ch], corners_scr[k * C + ch, :])
+                        k += 1
+
+        @pl.when(s >= n_bricks)
+        def _train():
+            i = s - n_bricks
+            sl = pl.ds(i * BLOCK_N, BLOCK_N)
+            coords = jnp.stack([coords_scr[ax, sl] for ax in range(3)],
+                               axis=-1)                    # (BN, 3) f32
+            ws = [corner_axes(coords[:, ax], n)[1]
+                  for ax, n in enumerate((nx, ny, nz))]
+            acc = None
+            k = 0
+            for dx in (0, 1):
+                for dy in (0, 1):
+                    for dz in (0, 1):
+                        vals = jnp.stack(
+                            [corners_scr[k * C + ch, sl] for ch in range(C)],
+                            axis=-1)                       # (BN, C)
+                        ww = (ws[0] if dx else 1.0 - ws[0]) \
+                            * (ws[1] if dy else 1.0 - ws[1]) \
+                            * (ws[2] if dz else 1.0 - ws[2])
+                        term = ww[:, None] * vals
+                        acc = term if acc is None else acc + term
+                        k += 1
+            _train_step_core(res_ref, sc_ref, coords, acc, refs[:-7],
+                             *refs[-7:-2],
+                             p=p, i=i, n_tiles=n_tiles,
+                             n_hidden=n_hidden, n_valid=n_batch, b1=beta1,
+                             b2=beta2, eps=eps, wd=weight_decay, cdt=cdt,
+                             has_master=has_master)
+
+    outs = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=(P, n_bricks + n_tiles),
+            in_specs=[vol_spec] + state_specs,
             out_specs=out_specs,
             scratch_shapes=scratch,
         ),

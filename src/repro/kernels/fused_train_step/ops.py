@@ -18,6 +18,7 @@ scan body is ONE op and nothing batch-shaped touches HBM.
 """
 from __future__ import annotations
 
+import functools
 from typing import Sequence
 
 import jax.numpy as jnp
@@ -25,7 +26,8 @@ import jax.numpy as jnp
 from repro import backends
 from repro.kernels.fused_train_step import ref as _ref
 from repro.kernels.fused_train_step.kernel import (
-    _STATE_KEYS, fused_train_step_pallas, fused_train_step_sampling_pallas)
+    _STATE_KEYS, BLOCK_N, fused_train_step_pallas,
+    fused_train_step_sampling_pallas, fused_train_step_sampling_tiled_pallas)
 from repro.optim.adamw import AdamW, OptConfig
 
 
@@ -109,22 +111,39 @@ def _cfg_state_shapes(cfg) -> dict:
 
 
 def sampling_vmem_footprint(volume_shape, state_shapes, param_dtype,
-                            has_master: bool, *, P: int = 1, n_tiles: int = 1):
-    """Closed-form VMEM bill of ``fused_train_step_sampling_pallas`` — the
-    same buffer list ``kernel._state_layout`` would allocate, without tracing.
+                            has_master: bool, *, P: int = 1, n_tiles: int = 1,
+                            brick=None, n_batch: int = 0):
+    """Closed-form VMEM bill of the sampling-included fused step — the same
+    buffer list ``kernel._state_layout`` would allocate, without tracing.
 
     ``volume_shape``: ONE ghost-padded partition (nx, ny, nz[, C]).
+    ``brick=None`` bills the volume-PINNED kernel (whole partition resident);
+    ``brick=(bx, by, bz)`` bills the brick-TILED kernel: the volume buffer
+    becomes one double-buffered brick block, the grid gains the
+    ``n_bricks`` gather steps, and the (3, N) coordinate + (8*C, N) corner
+    scratches are added (``n_batch`` sizes them, rounded up to BLOCK_N).
     Mirrors the traced estimator's accounting (repro.analysis.vmem): every
-    partition-indexed block is double-buffered, scratch is charged once
-    (tests/test_analysis.py asserts closed-form == traced).
+    grid-varying block is double-buffered, scratch is charged once
+    (tests assert closed-form == traced for both layouts).
     """
     from repro.analysis import vmem as _vmem
+    from repro.kernels.fused_train_step.kernel import BLOCK_N, brick_counts
 
     vol_shape = tuple(int(d) for d in volume_shape)
     if len(vol_shape) == 3:
         vol_shape += (1,)                # trainer adds the channel axis
     keys = ("tab", "win", "whid", "wout")
-    bufs = [_vmem.VmemBuffer("in[0]:volume", "in", (1,) + vol_shape,
+    grid = (P, n_tiles)
+    if brick is None:
+        vol_block = (1,) + vol_shape
+    else:
+        brick = tuple(min(int(b), d) for b, d in zip(brick, vol_shape[:3]))
+        n_bricks = 1
+        for nb in brick_counts(vol_shape, brick):
+            n_bricks *= nb
+        grid = (P, n_bricks + n_tiles)
+        vol_block = (1,) + brick + (vol_shape[3],)
+    bufs = [_vmem.VmemBuffer("in[0]:volume", "in", vol_block,
                              "float32", pipelined=True)]
     groups = [("p", str(jnp.dtype(param_dtype))), ("m", "float32"),
               ("v", "float32")] + ([("mw", "float32")] if has_master else [])
@@ -151,44 +170,122 @@ def sampling_vmem_footprint(volume_shape, state_shapes, param_dtype,
                                      state_shapes[k], "float32"))
     bufs.append(_vmem.VmemBuffer("scratch[4]:loss", "scratch", (1, 1),
                                  "float32"))
-    return _vmem.KernelFootprint(kernel="fused_train_step_sampling",
-                                 grid=(P, n_tiles), buffers=bufs)
+    if brick is not None:
+        n_p = max(int(n_batch), 1)
+        n_p += (-n_p) % BLOCK_N
+        bufs.append(_vmem.VmemBuffer("scratch[5]:coords", "scratch",
+                                     (3, n_p), "float32"))
+        bufs.append(_vmem.VmemBuffer("scratch[6]:corners", "scratch",
+                                     (8 * vol_shape[3], n_p), "float32"))
+    name = ("fused_train_step_sampling" if brick is None
+            else "fused_train_step_sampling_tiled")
+    return _vmem.KernelFootprint(kernel=name, grid=grid, buffers=bufs)
+
+
+#: descending candidate brick edges tried by ``sampling_brick="auto"`` —
+#: multiples of the f32 TPU tile (8 sublanes) down to the smallest useful cube
+_AUTO_BRICK_EDGES = (128, 96, 64, 48, 32, 24, 16, 8)
+
+
+def resolve_sampling_brick(mode, volume_shape, backend, *, state_shapes,
+                           param_dtype="float32", has_master: bool = False,
+                           P: int = 1, n_batch: int = 0):
+    """``DVNRConfig.sampling_brick`` -> the concrete brick, or ``None``.
+
+    ``None`` means the volume-PINNED kernel; a (bx, by, bz) tuple means the
+    brick-TILED kernel. Modes:
+
+    - ``"auto"``: pinned when the whole partition fits the backend's VMEM
+      budget (so every smoke-size trainer keeps the PR 5 layout bit-for-bit),
+      otherwise the largest cube brick from :data:`_AUTO_BRICK_EDGES` whose
+      tiled footprint fits. Backends without a budget (jnp) or without the
+      ``tiled_sampling`` capability always resolve pinned.
+    - an ``int > 0``: force the tiled kernel with that cube edge;
+    - ``0`` / ``"pinned"``: force the pinned kernel (the negative control —
+      over-budget volumes are then rejected by :func:`ensure_sampling_fits`).
+    """
+    if isinstance(mode, str) and mode not in ("auto", "pinned"):
+        raise ValueError("sampling_brick must be 'auto', 'pinned' or an int "
+                         f"edge, got {mode!r}")
+    if mode == "pinned" or mode == 0:
+        return None
+    if isinstance(mode, int):
+        if mode < 0:
+            raise ValueError(f"sampling_brick edge must be >= 0, got {mode}")
+        return (mode,) * 3
+    limit = getattr(backend, "vmem_limit_bytes", None)
+    if limit is None or not backend.supports("tiled_sampling"):
+        return None
+    n_tiles = max(1, -(-max(int(n_batch), 1) // BLOCK_N))
+
+    def fits(brick):
+        return sampling_vmem_footprint(
+            volume_shape, state_shapes, param_dtype, has_master, P=P,
+            n_tiles=n_tiles, brick=brick, n_batch=n_batch,
+        ).total_bytes <= limit
+
+    pinned = sampling_vmem_footprint(volume_shape, state_shapes, param_dtype,
+                                     has_master, P=P, n_tiles=n_tiles)
+    if pinned.total_bytes <= limit:
+        return None
+    for edge in _AUTO_BRICK_EDGES:
+        if fits((edge,) * 3):
+            return (edge,) * 3
+    # nothing fits (state-dominated, e.g. giant-T tables) — report the
+    # smallest brick's bill so ensure_sampling_fits shows the best case
+    return (_AUTO_BRICK_EDGES[-1],) * 3
 
 
 def ensure_sampling_fits(volume_shape, backend, *, cfg=None,
                          state_shapes=None, param_dtype="float32",
                          has_master: bool = False, P: int = 1,
-                         n_batch: int = 0) -> None:
-    """Fail fast when the volume-pinned sampling kernel cannot fit VMEM.
+                         n_batch: int = 0, sampling_brick="auto"):
+    """Resolve the sampling layout and fail fast when it cannot fit VMEM.
 
-    Raises ``ValueError`` with the per-buffer breakdown when the closed-form
-    footprint exceeds ``backend.vmem_limit_bytes`` (e.g. a 256^3 local
-    partition is ~69 MiB of pinned volume against the ~16 MiB budget —
-    a config that only OOMs at Mosaic compile time on real TPUs otherwise).
-    Shapes come either from ``cfg`` (a DVNRConfig, trainer build time) or an
-    explicit ``state_shapes`` dict (dispatch time, from the real operands).
+    Resolves ``sampling_brick`` (see :func:`resolve_sampling_brick`) and
+    returns the concrete brick (``None`` = the volume-pinned kernel) so the
+    trainer's build-time guard and the dispatch below agree on the layout.
+    Raises ``ValueError`` with the per-buffer breakdown when the resolved
+    layout's closed-form footprint exceeds ``backend.vmem_limit_bytes``
+    (e.g. a 256^3 pinned volume is ~69 MiB against the ~16 MiB budget, and a
+    giant-T table is state-bound even tiled — configs that otherwise only
+    OOM at Mosaic compile time on real TPUs). Shapes come either from
+    ``cfg`` (a DVNRConfig, trainer build time) or an explicit
+    ``state_shapes`` dict (dispatch time, from the real operands).
     """
     from repro.analysis import vmem as _vmem
-    from repro.kernels.fused_train_step.kernel import BLOCK_N
 
     limit = getattr(backend, "vmem_limit_bytes", None)
-    if limit is None:
-        return
     if state_shapes is None:
         if cfg is None:
             raise TypeError("ensure_sampling_fits needs cfg or state_shapes")
         state_shapes = _cfg_state_shapes(cfg)
         if n_batch == 0:
             n_batch = cfg.batch_size
+        if sampling_brick == "auto":
+            sampling_brick = cfg.sampling_brick
+    brick = resolve_sampling_brick(sampling_brick, volume_shape, backend,
+                                   state_shapes=state_shapes,
+                                   param_dtype=param_dtype,
+                                   has_master=has_master, P=P,
+                                   n_batch=n_batch)
+    if limit is None:
+        return brick
     n_tiles = max(1, (n_batch + BLOCK_N - 1) // BLOCK_N)
     fp = sampling_vmem_footprint(volume_shape, state_shapes, param_dtype,
-                                 has_master, P=P, n_tiles=n_tiles)
+                                 has_master, P=P, n_tiles=n_tiles,
+                                 brick=brick, n_batch=n_batch)
     msg = _vmem.over_budget(fp, limit)
     if msg is not None:
+        hint = ("set fuse_sampling='off' (host-side sampling keeps the "
+                "volume in HBM) or shrink the local partition / hash table")
+        if brick is None and backend.supports("tiled_sampling"):
+            hint = ("set sampling_brick='auto' (stream the volume through "
+                    "VMEM brick by brick) or " + hint)
         raise ValueError(
             f"fused in-op sampling cannot run on backend {backend.name!r}: "
-            f"{msg}\nhint: set fuse_sampling='off' (host-side sampling keeps "
-            "the volume in HBM) or shrink the local partition / hash table")
+            f"{msg}\nhint: {hint}")
+    return brick
 
 
 def fused_train_step(params, opt, coords, target, gate, *,
@@ -236,7 +333,7 @@ def fused_train_step_sampling(params, opt, volumes, seeds, gate, *,
                               sigma: float, ghost: int,
                               resolutions: Sequence[int], opt_cfg: OptConfig,
                               impl: backends.BackendLike = "ref",
-                              compute_dtype=None):
+                              compute_dtype=None, sampling_brick="auto"):
     """One fused train step with the batch SAMPLING stage inside the op.
 
     Same state contract as :func:`fused_train_step`, but instead of
@@ -248,7 +345,11 @@ def fused_train_step_sampling(params, opt, volumes, seeds, gate, *,
     so all backends produce bit-identical draws) and trilinearly gathers its
     targets from its own volume; on pallas backends this happens inside the
     single train-step kernel, so no coordinates, targets or RNG keys ever
-    reach HBM.
+    reach HBM. ``sampling_brick`` picks the kernel's volume layout on pallas
+    backends (see :func:`resolve_sampling_brick`): pinned-in-VMEM when the
+    partition fits the budget, HBM-resident with bricks streamed through a
+    double-buffered VMEM block otherwise; both layouts produce bit-identical
+    results. jnp backends ignore it (their gather is HBM-resident already).
     """
     backend = backends.resolve(impl)
     if not backend.supports("fused_sampling"):
@@ -264,20 +365,25 @@ def fused_train_step_sampling(params, opt, volumes, seeds, gate, *,
     # ---- Pallas path: sampling + fwd + bwd + AdamW as one kernel ---------- #
     _check_pallas_opt(opt_cfg, backend, compute_dtype)
     flat_p, flat_m, flat_v, flat_mw, n_hidden = _pack_state(params, opt)
-    # fail fast (at trace time, with the per-buffer bill) when the volume-
-    # pinned kernel cannot fit the backend's VMEM budget — otherwise this
-    # only surfaces as a Mosaic OOM at compile time on real TPU hardware
-    ensure_sampling_fits(
+    # resolve pinned-vs-tiled and fail fast (at trace time, with the
+    # per-buffer bill) when even the resolved layout cannot fit the backend's
+    # VMEM budget — otherwise this only surfaces as a Mosaic OOM at compile
+    # time on real TPU hardware
+    brick = ensure_sampling_fits(
         volumes.shape[1:], backend,
         state_shapes={k: tuple(flat_p[k].shape[1:]) for k in _STATE_KEYS},
         param_dtype=flat_p["tab"].dtype, has_master=flat_mw is not None,
-        P=int(volumes.shape[0]), n_batch=int(n_batch))
+        P=int(volumes.shape[0]), n_batch=int(n_batch),
+        sampling_brick=sampling_brick)
     # deferred: repro.core.sampling pulls in repro.core (-> trainer), which
     # imports this module — a top-level import would be circular
     from repro.core.sampling import n_boundary
     step, scalars = _schedule_scalars(opt, opt_cfg, adam, gate)
 
-    new_p, new_m, new_v, new_mw, loss = fused_train_step_sampling_pallas(
+    sampling_kernel = fused_train_step_sampling_pallas if brick is None \
+        else functools.partial(fused_train_step_sampling_tiled_pallas,
+                               brick=tuple(brick))
+    new_p, new_m, new_v, new_mw, loss = sampling_kernel(
         volumes, jnp.asarray(seeds, jnp.uint32), flat_p, flat_m, flat_v,
         flat_mw, scalars, jnp.asarray(resolutions, jnp.int32),
         n_batch=int(n_batch),

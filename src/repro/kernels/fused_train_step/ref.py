@@ -58,7 +58,11 @@ def train_step_sampling_ref(params, opt, volumes, seeds, gate,
     ``seeds``), gather trilinear targets from the ghost-padded ``volumes``
     (P, nx+2g, ny+2g, nz+2g[, C]), then run :func:`train_step_ref`. This is
     exactly the unfused trainer step's sampling + loss/grad/Adam body, so
-    jnp/fused backends replay the unfused trajectory bit-for-bit.
+    jnp/fused backends replay the unfused trajectory bit-for-bit. The
+    ``sampling_brick`` knob never reaches this path: the draws and the
+    gather here are global (HBM-resident), which is precisely why this
+    composition anchors the parity tests for BOTH pallas volume layouts
+    (pinned and brick-tiled).
     """
 
     def sample(vol_p, seed_p):

@@ -1,0 +1,318 @@
+"""Volume-tiled in-kernel sampling (the ``sampling_brick`` knob and the
+brick-TILED fused-train-step kernel).
+
+The contract under test:
+- the brick-visiting owner-masked gather (host oracle
+  ``gather_trilinear_bricked``) equals ``sample_trilinear`` on every
+  coordinate class — interior, brick-boundary-straddling, ghost-band,
+  clamped out-of-range — and is bit-exact vs the in-kernel pinned gather
+  (same expressions, same canonical corner summation order);
+- the brick-tiled kernel is BIT-EXACT vs the volume-pinned kernel at smoke
+  sizes (the PR 5 parity chain extends unchanged: tiled == pinned == ref
+  composition == unfused trainer), in f32 and under the bf16 policy, with
+  bricks that divide the padded volume and bricks that leave remainders;
+- jnp/fused backends ignore the knob (their gather is HBM-resident);
+- the production256 partition (paper III-B: one 256^3 rank of the 512^3
+  strong-scaled run) FITS the 16 MiB VMEM budget brick-tiled while staying
+  over budget pinned — the acceptance gate CI runs via
+  ``repro.analysis --config production256``;
+- the closed-form tiled footprint equals the traced estimator bit-for-bit;
+- backends without the ``tiled_sampling`` capability resolve to the pinned
+  layout and keep the build-time rejection (no silent fallback).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.configs import dvnr as dvnr_cfg
+from repro.core import sampling as S
+from repro.core.trainer import DVNRState, DVNRTrainer
+from repro.data.volume import make_partition, sample_trilinear
+from repro.kernels.fused_train_step.kernel import (_gather_trilinear,
+                                                   brick_counts)
+from repro.kernels.fused_train_step.ops import (BLOCK_N, _cfg_state_shapes,
+                                                ensure_sampling_fits,
+                                                resolve_sampling_brick,
+                                                sampling_vmem_footprint)
+
+CFG = dvnr_cfg.SMOKE.replace(batch_size=512, n_levels=2, log2_hashmap_size=8,
+                             n_neurons=8, n_hidden_layers=1, lrate=1e-2)
+
+
+def _parts(P=2, local=(8, 8, 8), kind="cloverleaf"):
+    grid = {1: (1, 1, 1), 2: (1, 1, 2), 4: (1, 2, 2)}[P]
+    return [make_partition(kind, p, grid, local, 0.3) for p in range(P)]
+
+
+def _vols(P=2, local=(8, 8, 8)):
+    return jnp.stack([p.normalized() for p in _parts(P, local)])
+
+
+def _copy(state: DVNRState) -> DVNRState:
+    c = jax.tree.map(lambda t: jnp.array(t, copy=True),
+                     (state.params, state.opt, state.loss_ma, state.active))
+    return DVNRState(*c, state.step)
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b), strict=True):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def _gather_coords(rng, n=192):
+    """Interior + ghost-band + out-of-range (clamped) + exact-voxel coords —
+    the classes whose trilinear corners straddle brick boundaries."""
+    return jnp.concatenate([
+        jnp.asarray(rng.uniform(0, 1, (n, 3)), jnp.float32),
+        jnp.asarray(rng.uniform(-0.05, 0.0, (16, 3)), jnp.float32),
+        jnp.asarray(rng.uniform(1.0, 1.05, (16, 3)), jnp.float32),
+        jnp.asarray([[0.0, 0.0, 0.0], [1.0, 1.0, 1.0], [0.5, 1.0, 0.0]],
+                    jnp.float32),
+    ])
+
+
+# --------------------------------------------------------------------------- #
+# the brick-visiting owner-masked gather (host oracle of the tiled kernel)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("brick", [(4, 4, 4), (3, 5, 2), (8, 8, 8),
+                                   (16, 16, 16)])
+def test_bricked_gather_matches_sample_trilinear(brick):
+    """Owner-masked per-brick banking must reproduce the global gather for
+    bricks that divide the padded volume, bricks that leave remainders,
+    anisotropic bricks, and bricks larger than the volume (degenerate ->
+    pinned). Every sample whose 8-corner stencil straddles a brick face
+    exercises the owner partition: lo-corners from one brick, hi-corners
+    from its neighbor."""
+    rng = np.random.default_rng(0)
+    data = jnp.asarray(rng.standard_normal((10, 10, 10)), jnp.float32)
+    coords = _gather_coords(rng)
+    ref = np.asarray(sample_trilinear(data, coords, 1))
+    got = np.asarray(S.gather_trilinear_bricked(data, coords, 1, brick))
+    np.testing.assert_allclose(got[:, 0], ref, atol=1e-6)
+    # bit-exact vs the in-kernel gather expressions (same corner order)
+    np.testing.assert_array_equal(
+        got[:, 0], np.asarray(_gather_trilinear(data, coords, 1)))
+    # channel volumes too (velocity fields)
+    data_c = jnp.asarray(rng.standard_normal((10, 10, 10, 3)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(S.gather_trilinear_bricked(data_c, coords, 1, brick)),
+        np.asarray(sample_trilinear(data_c, coords, 1)), atol=1e-6)
+
+
+def test_bricked_gather_ghost_overlap_consistent():
+    """A physical point in the ghost-overlap band gathers the same raw target
+    from either neighboring partition through the bricked path — the brick
+    decomposition must not break the Fig. 2A zero-exchange premise."""
+    pa, pb = _parts(P=2, kind="nekrs")           # split along z at z=0.5
+    rng = np.random.default_rng(1)
+    n = 128
+    xy = rng.uniform(0.05, 0.95, (n, 2))
+    z = rng.uniform(0.5 - 0.03, 0.5 + 0.03, (n,))
+
+    def local(p, x, y, z):
+        o, e = np.asarray(p.origin), np.asarray(p.extent)
+        return jnp.asarray((np.stack([x, y, z], -1) - o) / e, jnp.float32)
+
+    ca = local(pa, xy[:, 0], xy[:, 1], z)
+    cb = local(pb, xy[:, 0], xy[:, 1], z)
+    va = np.asarray(S.gather_trilinear_bricked(pa.data, ca, pa.ghost,
+                                               (4, 4, 4)))[:, 0]
+    vb = np.asarray(S.gather_trilinear_bricked(pb.data, cb, pb.ghost,
+                                               (4, 4, 4)))[:, 0]
+    np.testing.assert_allclose(va, vb, atol=5e-5)
+    np.testing.assert_allclose(va, np.asarray(sample_trilinear(pa.data, ca,
+                                                               pa.ghost)),
+                               atol=1e-6)
+
+
+def test_brick_counts():
+    assert brick_counts((10, 10, 10), (4, 4, 4)) == (3, 3, 3)
+    assert brick_counts((10, 10, 10, 1), (5, 5, 5)) == (2, 2, 2)
+    assert brick_counts((8, 8, 8), (16, 16, 16)) == (1, 1, 1)
+
+
+# --------------------------------------------------------------------------- #
+# tiled kernel == pinned kernel, bit for bit (smoke sizes, pallas backend)
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("edge", [4, 5])
+def test_tiled_chunk_bitexact_vs_pinned_f32(edge):
+    """Multi-brick multi-step chunk: forcing the brick-tiled kernel must
+    replay the volume-pinned trajectory BIT-FOR-BIT (edge=4 leaves remainder
+    bricks against the 10^3 padded volume — the NaN-padded boundary-block
+    case; edge=5 divides it exactly)."""
+    vols = _vols()
+    key = jax.random.PRNGKey(1)
+    tr_t = DVNRTrainer(CFG.replace(sampling_brick=edge), 2, impl="pallas")
+    tr_p = DVNRTrainer(CFG.replace(sampling_brick="pinned"), 2, impl="pallas")
+    st = tr_t.init(jax.random.PRNGKey(0))
+    a, ta = tr_t.train_chunk(_copy(st), vols, 3, key=key)
+    b, tb = tr_p.train_chunk(_copy(st), vols, 3, key=key)
+    _assert_tree_equal(a.params, b.params)
+    _assert_tree_equal(a.opt["m"], b.opt["m"])
+    np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+    np.testing.assert_array_equal(np.asarray(a.active), np.asarray(b.active))
+
+
+def test_tiled_chunk_bitexact_vs_pinned_bf16():
+    """Same bit-exactness contract under the bf16 policy (bf16 params +
+    f32 master copy): sampling happens in f32 in both layouts, so the
+    precision policy cannot drive them apart."""
+    cfg = CFG.replace(precision="bf16")
+    vols = _vols()
+    key = jax.random.PRNGKey(1)
+    tr_t = DVNRTrainer(cfg.replace(sampling_brick=4), 2, impl="pallas")
+    tr_p = DVNRTrainer(cfg.replace(sampling_brick="pinned"), 2, impl="pallas")
+    st = tr_t.init(jax.random.PRNGKey(0))
+    a, ta = tr_t.train_chunk(_copy(st), vols, 3, key=key)
+    b, tb = tr_p.train_chunk(_copy(st), vols, 3, key=key)
+    assert a.params["tables"].dtype == jnp.bfloat16
+    _assert_tree_equal(a.opt["mw"], b.opt["mw"])
+    _assert_tree_equal(a.params, b.params)
+    np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+
+
+def test_tiled_chunk_matches_unfused_baseline():
+    """The tiled kernel joins the PR 5 parity chain: tiled pallas chunk vs
+    the fully unfused trainer within the fused-step f32 tolerance."""
+    vols = _vols()
+    key = jax.random.PRNGKey(1)
+    tr_t = DVNRTrainer(CFG.replace(sampling_brick=4), 2, impl="pallas")
+    tr_u = DVNRTrainer(CFG.replace(fuse_train_step="off"), 2, impl="pallas")
+    st = tr_t.init(jax.random.PRNGKey(0))
+    a, ta = tr_t.train_chunk(_copy(st), vols, 5, key=key)
+    b, tb = tr_u.train_chunk(_copy(st), vols, 5, key=key)
+    for x, y in zip(jax.tree.leaves(a.params), jax.tree.leaves(b.params),
+                    strict=True):
+        np.testing.assert_allclose(np.asarray(x, np.float32),
+                                   np.asarray(y, np.float32), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ta), np.asarray(tb), atol=1e-5)
+
+
+def test_jnp_backends_ignore_sampling_brick():
+    """On ref/fused backends the knob is inert: forcing a brick must replay
+    the default trajectory bit-for-bit (their gather is HBM-resident)."""
+    vols = _vols()
+    key = jax.random.PRNGKey(1)
+    for impl in ("ref", "fused"):
+        tr_b = DVNRTrainer(CFG.replace(sampling_brick=4), 2, impl=impl)
+        tr_d = DVNRTrainer(CFG, 2, impl=impl)
+        st = tr_b.init(jax.random.PRNGKey(0))
+        a, ta = tr_b.train_chunk(_copy(st), vols, 3, key=key)
+        b, tb = tr_d.train_chunk(_copy(st), vols, 3, key=key)
+        _assert_tree_equal(a.params, b.params)
+        np.testing.assert_array_equal(np.asarray(ta), np.asarray(tb))
+
+
+# --------------------------------------------------------------------------- #
+# VMEM budget: production256 fits tiled, stays rejected pinned
+# --------------------------------------------------------------------------- #
+def test_production256_tiled_footprint_fits_16mib():
+    """The acceptance gate in closed form: one ghost-padded 256^3 partition
+    under PRODUCTION256 exceeds the 16 MiB budget volume-pinned but fits it
+    brick-tiled with the auto-resolved brick."""
+    cfg = dvnr_cfg.PRODUCTION256
+    backend = backends.resolve("pallas")
+    limit = backend.vmem_limit_bytes
+    assert limit == 16 * 2**20
+    shapes = _cfg_state_shapes(cfg)
+    vol = (258, 258, 258)
+    n_tiles = -(-cfg.batch_size // BLOCK_N)
+    pinned = sampling_vmem_footprint(vol, shapes, "float32", False,
+                                     n_tiles=n_tiles)
+    assert not pinned.fits(limit)                 # ~69 MiB volume block
+    brick = resolve_sampling_brick("auto", vol, backend, state_shapes=shapes,
+                                   n_batch=cfg.batch_size)
+    assert brick is not None
+    tiled = sampling_vmem_footprint(vol, shapes, "float32", False,
+                                    n_tiles=n_tiles, brick=brick,
+                                    n_batch=cfg.batch_size)
+    assert tiled.fits(limit), tiled.total_bytes
+    # and the build-time guard agrees end to end: the trainer that PR 5
+    # rejected at 256^3 now builds
+    tr = DVNRTrainer(cfg, 1, impl="pallas", volume_shape=vol)
+    assert tr.fuse_sampling
+
+
+def test_ensure_sampling_fits_returns_resolved_brick():
+    backend = backends.resolve("pallas")
+    shapes = _cfg_state_shapes(CFG)
+    # smoke volume: auto resolves pinned (None) — PR 5 layout preserved
+    assert ensure_sampling_fits((10, 10, 10), backend, state_shapes=shapes,
+                                n_batch=CFG.batch_size) is None
+    # forced brick comes back verbatim as a 3-tuple
+    assert ensure_sampling_fits((10, 10, 10), backend, state_shapes=shapes,
+                                n_batch=CFG.batch_size,
+                                sampling_brick=4) == (4, 4, 4)
+    # over-budget pinned raises and names both escape hatches
+    with pytest.raises(ValueError) as e:
+        ensure_sampling_fits((258, 258, 258), backend, state_shapes=shapes,
+                             n_batch=CFG.batch_size, sampling_brick="pinned")
+    assert "sampling_brick='auto'" in str(e.value)
+    assert "fuse_sampling='off'" in str(e.value)
+
+
+def test_tiled_closed_form_matches_traced():
+    """The closed-form tiled footprint must equal the traced estimator's
+    bill for the real lowered chunk, byte for byte — the property that lets
+    repro-lint gate production256 without a TPU."""
+    from repro.analysis import build_trainer, estimate_jaxpr, trainer_programs
+
+    cfg = dvnr_cfg.SMOKE.replace(sampling_brick=4)
+    tr = build_trainer(cfg, backend="pallas", n_partitions=2,
+                       local_shape=(10, 10, 10), ghost=1)
+    assert tr.fuse_sampling
+    (step_prog, _), *_rest = trainer_programs(tr, n_steps=2)
+    traced = max(f.total_bytes for f in estimate_jaxpr(step_prog.jaxpr))
+    closed = sampling_vmem_footprint(
+        tr.volume_shape, _cfg_state_shapes(cfg),
+        tr.precision.param_dtype, tr.precision.needs_master, P=tr.P,
+        n_tiles=-(-cfg.batch_size // BLOCK_N), brick=(4, 4, 4),
+        n_batch=cfg.batch_size).total_bytes
+    assert traced == closed
+
+
+# --------------------------------------------------------------------------- #
+# knob plumbing + capability gating
+# --------------------------------------------------------------------------- #
+def test_sampling_brick_validation():
+    with pytest.raises(ValueError, match="sampling_brick"):
+        DVNRTrainer(CFG.replace(sampling_brick="huge"), 1)
+    with pytest.raises(ValueError, match="sampling_brick"):
+        DVNRTrainer(CFG.replace(sampling_brick=-3), 1)
+    # 0 is the pinned alias
+    tr = DVNRTrainer(CFG.replace(sampling_brick=0), 1, impl="pallas")
+    assert tr.fuse_sampling
+
+
+def test_tiled_sampling_capability_resolution():
+    assert backends.resolve("ref").tiled_sampling == "ref"
+    assert backends.resolve("fused").tiled_sampling == "ref"
+    assert backends.resolve("pallas").tiled_sampling == "pallas-interpret"
+    assert backends.resolve("pallas_tpu").tiled_sampling == "pallas"
+
+
+def test_backend_without_tiled_capability_keeps_pinned_rejection():
+    """A pallas backend lacking ``tiled_sampling`` must resolve auto -> pinned
+    and keep rejecting over-budget volumes — no silent brick fallback onto a
+    kernel the backend does not implement."""
+    base = backends.resolve("pallas")
+    notiled = backends.register_backend(dataclasses.replace(
+        base, name="notiled_test", priority=-1,
+        capabilities=base.capabilities - {"tiled_sampling"}))
+    assert notiled.fused_sampling == "pallas-interpret"
+    assert notiled.tiled_sampling == ""
+    shapes = _cfg_state_shapes(CFG)
+    assert resolve_sampling_brick("auto", (258, 258, 258), notiled,
+                                  state_shapes=shapes,
+                                  n_batch=CFG.batch_size) is None
+    with pytest.raises(ValueError) as e:
+        ensure_sampling_fits((258, 258, 258), notiled, state_shapes=shapes,
+                             n_batch=CFG.batch_size)
+    # the hint must NOT advertise the brick escape hatch it cannot take
+    assert "sampling_brick='auto'" not in str(e.value)
+    assert "fuse_sampling='off'" in str(e.value)
