@@ -15,7 +15,8 @@ from benchmarks.common import (dvnr_metrics, make_volume, save_result,
 from repro.compress.model_compress import compress_stacked
 from repro.configs.dvnr import DVNRConfig
 from repro.core.metrics import psnr, ssim2d
-from repro.core.render import Camera, default_tf, make_rays, render_distributed
+from repro.core.render import (Camera, _render_distributed, default_tf,
+                               make_rays)
 from repro.data.volume import sample_trilinear
 
 SIZES = {                      # log2_hashmap_size ladder (paper's model sweep)
@@ -79,8 +80,8 @@ def run(quick: bool = False) -> dict:
                              model_blob_bytes=sum(len(b) for b, _ in blobs))
             meta = [{"origin": p.origin, "extent": p.extent,
                      "vmin": p.vmin, "vmax": p.vmax} for p in parts]
-            img = render_distributed(cfg, state.params, meta, cam, W, H,
-                                     grange, n_samples=32)
+            img = _render_distributed(cfg, state.params, meta, cam, W, H,
+                                      grange, n_samples=32)
             img_psnr = float(psnr(img[..., :3], gt_img[..., :3]))
             img_ssim = float(ssim2d(img[..., :3], gt_img[..., :3]))
             rows.append(dict(kind=kind, size=size_name, ratio=m["ratio"],

@@ -1,9 +1,17 @@
-"""Paper Fig. 10: rendering time & memory, DVNR renderer vs grid renderer.
+"""Paper Fig. 10: rendering time & memory, DVNR renderer vs grid renderer,
+plus the serving brick-cache axis (cINR, arxiv 2504.18001).
 
 DVNR path: sample-streaming INR inference (no decode). Grid path: decode the
 model to a full grid first, then trilinear ray-march ('Ascent'-style). Memory
 = model bytes vs decoded-grid bytes (the paper's up-to-80% GPU memory saving);
 plus isosurface extraction accuracy vs codecs at matched PSNR (Fig. 11).
+
+Cache axis: a fixed camera orbit rendered twice per frame through the SAME
+brick-sampled frame program — once cold (``BrickCache.clear()`` first, so
+every brick re-decodes: the uncached cost) and once warm (all hits). The
+per-frame paired ratio cancels machine-load drift; its median is the
+``cached_vs_uncached`` trend metric gated by ``check_bench_gate``. Identical
+pool contents make the two frames bit-exact in f32 — asserted here.
 """
 from __future__ import annotations
 
@@ -19,13 +27,78 @@ from repro.configs.dvnr import DVNRConfig
 from repro.core.inr import param_bytes_f16
 from repro.core.isosurface import chamfer_distance, marching_tets, surface_points
 from repro.core.metrics import psnr
-from repro.core.render import Camera, render_distributed
+from repro.core.render import (Camera, _render_distributed,
+                               _render_distributed_sampled, rays_from_arrays)
 from repro.compress.interp import interp_decode, interp_encode
 
 CFG = DVNRConfig(n_levels=3, n_features_per_level=2, log2_hashmap_size=8,
                  base_resolution=6, per_level_scale=2.0, n_neurons=16,
                  n_hidden_layers=2, epochs=12, batch_size=4096,
                  n_train_min=300)
+
+
+def run_cache_orbit(quick: bool = False, frames: int | None = None) -> dict:
+    """Cached-vs-uncached paired-median speedup over a fixed camera orbit
+    (the quickstart volume: cloverleaf, 2 partitions x 24^3)."""
+    from repro.api import DVNRModel
+    from repro.serving import BrickCache
+
+    frames = (8 if quick else 32) if frames is None else frames
+    W = H = 48
+    n_samples = 24
+    parts, vols = make_volume("cloverleaf", (1, 1, 2), (24, 24, 24))
+    state, _ = train_dvnr(CFG, parts, vols)
+    model = DVNRModel(CFG, state.params, parts)
+    cache = BrickCache(CFG, grid_shape=(24, 24, 24), brick_edge=8,
+                       backend="ref")
+    metas = model.meta_arrays()
+    grange = model.grange
+    view = cache.ensure(model)
+    gs, be = view.grid_shape, view.brick_edge
+    center = jnp.asarray((0.5, 0.5, 0.5), jnp.float32)
+    up = jnp.asarray((0.0, 0.0, 1.0), jnp.float32)
+
+    @jax.jit
+    def frame(pool, slots, eye):
+        rays = rays_from_arrays(eye, center, up, 45.0, W, H)
+        return _render_distributed_sampled(
+            pool, slots, gs, be, metas, None, W, H, grange,
+            n_samples=n_samples, rays=rays)
+
+    cam0 = Camera()
+    eyes = [jnp.asarray(cam0.orbit(2 * np.pi * f / frames).eye, jnp.float32)
+            for f in range(frames)]
+    jax.block_until_ready(frame(view.pool, view.slots, eyes[0]))  # compile
+
+    cached_ms, uncached_ms = [], []
+    for eye in eyes:
+        cache.clear()                       # uncached: every brick re-decodes
+        t0 = time.time()
+        v = cache.ensure(model)
+        cold = frame(v.pool, v.slots, eye)
+        jax.block_until_ready(cold)
+        uncached_ms.append((time.time() - t0) * 1e3)
+        t0 = time.time()                    # cached: ensure() is all hits
+        v = cache.ensure(model)
+        warm = frame(v.pool, v.slots, eye)
+        jax.block_until_ready(warm)
+        cached_ms.append((time.time() - t0) * 1e3)
+        if not (np.asarray(cold) == np.asarray(warm)).all():
+            raise AssertionError("cached frame not bit-exact vs uncached")
+
+    ratios = [u / c for u, c in zip(uncached_ms, cached_ms)]
+    stats = cache.stats()
+    out = dict(frames=frames, width=W, height=H, n_samples=n_samples,
+               speedup=float(np.median(ratios)),
+               cached_ms_median=float(np.median(cached_ms)),
+               uncached_ms_median=float(np.median(uncached_ms)),
+               hit_rate=stats["hit_rate"], pool_bytes=stats["pool_bytes"],
+               bit_exact=True)
+    print(f"[cache-orbit] {frames} frames: cached "
+          f"{out['cached_ms_median']:.1f}ms vs uncached "
+          f"{out['uncached_ms_median']:.1f}ms -> {out['speedup']:.2f}x "
+          f"(hit rate {out['hit_rate']:.2f})")
+    return out
 
 
 def run(quick: bool = False) -> dict:
@@ -41,8 +114,8 @@ def run(quick: bool = False) -> dict:
         grange = (min(p.vmin for p in parts), max(p.vmax for p in parts))
 
         # DVNR render (warm-up + timed frames, paper protocol)
-        render = lambda: render_distributed(CFG, state.params, meta, cam,
-                                            W, H, grange, n_samples=32)
+        render = lambda: _render_distributed(CFG, state.params, meta, cam,
+                                             W, H, grange, n_samples=32)
         img = render()
         jax.block_until_ready(img)
         t0 = time.time()
@@ -88,7 +161,8 @@ def run(quick: bool = False) -> dict:
                              psnr=m["psnr"]))
         print(f"[{kind}] chamfer: DVNR={cd_dvnr:.4f} interp={cd_interp:.4f}")
 
-    out = {"render": rows, "isosurface": iso_rows}
+    out = {"render": rows, "isosurface": iso_rows,
+           "cache_orbit": run_cache_orbit(quick)}
     save_result("rendering", out)
     return out
 

@@ -26,6 +26,9 @@ REPO_ROOT = Path(__file__).resolve().parent.parent
 # paired-median ratios (machine-drift-cancelling); see bench_train_loop.py.
 GATED = {
     "train_loop": ("fused_vs_unfused", "sampling_vs_host"),
+    # the serving brick-cache payoff: cached-vs-uncached paired-median
+    # speedup over the fixed camera orbit (bench_rendering.run_cache_orbit)
+    "rendering": ("cached_vs_uncached",),
 }
 
 

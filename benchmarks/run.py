@@ -54,6 +54,12 @@ TREND = {
         ("pallas_interpret_steps_per_s",
          lambda out: out["sampling"]["pallas_interpret_steps_per_s"]),
     ],
+    "rendering": [
+        ("cached_vs_uncached", lambda out: out["cache_orbit"]["speedup"]),
+        ("cache_hit_rate", lambda out: out["cache_orbit"]["hit_rate"]),
+        ("cached_ms_median",
+         lambda out: out["cache_orbit"]["cached_ms_median"]),
+    ],
 }
 
 

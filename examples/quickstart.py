@@ -50,8 +50,9 @@ def main():
           f"{raw/cinfo['bytes']:.1f}x (with model compression)")
 
     # -- 4. render the DVNR directly (paper IV-C) ---------------------------
-    img = api.render(model, eye=(1.8, 1.4, 1.6), width=64, height=64,
-                     n_samples=48)
+    img = api.render(model, api.RenderRequest(
+        camera=api.Camera(eye=(1.8, 1.4, 1.6)), width=64, height=64,
+        n_samples=48))
     print(f"rendered {img.shape} frame, mean alpha "
           f"{float(img[..., 3].mean()):.3f}")
 

@@ -12,7 +12,9 @@ programs the paper's systems claims are about:
                    last-good restore merge (repro.resilience) — proves the
                    resilience path adds no cross-partition communication,
 - ``render``       sort-last distributed rendering (per-rank ray march +
-                   depth compositing — the zero-communication render path).
+                   depth compositing — the zero-communication render path),
+- ``render_cached``  the same frame through the ``repro.serving`` brick pool
+                   (trilinear gathers, zero INR inference on the hot path).
 
 Named configs for the CLI live in :data:`CONFIGS`.
 """
@@ -161,7 +163,7 @@ def render_program(cfg, *, backend="auto", n_partitions: int = 2,
 
     from repro import backends
     from repro.core.inr import init_inr
-    from repro.core.render import Camera, render_distributed
+    from repro.core.render import Camera, _render_distributed
 
     b = backends.resolve(backend)
     # synthetic partition metadata: a z-split unit box (host-side data only —
@@ -178,22 +180,64 @@ def render_program(cfg, *, backend="auto", n_partitions: int = 2,
     stacked = jax.eval_shape(build)
 
     def fn(params):
-        return render_distributed(cfg, params, metas, cam, width, height,
-                                  (0.0, 1.0), n_samples=n_samples, impl=b)
+        return _render_distributed(cfg, params, metas, cam, width, height,
+                                   (0.0, 1.0), n_samples=n_samples, impl=b)
 
     program = capture(fn, stacked, name=f"render[{b.name}]")
+    return program, CheckContext(backend=b)
+
+
+def cached_render_program(cfg, *, backend="auto", n_partitions: int = 2,
+                          width: int = 16, height: int = 16,
+                          n_samples: int = 8, grid_shape=(16, 16, 16),
+                          brick_edge: int = 8
+                          ) -> Tuple[ProgramArtifacts, CheckContext]:
+    """The brick-cache render path (``repro.serving``) as an analyzed program:
+    trilinear gathers from the decoded pool instead of INR inference. The
+    invariants are the same as :func:`render_program` — zero collectives and
+    the VMEM budget — plus, implicitly, that NO inference kernels appear on
+    the frame hot path."""
+    import math
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import backends
+    from repro.core.render import Camera, _render_distributed_sampled, meta_arrays
+
+    b = backends.resolve(backend)
+    metas_h = [{"origin": (0.0, 0.0, p / n_partitions),
+                "extent": (1.0, 1.0, 1.0 / n_partitions),
+                "vmin": 0.0, "vmax": 1.0} for p in range(n_partitions)]
+    metas = meta_arrays(metas_h)
+    cam = Camera(eye=(1.8, 1.4, 1.6))
+    E = brick_edge + 1
+    nb = tuple(-(-s // brick_edge) for s in grid_shape)
+    n_slots = n_partitions * int(math.prod(nb))
+    pool = jax.ShapeDtypeStruct((n_slots, E, E, E), jnp.float32)
+    slots = jax.ShapeDtypeStruct((n_partitions,) + nb, jnp.int32)
+
+    def fn(pool, slots):
+        return _render_distributed_sampled(
+            pool, slots, grid_shape, brick_edge, metas, cam, width, height,
+            (0.0, 1.0), n_samples=n_samples, impl=b)
+
+    program = capture(fn, pool, slots, name=f"render_cached[{b.name}]")
     return program, CheckContext(backend=b)
 
 
 def config_programs(cfg, local_shape, *, backend="auto", n_partitions: int = 2,
                     ghost: int = 1, mesh=None, n_steps: int = 2,
                     ) -> List[Tuple[ProgramArtifacts, CheckContext]]:
-    """All standard programs of one config: train step, train chunk, render."""
+    """All standard programs of one config: train step, train chunk, render
+    (direct INR and brick-cached)."""
     trainer = build_trainer(cfg, backend=backend, n_partitions=n_partitions,
                             local_shape=local_shape, ghost=ghost, mesh=mesh)
     progs = trainer_programs(trainer, n_steps=n_steps)
     progs.append(render_program(cfg, backend=trainer.backend,
                                 n_partitions=n_partitions))
+    progs.append(cached_render_program(cfg, backend=trainer.backend,
+                                       n_partitions=n_partitions))
     return progs
 
 

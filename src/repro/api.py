@@ -24,9 +24,18 @@ Quickstart (CPU)::
     parts = [make_partition("cloverleaf", p, (1, 1, 2), (16, 16, 16), t=0.3)
              for p in range(2)]
     model, info = api.train(parts, SMOKE, key=jax.random.PRNGKey(0))
-    image = api.render(model, width=64, height=64)
+    image = api.render(model, api.RenderRequest(width=64, height=64))
     blobs, cinfo = api.compress(model)
     model.save("dvnr.msgpack")
+
+The render surface is request-based: :class:`Camera`, :class:`TransferFunction`
+and :class:`RenderRequest` are frozen dataclasses, :func:`render` is the one
+public verb (``repro.core.render.render_partition`` / ``render_distributed``
+are internal), and the old kwarg form ``api.render(model, eye=..., width=...)``
+still works behind a ``DeprecationWarning`` shim. Pass ``cache=`` (a
+:class:`repro.serving.BrickCache`) to sample decoded bricks instead of running
+INR inference per frame; :class:`repro.serving.RenderService` batches many
+concurrent requests.
 """
 from __future__ import annotations
 
@@ -49,11 +58,13 @@ from repro.compress.registry import available_codecs, get_codec, register_codec
 from repro.configs.dvnr import DVNRConfig
 from repro.core.inr import (_decode_grid, _inr_apply, init_inr,
                             param_bytes_f16, param_count)
+from repro.core.render import Camera
 from repro.core.trainer import DVNRState, DVNRTrainer, train_iterations
 from repro.precision import Precision, resolve_precision
 
 __all__ = [
     "DVNRModel", "PartitionMeta",
+    "Camera", "TransferFunction", "RenderRequest",
     "train", "render", "isosurface", "trace_pathlines",
     "compress", "decompress", "save", "load",
     "Backend", "get_backend", "register_backend", "available_backends",
@@ -105,6 +116,66 @@ def _meta_tuple(parts_meta) -> Optional[Tuple[PartitionMeta, ...]]:
 
 def _grange_of(metas: Sequence[PartitionMeta]) -> Tuple[float, float]:
     return (min(m.vmin for m in metas), max(m.vmax for m in metas))
+
+
+# --------------------------------------------------------------------------- #
+# Render request objects
+# --------------------------------------------------------------------------- #
+@dataclass(frozen=True, eq=False)
+class TransferFunction:
+    """An RGBA transfer function over the GLOBAL normalized value range.
+
+    ``table`` is a (K, 4) piecewise-linear RGBA lookup (``None`` -> the
+    built-in cool-to-warm :func:`repro.core.render.default_tf`); ``density``
+    scales opacity integration. Frozen (``eq=False``: the array field makes
+    value equality meaningless) so requests can share one instance."""
+
+    table: Any = None
+    density: float = 50.0
+
+    @property
+    def table_shape(self) -> Optional[Tuple[int, ...]]:
+        """Shape of ``table`` (``None`` for the default) — part of the render
+        service's batch grouping key (it fixes traced array shapes)."""
+        return None if self.table is None else tuple(np.shape(self.table))
+
+    def resolved_table(self):
+        from repro.core.render import default_tf
+        return default_tf() if self.table is None else \
+            jnp.asarray(self.table, jnp.float32)
+
+
+@dataclass(frozen=True, eq=False)
+class RenderRequest:
+    """One render ask: everything a frame depends on, as a value.
+
+    The one argument of :func:`render` (and the unit
+    :class:`repro.serving.RenderService` coalesces into batched ticks):
+
+    - ``camera`` / ``tf``   immutable :class:`Camera` / :class:`TransferFunction`
+    - ``width``/``height``/``n_samples``   image + ray-march resolution
+    - ``iso``               isosurface value in global normalized units
+                            (used by :func:`isosurface`; ignored by volume
+                            rendering)
+    - ``timestep``          historical timestep served out of a
+                            :class:`~repro.core.temporal.TemporalModelCache`
+                            (``None`` -> the live model)
+    - ``lod``               brick-cache level of detail (level ``l`` decodes
+                            at ``ceil(shape / 2**l)``; cache path only)
+    - ``compute_dtype``     reduced inference/compositing dtype (e.g.
+                            ``"bfloat16"``); ``out_dtype`` casts the frame
+    """
+
+    camera: Camera = Camera()
+    tf: TransferFunction = TransferFunction()
+    width: int = 128
+    height: int = 128
+    n_samples: int = 64
+    iso: Optional[float] = None
+    timestep: Optional[int] = None
+    lod: int = 0
+    compute_dtype: Optional[str] = None
+    out_dtype: Optional[str] = None
 
 
 # --------------------------------------------------------------------------- #
@@ -200,6 +271,23 @@ class DVNRModel:
         if self.stacked:
             return self.params
         return jax.tree.map(lambda t: t[None], self.params)
+
+    def _derive_meta_arrays(self):
+        from repro.core.render import meta_arrays
+        return meta_arrays(self.parts_meta)
+
+    def meta_arrays(self):
+        """Partition metadata batched to ``(los, exts, vrs)`` device arrays,
+        derived ONCE per model instance — repeated renders reuse the memoized
+        arrays instead of re-reducing over partitions every call. (Memo lives
+        outside the pytree: unflattened copies lazily re-derive.)"""
+        cached = self.__dict__.get("_meta_arrays_cache")
+        if cached is None:
+            if self.parts_meta is None:
+                raise ValueError("meta_arrays() needs model.parts_meta")
+            cached = self._derive_meta_arrays()
+            self.__dict__["_meta_arrays_cache"] = cached
+        return cached
 
     @property
     def param_count(self) -> int:
@@ -415,33 +503,99 @@ def train(partitions, cfg: DVNRConfig, *, backend: BackendLike = "auto",
     return model, info
 
 
-def render(model: DVNRModel, *, camera=None, eye=(1.8, 1.4, 1.6),
-           width: int = 128, height: int = 128, n_samples: int = 64,
-           backend: BackendLike = "auto", tf_table=None, mesh=None,
-           compute_dtype=None, out_dtype=None):
+_LEGACY_RENDER_KW = ("camera", "eye", "center", "up", "fov_deg", "width",
+                     "height", "n_samples", "tf_table", "density",
+                     "compute_dtype", "out_dtype")
+
+
+def _request_from_legacy(kw: dict) -> RenderRequest:
+    """The pre-RenderRequest kwarg surface, shimmed (PR 1 ``inr_apply``
+    migration pattern): warn once per call site, build the equivalent request."""
+    import warnings
+
+    bad = set(kw) - set(_LEGACY_RENDER_KW)
+    if bad:
+        raise TypeError(f"render() got unexpected keyword arguments "
+                        f"{sorted(bad)}")
+    warnings.warn(
+        "api.render(eye=..., width=..., ...) kwargs are deprecated; pass a "
+        "request: api.render(model, RenderRequest(camera=Camera(eye=...), "
+        "width=...))", DeprecationWarning, stacklevel=3)
+    cam = kw.pop("camera", None)
+    if cam is None:
+        d = Camera()
+        cam = Camera(eye=tuple(kw.pop("eye", d.eye)),
+                     center=tuple(kw.pop("center", d.center)),
+                     up=tuple(kw.pop("up", d.up)),
+                     fov_deg=float(kw.pop("fov_deg", d.fov_deg)))
+    else:
+        for k in ("eye", "center", "up", "fov_deg"):
+            kw.pop(k, None)
+    tf = TransferFunction(table=kw.pop("tf_table", None),
+                          density=float(kw.pop("density", 50.0)))
+    return RenderRequest(camera=cam, tf=tf, **kw)
+
+
+def render(model: DVNRModel, request: Optional[RenderRequest] = None, *,
+           backend: BackendLike = "auto", mesh=None, cache=None, **legacy):
     """Sort-last direct volume rendering of the DVNR (never decodes a grid).
 
-    ``compute_dtype`` runs INR inference reduced (bf16 decode for
-    interactivity); ``out_dtype`` casts the final (H,W,4) image."""
-    from repro.core.render import Camera, render_distributed
+    ``request`` is a :class:`RenderRequest` (default: the default request —
+    128x128, default camera/TF). ``cache`` (a
+    :class:`repro.serving.BrickCache`) swaps per-frame INR inference for
+    trilinear sampling of its decoded brick pool (``request.lod`` /
+    ``request.timestep`` select the cached level); without it every frame
+    runs INR inference. ``request.compute_dtype`` runs inference reduced
+    (bf16 decode for interactivity); ``request.out_dtype`` casts the final
+    (H,W,4) image.
+
+    The old kwarg form ``render(model, eye=..., width=...)`` still renders
+    identically but emits ``DeprecationWarning``."""
+    from repro.core.render import (_render_distributed,
+                                   _render_distributed_sampled)
 
     if model.parts_meta is None:
         raise ValueError("render() needs model.parts_meta (train via "
                          "repro.api.train or attach PartitionMeta)")
-    cam = camera if camera is not None else Camera(eye=eye)
-    return render_distributed(
-        model.cfg, model.stacked_params(), list(model.parts_meta), cam,
-        width, height, model.grange, mesh=mesh, n_samples=n_samples,
-        impl=backends.resolve(backend), tf_table=tf_table,
-        compute_dtype=compute_dtype, out_dtype=out_dtype)
+    if legacy:
+        if request is not None:
+            raise TypeError("render() takes a RenderRequest OR legacy "
+                            "kwargs, not both")
+        request = _request_from_legacy(dict(legacy))
+    elif request is None:
+        request = RenderRequest()
+    r = request
+    b = backends.resolve(backend)
+    tf_table = r.tf.resolved_table()
+    if cache is not None:
+        view = cache.ensure(model, level=r.lod, timestep=r.timestep)
+        return _render_distributed_sampled(
+            view.pool, view.slots, view.grid_shape, view.brick_edge,
+            model.meta_arrays(), r.camera, r.width, r.height, model.grange,
+            n_samples=r.n_samples, impl=b, tf_table=tf_table,
+            density=r.tf.density, compute_dtype=r.compute_dtype,
+            out_dtype=r.out_dtype)
+    return _render_distributed(
+        model.cfg, model.stacked_params(), None, r.camera, r.width,
+        r.height, model.grange, mesh=mesh, n_samples=r.n_samples, impl=b,
+        tf_table=tf_table, density=r.tf.density,
+        compute_dtype=r.compute_dtype, out_dtype=r.out_dtype,
+        metas=model.meta_arrays())
 
 
-def isosurface(model: DVNRModel, iso01: float = 0.5, *, resolution: int = 32,
+def isosurface(model: DVNRModel, iso01=0.5, *, resolution: int = 32,
                backend: BackendLike = "auto") -> np.ndarray:
     """Per-partition marching tets on the INR; returns world-space points.
-    ``iso01`` is in GLOBAL normalized units."""
+    ``iso01`` is in GLOBAL normalized units — either a float or a
+    :class:`RenderRequest` whose ``iso`` field carries the value (the same
+    request object :func:`render` takes)."""
     from repro.core.isosurface import isosurface_from_inr, surface_points
 
+    if isinstance(iso01, RenderRequest):
+        if iso01.iso is None:
+            raise ValueError("isosurface() from a RenderRequest needs "
+                             "request.iso set")
+        iso01 = float(iso01.iso)
     if model.parts_meta is None:
         raise ValueError("isosurface() needs model.parts_meta")
     b = backends.resolve(backend)

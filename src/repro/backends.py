@@ -40,7 +40,7 @@ from repro.precision import SUPPORTED_DTYPES
 # (their gather is HBM-resident already). Without it, fused_sampling is
 # limited to volumes that fit vmem_limit_bytes pinned.
 OPS = ("hash_encoding", "fused_mlp", "composite", "flash_attention",
-       "fused_train_step", "fused_sampling", "tiled_sampling")
+       "fused_train_step", "fused_sampling", "tiled_sampling", "brick_cache")
 
 
 @dataclass(frozen=True)
@@ -67,6 +67,11 @@ class Backend:
     # (repro.analysis.vmem) and the fused-sampling dispatch guard check
     # against it. None = unbounded (jnp backends emit no pallas_call).
     vmem_limit_bytes: Optional[int] = None
+    # default device-memory budget (bytes) of the serving brick pool
+    # (repro.serving.BrickCache) on this backend — HBM, not VMEM, so far
+    # looser than vmem_limit_bytes. Overridable per cache; the closed-form
+    # pool_bytes never exceeds it.
+    cache_budget_bytes: int = 64 * 2**20
 
     # ------------------------------------------------------------------ #
     @property

@@ -31,29 +31,55 @@ from repro.kernels.composite.ops import composite
 # --------------------------------------------------------------------------- #
 # Camera / rays
 # --------------------------------------------------------------------------- #
-@dataclass
+@dataclass(frozen=True)
 class Camera:
-    eye: Tuple[float, float, float]
+    """An immutable pinhole camera. Frozen so it can ride inside
+    :class:`repro.api.RenderRequest` (hashable request grouping keys) and be
+    shared across concurrent render clients without defensive copies."""
+
+    eye: Tuple[float, float, float] = (1.8, 1.4, 1.6)
     center: Tuple[float, float, float] = (0.5, 0.5, 0.5)
     up: Tuple[float, float, float] = (0.0, 0.0, 1.0)
     fov_deg: float = 45.0
 
+    def orbit(self, angle: float, *, radius: Optional[float] = None,
+              height: Optional[float] = None) -> "Camera":
+        """The camera rotated to ``angle`` (radians) on a horizontal orbit
+        around ``center`` — the fixed-orbit protocol of ``bench_rendering``
+        and the serving smoke driver."""
+        cx, cy, cz = self.center
+        dx, dy, dz = (self.eye[0] - cx, self.eye[1] - cy, self.eye[2] - cz)
+        r = float(np.hypot(dx, dy)) if radius is None else radius
+        h = dz if height is None else height
+        return Camera(eye=(cx + r * float(np.cos(angle)),
+                           cy + r * float(np.sin(angle)), cz + h),
+                      center=self.center, up=self.up, fov_deg=self.fov_deg)
 
-def make_rays(cam: Camera, width: int, height: int):
-    eye = jnp.asarray(cam.eye, jnp.float32)
-    fwd = jnp.asarray(cam.center, jnp.float32) - eye
+
+def rays_from_arrays(eye, center, up, fov_deg: float, width: int, height: int):
+    """Ray generation from device arrays (eye/center/up (3,) each) — the
+    traceable core of :func:`make_rays`, vmappable over a camera batch
+    (``fov_deg``/``width``/``height`` stay static: they fix array shapes and
+    the batched-tick grouping key of the render service)."""
+    eye = jnp.asarray(eye, jnp.float32)
+    fwd = jnp.asarray(center, jnp.float32) - eye
     fwd = fwd / jnp.linalg.norm(fwd)
-    right = jnp.cross(fwd, jnp.asarray(cam.up, jnp.float32))
+    right = jnp.cross(fwd, jnp.asarray(up, jnp.float32))
     right = right / jnp.linalg.norm(right)
-    up = jnp.cross(right, fwd)
-    tan = np.tan(np.radians(cam.fov_deg) / 2)
+    upv = jnp.cross(right, fwd)
+    tan = np.tan(np.radians(fov_deg) / 2)
     xs = (jnp.arange(width) + 0.5) / width * 2 - 1
     ys = (jnp.arange(height) + 0.5) / height * 2 - 1
     X, Y = jnp.meshgrid(xs * tan, ys * tan * (height / width), indexing="xy")
-    dirs = fwd[None, None] + X[..., None] * right + Y[..., None] * up
+    dirs = fwd[None, None] + X[..., None] * right + Y[..., None] * upv
     dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
     origins = jnp.broadcast_to(eye, dirs.shape)
     return origins.reshape(-1, 3), dirs.reshape(-1, 3)
+
+
+def make_rays(cam: Camera, width: int, height: int):
+    return rays_from_arrays(cam.eye, cam.center, cam.up, cam.fov_deg,
+                            width, height)
 
 
 def ray_aabb(origins, dirs, box_lo, box_hi):
@@ -87,17 +113,45 @@ def apply_tf(values, tf_table):
 
 
 # --------------------------------------------------------------------------- #
+# Brick-cache sampling (repro.serving)
+# --------------------------------------------------------------------------- #
+def sample_bricks(pool, slots, coords01, grid_shape, brick_edge: int):
+    """Trilinear sampling of a brick-tiled cell-centered grid.
+
+    ``pool`` (n_slots, E, E, E) with ``E = brick_edge + 1`` holds decoded
+    bricks with a one-voxel overlap row (each brick is self-contained for
+    trilinear interpolation over the cells it owns — the cINR ghost layout),
+    ``slots`` (nbx, nby, nbz) int32 maps brick index -> pool slot, and
+    ``coords01`` (N, 3) are normalized coords over the grid. Matches
+    :func:`repro.data.volume.sample_trilinear` (ghost=0) bit-for-bit when the
+    pool holds the decoded grid values: same cell-centered mapping, clamping
+    and 8-corner summation order.
+    """
+    dims = jnp.asarray(grid_shape, jnp.float32)
+    pos = coords01 * dims - 0.5
+    lo = jnp.clip(jnp.floor(pos), 0, dims - 2).astype(jnp.int32)        # (N,3)
+    w = jnp.clip(pos - lo, 0.0, 1.0)
+    brick = lo // brick_edge                                            # (N,3)
+    slot = slots[brick[:, 0], brick[:, 1], brick[:, 2]]                 # (N,)
+    local = lo - brick * brick_edge                                     # (N,3)
+    off = jnp.asarray(np.stack(np.meshgrid([0, 1], [0, 1], [0, 1],
+                                           indexing="ij"), -1).reshape(8, 3),
+                      jnp.int32)
+    c = local[:, None, :] + off[None]                                   # (N,8,3)
+    E = brick_edge + 1
+    lin = ((slot[:, None] * E + c[..., 0]) * E + c[..., 1]) * E + c[..., 2]
+    vals = pool.reshape(-1)[lin.reshape(-1)].reshape(lin.shape)         # (N,8)
+    wsel = jnp.where(off[None].astype(w.dtype) == 1,
+                     w[:, None, :], 1.0 - w[:, None, :])
+    ww = wsel[..., 0] * wsel[..., 1] * wsel[..., 2]
+    return jnp.einsum("nc,nc->n", ww, vals.astype(ww.dtype))
+
+
+# --------------------------------------------------------------------------- #
 # Per-partition rendering
 # --------------------------------------------------------------------------- #
-def render_partition(cfg: DVNRConfig, params, origin, extent, vrange, grange,
-                     origins, dirs, tf_table, *, n_samples: int = 64,
-                     density: float = 50.0,
-                     impl: backends.BackendLike = "ref", compute_dtype=None):
-    """Ray-march one partition's INR. Returns (rgba (R,4), depth (R,)).
-
-    ``compute_dtype`` runs the INR inference stage reduced (bf16 decode);
-    the transfer-function / compositing math stays in the ray dtype (f32)."""
-    backend = backends.resolve(impl)
+def _march_setup(origin, extent, origins, dirs, n_samples: int):
+    """Shared ray-march scaffolding: (hit, dt, local coords (R,S,3), t0)."""
     lo = jnp.asarray(origin, jnp.float32)
     hi = lo + jnp.asarray(extent, jnp.float32)
     t0, t1 = ray_aabb(origins, dirs, lo, hi)
@@ -106,11 +160,14 @@ def render_partition(cfg: DVNRConfig, params, origin, extent, vrange, grange,
     ts = t0[:, None] + (jnp.arange(n_samples) + 0.5) * dt[:, None]      # (R,S)
     pos = origins[:, None] + ts[..., None] * dirs[:, None]              # (R,S,3)
     local = (pos - lo) / (hi - lo)
-    R, S = ts.shape
-    v = _inr_apply(cfg, params, local.reshape(-1, 3), backend,
-                   compute_dtype=compute_dtype).reshape(R, S)
-    # de-normalize local prediction, then re-normalize to the GLOBAL value
-    # range (f32 — the bf16 path promotes here, before the transfer function)
+    return hit, dt, local, t0
+
+
+def _shade_composite(v, hit, dt, t0, vrange, grange, tf_table, density,
+                     backend, compute_dtype):
+    """Value samples (R,S) -> (rgba (R,4), depth (R,)): de-normalize to the
+    GLOBAL range, transfer function, opacity integration, front-to-back
+    compositing. f32 from the TF on (the bf16 path promotes before it)."""
     vmin, vmax = vrange
     gmin, gmax = grange
     raw = v.astype(jnp.float32) * (vmax - vmin) + vmin
@@ -124,6 +181,41 @@ def render_partition(cfg: DVNRConfig, params, origin, extent, vrange, grange,
     out = composite(rgba, backend, compute_dtype=compute_dtype)
     depth = jnp.where(hit, t0, jnp.inf)
     return out, depth
+
+
+def _render_partition(cfg: DVNRConfig, params, origin, extent, vrange, grange,
+                      origins, dirs, tf_table, *, n_samples: int = 64,
+                      density: float = 50.0,
+                      impl: backends.BackendLike = "ref", compute_dtype=None):
+    """Ray-march one partition's INR. Returns (rgba (R,4), depth (R,)).
+
+    ``compute_dtype`` runs the INR inference stage reduced (bf16 decode);
+    the transfer-function / compositing math stays in the ray dtype (f32)."""
+    backend = backends.resolve(impl)
+    hit, dt, local, t0 = _march_setup(origin, extent, origins, dirs, n_samples)
+    R, S = local.shape[:2]
+    v = _inr_apply(cfg, params, local.reshape(-1, 3), backend,
+                   compute_dtype=compute_dtype).reshape(R, S)
+    return _shade_composite(v, hit, dt, t0, vrange, grange, tf_table,
+                            density, backend, compute_dtype)
+
+
+def _render_partition_sampled(pool, slots, grid_shape, brick_edge: int,
+                              origin, extent, vrange, grange, origins, dirs,
+                              tf_table, *, n_samples: int = 64,
+                              density: float = 50.0,
+                              impl: backends.BackendLike = "ref",
+                              compute_dtype=None):
+    """The cache-aware twin of :func:`_render_partition`: value samples come
+    from a decoded brick pool (:class:`repro.serving.BrickCache`) instead of
+    INR inference — no ``DVNRModel.apply`` on the frame hot path."""
+    backend = backends.resolve(impl)
+    hit, dt, local, t0 = _march_setup(origin, extent, origins, dirs, n_samples)
+    R, S = local.shape[:2]
+    v = sample_bricks(pool, slots, local.reshape(-1, 3), grid_shape,
+                      brick_edge).reshape(R, S)
+    return _shade_composite(v, hit, dt, t0, vrange, grange, tf_table,
+                            density, backend, compute_dtype)
 
 
 # --------------------------------------------------------------------------- #
@@ -243,7 +335,7 @@ def make_distributed_render_step(cfg: DVNRConfig, mesh, *, n_samples: int = 64,
 
     def local(params, lo, ext, vr, origins, dirs, tf_table, grange):
         params = jax.tree.map(lambda t: t[0], params)
-        img, dep = render_partition(
+        img, dep = _render_partition(
             cfg, params, lo[0], ext[0], (vr[0, 0], vr[0, 1]),
             (grange[0], grange[1]), origins, dirs, tf_table,
             n_samples=n_samples, density=density, impl=impl)
@@ -270,15 +362,38 @@ def make_distributed_render_step(cfg: DVNRConfig, mesh, *, n_samples: int = 64,
     return step
 
 
-def render_distributed(cfg, stacked_params, parts_meta, cam: Camera,
-                       width: int, height: int, grange, *, mesh=None,
-                       n_samples: int = 64,
-                       impl: backends.BackendLike = "ref",
-                       tf_table: Optional[jnp.ndarray] = None,
-                       compute_dtype=None, out_dtype=None):
+def meta_arrays(parts_meta):
+    """Batch host partition metadata into ``(los, exts, vrs)`` device arrays
+    (each (P,·) f32). Derive ONCE per model — :class:`repro.api.DVNRModel`
+    memoizes this so repeated renders never re-reduce over partitions."""
+    los = jnp.asarray([tuple(m["origin"]) for m in parts_meta], jnp.float32)
+    exts = jnp.asarray([tuple(m["extent"]) for m in parts_meta], jnp.float32)
+    vrs = jnp.asarray([(m["vmin"], m["vmax"]) for m in parts_meta], jnp.float32)
+    return los, exts, vrs
+
+
+def _frame_from_rays(images, depths, width, height, out_dtype):
+    out = composite_depth_sort(images, depths)
+    # contract: the image is f32 unless the caller explicitly asks otherwise —
+    # a reduced compute_dtype must not leak into the returned frame
+    out = out.astype(jnp.float32 if out_dtype is None else jnp.dtype(out_dtype))
+    return out.reshape(height, width, 4)
+
+
+def _render_distributed(cfg, stacked_params, parts_meta, cam: Camera,
+                        width: int, height: int, grange, *, mesh=None,
+                        n_samples: int = 64,
+                        impl: backends.BackendLike = "ref",
+                        tf_table: Optional[jnp.ndarray] = None,
+                        density: float = 50.0,
+                        compute_dtype=None, out_dtype=None, metas=None,
+                        rays=None):
     """Render P partitions as ONE vmapped program (no per-partition Python
     loop) and composite. parts_meta: list of dicts with origin/extent/vmin/vmax
-    per partition (host metadata, batched into (P,·) arrays here).
+    per partition; pass ``metas=(los, exts, vrs)`` (see :func:`meta_arrays`)
+    to skip re-batching them per call (``parts_meta`` may then be None).
+    ``rays=(origins, dirs)`` likewise overrides camera ray generation — the
+    render service's vmapped tick supplies traced per-client rays.
 
     Peak memory for the ray-march intermediates is O(P * rays * n_samples) on
     the single rendering device — fine for the host-side/compat path's small
@@ -287,20 +402,66 @@ def render_distributed(cfg, stacked_params, parts_meta, cam: Camera,
     """
     tf_table = default_tf() if tf_table is None else tf_table
     backend = backends.resolve(impl)
-    origins, dirs = make_rays(cam, width, height)
-    los = jnp.asarray([tuple(m["origin"]) for m in parts_meta], jnp.float32)
-    exts = jnp.asarray([tuple(m["extent"]) for m in parts_meta], jnp.float32)
-    vrs = jnp.asarray([(m["vmin"], m["vmax"]) for m in parts_meta], jnp.float32)
+    origins, dirs = make_rays(cam, width, height) if rays is None else rays
+    los, exts, vrs = meta_arrays(parts_meta) if metas is None else metas
 
     def one(params, lo, ext, vr):
-        return render_partition(cfg, params, lo, ext, (vr[0], vr[1]), grange,
-                                origins, dirs, tf_table,
-                                n_samples=n_samples, impl=backend,
-                                compute_dtype=compute_dtype)
+        return _render_partition(cfg, params, lo, ext, (vr[0], vr[1]), grange,
+                                 origins, dirs, tf_table,
+                                 n_samples=n_samples, density=density,
+                                 impl=backend, compute_dtype=compute_dtype)
 
     images, depths = jax.vmap(one)(stacked_params, los, exts, vrs)
-    out = composite_depth_sort(images, depths)
-    # contract: the image is f32 unless the caller explicitly asks otherwise —
-    # a reduced compute_dtype must not leak into the returned frame
-    out = out.astype(jnp.float32 if out_dtype is None else jnp.dtype(out_dtype))
-    return out.reshape(height, width, 4)
+    return _frame_from_rays(images, depths, width, height, out_dtype)
+
+
+def _render_distributed_sampled(pool, slots, grid_shape, brick_edge: int,
+                                metas, cam: Camera, width: int, height: int,
+                                grange, *, n_samples: int = 64,
+                                impl: backends.BackendLike = "ref",
+                                tf_table: Optional[jnp.ndarray] = None,
+                                density: float = 50.0,
+                                compute_dtype=None, out_dtype=None,
+                                rays=None):
+    """Cache-aware twin of :func:`_render_distributed`: every partition's
+    value samples come from the decoded brick ``pool`` (``slots`` is the
+    (P, nbx, nby, nbz) brick->slot map of a :class:`repro.serving.BrickCache`
+    view) — the frame hot path runs zero INR inference."""
+    tf_table = default_tf() if tf_table is None else tf_table
+    backend = backends.resolve(impl)
+    origins, dirs = make_rays(cam, width, height) if rays is None else rays
+    los, exts, vrs = metas
+
+    def one(slots_p, lo, ext, vr):
+        return _render_partition_sampled(
+            pool, slots_p, grid_shape, brick_edge, lo, ext, (vr[0], vr[1]),
+            grange, origins, dirs, tf_table, n_samples=n_samples,
+            density=density, impl=backend, compute_dtype=compute_dtype)
+
+    images, depths = jax.vmap(one)(slots, los, exts, vrs)
+    return _frame_from_rays(images, depths, width, height, out_dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Deprecated free-function render surface (pre-RenderRequest)
+# --------------------------------------------------------------------------- #
+def render_partition(cfg, params, origin, extent, vrange, grange, origins,
+                     dirs, tf_table, **kw):
+    """Deprecated: internal — use ``repro.api.render(model, RenderRequest())``."""
+    import warnings
+    warnings.warn("repro.core.render.render_partition is internal; use "
+                  "repro.api.render(model, RenderRequest(...))",
+                  DeprecationWarning, stacklevel=2)
+    return _render_partition(cfg, params, origin, extent, vrange, grange,
+                             origins, dirs, tf_table, **kw)
+
+
+def render_distributed(cfg, stacked_params, parts_meta, cam, width, height,
+                       grange, **kw):
+    """Deprecated: internal — use ``repro.api.render(model, RenderRequest())``."""
+    import warnings
+    warnings.warn("repro.core.render.render_distributed is internal; use "
+                  "repro.api.render(model, RenderRequest(...))",
+                  DeprecationWarning, stacklevel=2)
+    return _render_distributed(cfg, stacked_params, parts_meta, cam, width,
+                               height, grange, **kw)

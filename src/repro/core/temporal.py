@@ -142,6 +142,22 @@ class TemporalModelCache:
                 last_err = err
         raise last_err
 
+    def stacked_params(self, timestep: int) -> dict:
+        """Decode EVERY partition's model at ``timestep`` back into the
+        partition-stacked params layout (``tables (P,L,T,F)``) the render
+        path consumes — how :class:`repro.serving.RenderService` rebuilds a
+        full :class:`repro.api.DVNRModel` for a historical request. Shares
+        :meth:`get`'s corrupted-blob fallback per partition."""
+        idx = next((i for i, e in enumerate(self._entries)
+                    if e.timestep == timestep), None)
+        if idx is None:
+            raise KeyError(f"timestep {timestep} not in window {self.timesteps}")
+        P = len(self._entries[idx].blobs)
+        parts = [self.get(timestep, p) for p in range(P)]
+        if P == 1:
+            return jax.tree.map(lambda t: t[None], parts[0])
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *parts)
+
     def window_params(self, partition: int) -> list[dict]:
         """All cached models of one partition, oldest->newest (pathline
         tracing). A corrupted entry is replaced by its nearest older clean

@@ -34,8 +34,9 @@ def render_action(value: DVNRValue, *, width: int = 128, height: int = 128,
                   eye=(1.8, 1.4, 1.6), n_samples: int = 48,
                   impl: backends.BackendLike = "ref") -> jnp.ndarray:
     """Direct volume rendering straight from the DVNR (no decoding)."""
-    return api.render(value.model, eye=eye, width=width, height=height,
-                      n_samples=n_samples, backend=impl)
+    req = api.RenderRequest(camera=api.Camera(eye=tuple(eye)), width=width,
+                            height=height, n_samples=n_samples)
+    return api.render(value.model, req, backend=impl)
 
 
 def isosurface_action(value: DVNRValue, *, iso01: float = 0.5,

@@ -1,1 +1,2 @@
-"""Launch layer: production meshes, multi-pod dry-run, train/serve drivers."""
+"""Launch layer: production meshes, multi-pod dry-run, the train driver and
+the render-service serving driver (``python -m repro.launch.serve``)."""

@@ -1,10 +1,17 @@
-"""Batched serving driver: prefill a prompt batch, then autoregressive decode.
+"""Render-service driver: train a small DVNR, serve a camera orbit through
+:class:`repro.serving.RenderService`, report cache hit rate and frame latency.
 
-Exercises the same prefill/decode paths the dry-run lowers at 32k/500k scale,
-at CPU-friendly sizes. Reports prefill latency and decode tokens/s.
+The serving smoke of the CI full-deps leg; also the quickest way to see the
+brick cache pay off interactively:
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2_0_5b --smoke \
-      --batch 4 --prompt-len 64 --gen 32
+  PYTHONPATH=src python -m repro.launch.serve --smoke
+  PYTHONPATH=src python -m repro.launch.serve --frames 32 --clients 4 \\
+      --width 96 --height 96
+
+Each tick submits one :class:`repro.api.RenderRequest` per client (cameras
+spread along a fixed horizontal orbit), so ``--clients N`` exercises the
+vmapped batch path; ``--no-cache`` renders the same requests through direct
+INR inference — the paired baseline the reported speedup compares against.
 """
 from __future__ import annotations
 
@@ -13,81 +20,80 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-
-from repro.configs import get_config, get_smoke_config
-from repro.configs.base import ShapeConfig
-from repro.launch.mesh import make_mesh_for
-from repro.models import build_model
-from repro.parallel.sharding import Sharder
 
 
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2_0_5b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fixed setup (CI serving smoke)")
+    ap.add_argument("--frames", type=int, default=16,
+                    help="orbit frames (ticks) to serve")
+    ap.add_argument("--clients", type=int, default=2,
+                    help="concurrent requests per tick")
+    ap.add_argument("--width", type=int, default=64)
+    ap.add_argument("--height", type=int, default=64)
+    ap.add_argument("--n-samples", type=int, default=32)
+    ap.add_argument("--grid", type=int, default=24,
+                    help="brick-cache decode resolution per partition")
+    ap.add_argument("--brick-edge", type=int, default=8)
+    ap.add_argument("--backend", default="auto")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="serve through direct INR inference instead")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.frames, args.clients = min(args.frames, 6), min(args.clients, 2)
+        args.width = args.height = min(args.width, 48)
+        args.n_samples, args.grid = min(args.n_samples, 16), min(args.grid, 16)
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    model = build_model(cfg)
-    if model.prefill is None:
-        raise SystemExit(f"{args.arch} has no decode path")
+    from repro import api
+    from repro.configs.dvnr import SMOKE
+    from repro.data.volume import make_partition
+    from repro.serving import RenderService
 
-    n_dev = jax.device_count()
-    mesh = make_mesh_for(n_dev) if n_dev > 1 else None
-    sharder = Sharder(mesh, args.batch)
-
-    max_len = args.prompt_len + args.gen
-    rng = np.random.default_rng(0)
-    shape = ShapeConfig("serve", "prefill", args.prompt_len, args.batch)
-    specs = model.input_specs(shape)
-    batch = {}
-    for k, s in specs.items():
-        if np.issubdtype(np.dtype(s.dtype), np.integer):
-            hi = cfg.vocab if "token" in k else args.prompt_len
-            batch[k] = jnp.asarray(rng.integers(0, hi, s.shape), s.dtype)
-        else:
-            batch[k] = jnp.asarray(rng.standard_normal(s.shape) * 0.02, s.dtype)
-
-    params = model.init(jax.random.PRNGKey(0))
-
-    prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len, sharder, "xla"))
-    decode = jax.jit(lambda p, c, t: model.decode_step(p, c, t, sharder),
-                     donate_argnums=(1,))
-
+    parts = [make_partition("cloverleaf", p, (1, 1, 2), (16, 16, 16), t=0.3)
+             for p in range(2)]
     t0 = time.time()
-    logits, cache = prefill(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+    model, _ = api.train(parts, SMOKE, key=jax.random.PRNGKey(0),
+                         backend=args.backend)
+    train_s = time.time() - t0
 
-    def sample(lg, key):
-        lg = lg[:, -1] if lg.ndim == 3 else lg
-        if args.temperature <= 0:
-            return jnp.argmax(lg, -1).astype(jnp.int32)
-        return jax.random.categorical(key, lg / args.temperature).astype(jnp.int32)
+    svc = RenderService(model, backend=args.backend,
+                        use_cache=not args.no_cache,
+                        cache_kw=dict(grid_shape=(args.grid,) * 3,
+                                      brick_edge=args.brick_edge))
+    cam = api.Camera()
+    tick_ms, checksum = [], 0.0
+    for f in range(args.frames):
+        for c in range(args.clients):
+            angle = 2 * np.pi * (f + c / args.clients) / args.frames
+            svc.submit(api.RenderRequest(
+                camera=cam.orbit(angle), width=args.width, height=args.height,
+                n_samples=args.n_samples))
+        t0 = time.time()
+        responses = svc.tick()
+        tick_ms.append((time.time() - t0) * 1e3)
+        assert len(responses) == args.clients
+        for r in responses:
+            if not np.isfinite(r.frame).all():
+                raise SystemExit(f"non-finite frame at tick {f}")
+            checksum += float(r.frame.mean())
 
-    toks = sample(logits, jax.random.PRNGKey(1))[:, None]
-    out_tokens = [np.asarray(toks)]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = decode(params, cache, toks)
-        toks = sample(logits, jax.random.fold_in(jax.random.PRNGKey(1), i))[:, None]
-        out_tokens.append(np.asarray(toks))
-    jax.block_until_ready(toks)
-    t_decode = time.time() - t0
-    tps = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
-
-    gen = np.concatenate(out_tokens, axis=1)
-    result = {"arch": args.arch, "batch": args.batch,
-              "prompt_len": args.prompt_len, "generated": int(gen.shape[1]),
-              "prefill_s": round(t_prefill, 3),
-              "decode_tokens_per_s": round(tps, 1),
-              "sample_row": gen[0, :8].tolist()}
+    stats = svc.stats()
+    warm = tick_ms[1:] if len(tick_ms) > 1 else tick_ms
+    result = {
+        "mode": "cached" if not args.no_cache else "uncached",
+        "backend": svc.backend.name,
+        "frames": args.frames, "clients": args.clients,
+        "width": args.width, "height": args.height,
+        "train_s": round(train_s, 3),
+        "first_tick_ms": round(tick_ms[0], 2),
+        "warm_tick_ms_median": round(float(np.median(warm)), 2),
+        "cache_hit_rate": round(stats["cache"]["hit_rate"], 4),
+        "cache_pool_bytes": stats["cache"]["pool_bytes"],
+        "served": stats["served"],
+        "checksum": round(checksum / max(stats["served"], 1), 5),
+    }
     print(json.dumps(result))
     return result
 

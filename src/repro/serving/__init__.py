@@ -1,0 +1,11 @@
+"""Cache-accelerated rendering service (cINR-style, arxiv 2504.18001).
+
+``BrickCache`` keeps decoded DVNR bricks resident in a fixed-budget device
+pool keyed ``(level, brick_index, timestep)``; ``RenderService`` coalesces
+concurrent :class:`repro.api.RenderRequest`\\ s into one jitted vmapped batch
+per tick and samples through the cache. Driver: ``python -m repro.launch.serve``.
+"""
+from repro.serving.cache import BrickCache, CacheView
+from repro.serving.service import RenderResponse, RenderService
+
+__all__ = ["BrickCache", "CacheView", "RenderResponse", "RenderService"]

@@ -1,3 +1,3 @@
-from repro.train.step import TrainState, make_train_step, make_serve_steps
+from repro.train.step import TrainState, make_train_step
 
-__all__ = ["TrainState", "make_train_step", "make_serve_steps"]
+__all__ = ["TrainState", "make_train_step"]

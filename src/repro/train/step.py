@@ -1,10 +1,11 @@
-"""Train / serve step factories.
+"""Train step factory.
 
 ``make_train_step``: value_and_grad -> clip -> AdamW, with optional microbatch
 gradient accumulation (lax.scan) and an optional cross-pod gradient-compression
 hook (int8 error-feedback ring; see optim/compressed.py).
 
-``make_serve_steps``: jit-ready prefill and decode closures.
+(The LLM-era ``make_serve_steps`` prefill/decode closures are gone: serving
+in this repo means the render service — see ``repro.serving``.)
 """
 from __future__ import annotations
 
@@ -105,15 +106,3 @@ def make_train_step(model, opt_cfg: OptConfig, sharder=None, impl: str = "xla",
 
     step.optimizer = opt
     return step
-
-
-def make_serve_steps(model, sharder=None, impl: str = "xla", seq_len: int = 0):
-    """Returns (prefill_fn, decode_fn) closures ready for jit."""
-
-    def prefill_fn(params, batch):
-        return model.prefill(params, batch, seq_len, sharder, impl)
-
-    def decode_fn(params, cache, tokens):
-        return model.decode_step(params, cache, tokens, sharder)
-
-    return prefill_fn, decode_fn

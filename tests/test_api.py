@@ -123,7 +123,8 @@ def test_train_render_isosurface_through_facade():
     assert model.stacked and model.n_partitions == 2
     assert info["steps"] == 8 and info["train_time_s"] > 0
     assert model.grange[1] >= model.grange[0]
-    img = api.render(model, width=16, height=16, n_samples=8, backend="ref")
+    img = api.render(model, api.RenderRequest(width=16, height=16, n_samples=8),
+                     backend="ref")
     assert img.shape == (16, 16, 4)
     assert np.isfinite(np.asarray(img)).all()
     pts = api.isosurface(model, 0.5, resolution=8, backend="ref")

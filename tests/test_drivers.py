@@ -1,8 +1,6 @@
-"""End-to-end drivers: train (with checkpoint/resume) and serve, smoke scale."""
-import json
-
+"""End-to-end drivers: train (with checkpoint/resume) and the render-service
+serving driver, smoke scale."""
 import numpy as np
-import pytest
 
 from repro.launch import serve as serve_mod
 from repro.launch import train as train_mod
@@ -20,13 +18,24 @@ def test_train_driver_runs_and_resumes(tmp_path):
     assert r2["history"][0]["step"] > 4        # resumed, not restarted
 
 
-@pytest.mark.parametrize("arch", ["qwen2_0_5b", "zamba2_1_2b"])
-def test_serve_driver_generates(arch):
-    r = serve_mod.main(["--arch", arch, "--smoke", "--batch", "2",
-                        "--prompt-len", "16", "--gen", "4"])
-    assert r["generated"] == 4
-    assert r["decode_tokens_per_s"] > 0
-    assert all(0 <= t for t in r["sample_row"])
+def test_serve_driver_serves_cached_frames():
+    r = serve_mod.main(["--smoke", "--backend", "ref"])
+    assert r["mode"] == "cached"
+    assert r["served"] == r["frames"] * r["clients"]
+    # after the first tick fills the pool, every later ensure() is all hits
+    assert r["cache_hit_rate"] > 0.5
+    assert np.isfinite(r["checksum"]) and r["checksum"] > 0
+    assert r["warm_tick_ms_median"] < r["first_tick_ms"]
+
+
+def test_serve_driver_uncached_baseline_matches():
+    r_c = serve_mod.main(["--smoke", "--backend", "ref", "--frames", "2"])
+    r_u = serve_mod.main(["--smoke", "--backend", "ref", "--frames", "2",
+                          "--no-cache"])
+    assert r_u["mode"] == "uncached" and r_u["cache_hit_rate"] == 0.0
+    # same model, same orbit — the two paths sample different value sources
+    # (brick pool vs INR inference) so frames agree only approximately
+    assert abs(r_c["checksum"] - r_u["checksum"]) < 0.05
 
 
 def test_train_step_grad_compress_threads_residual():

@@ -214,11 +214,13 @@ def test_decode_render_evaluate_output_dtypes():
     assert dec_bf16.dtype == jnp.bfloat16
     assert one.apply(jnp.zeros((4, 3)),
                      compute_dtype="bfloat16").dtype == jnp.bfloat16
-    img = api.render(model, width=16, height=16, n_samples=8,
-                     compute_dtype="bfloat16", out_dtype="bfloat16")
+    img = api.render(model, api.RenderRequest(
+        width=16, height=16, n_samples=8,
+        compute_dtype="bfloat16", out_dtype="bfloat16"))
     assert img.dtype == jnp.bfloat16 and img.shape == (16, 16, 4)
     # the bf16 render sees the same field (tf/compositing stay f32 inside)
-    img32 = api.render(model, width=16, height=16, n_samples=8)
+    img32 = api.render(model, api.RenderRequest(width=16, height=16,
+                                                n_samples=8))
     np.testing.assert_allclose(np.asarray(img, np.float32),
                                np.asarray(img32), atol=0.05)
     ev = info["trainer"].evaluate(info["state"],

@@ -88,8 +88,8 @@ _RENDER_STEP_SCRIPT = textwrap.dedent("""
     from repro.launch.mesh import build_mesh
     from repro.configs.dvnr import SMOKE
     from repro.core.inr import init_inr
-    from repro.core.render import (Camera, default_tf, make_distributed_render_step,
-                                   make_rays, render_distributed)
+    from repro.core.render import (Camera, _render_distributed, default_tf,
+                                   make_distributed_render_step, make_rays)
 
     mesh = build_mesh(np.asarray(jax.devices()).reshape(2, 2), ("data", "model"))
     cfg = SMOKE
@@ -105,8 +105,8 @@ _RENDER_STEP_SCRIPT = textwrap.dedent("""
         los.append(lo); exts.append((0.5, 0.5, 1.0)); vrs.append((0.0, 1.0))
     cam = Camera(eye=(1.8, 1.4, 1.6))
     W = H = 16   # 256 rays, divisible by 4 devices
-    ref = render_distributed(cfg, params, metas, cam, W, H, (0.0, 1.0),
-                             n_samples=8)
+    ref = _render_distributed(cfg, params, metas, cam, W, H, (0.0, 1.0),
+                              n_samples=8)
     step = make_distributed_render_step(cfg, mesh, n_samples=8)
     origins, dirs = make_rays(cam, W, H)
     with mesh:

@@ -1,0 +1,268 @@
+"""repro.serving: brick cache residency/eviction, cache-aware rendering,
+the batched render service, and the RenderRequest API surface."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.configs.dvnr import SMOKE
+from repro.core.render import sample_bricks
+from repro.data.volume import sample_trilinear
+from repro.serving import BrickCache, RenderService
+
+
+def _metas(P=2):
+    return tuple({"origin": (0.0, 0.0, p / P), "extent": (1.0, 1.0, 1.0 / P),
+                  "vmin": 0.0, "vmax": 1.0} for p in range(P))
+
+
+@pytest.fixture(scope="module")
+def model():
+    return api.DVNRModel.init(SMOKE, jax.random.PRNGKey(0), n_partitions=2,
+                              parts_meta=_metas())
+
+
+# --------------------------------------------------------------------------- #
+# sample_bricks vs the canonical trilinear sampler
+# --------------------------------------------------------------------------- #
+def test_sample_bricks_matches_sample_trilinear_bitexact():
+    rng = np.random.default_rng(0)
+    grid_shape, edge = (20, 12, 16), 8
+    grid = rng.standard_normal(grid_shape).astype(np.float32)
+    nb = tuple(-(-s // edge) for s in grid_shape)
+    E = edge + 1
+    pool = np.empty((int(np.prod(nb)), E, E, E), np.float32)
+    slots = np.arange(int(np.prod(nb)), dtype=np.int32).reshape(nb)
+    for bx in range(nb[0]):
+        for by in range(nb[1]):
+            for bz in range(nb[2]):
+                ix = np.minimum(bx * edge + np.arange(E), grid_shape[0] - 1)
+                iy = np.minimum(by * edge + np.arange(E), grid_shape[1] - 1)
+                iz = np.minimum(bz * edge + np.arange(E), grid_shape[2] - 1)
+                pool[slots[bx, by, bz]] = grid[np.ix_(ix, iy, iz)]
+    coords = rng.uniform(0, 1, (512, 3)).astype(np.float32)
+    coords = np.concatenate([coords, [[0, 0, 0], [1, 1, 1], [0.5, 1, 0]]])
+    ref = sample_trilinear(jnp.asarray(grid), jnp.asarray(coords), ghost=0)
+    got = sample_bricks(jnp.asarray(pool), jnp.asarray(slots),
+                        jnp.asarray(coords), grid_shape, edge)
+    assert (np.asarray(got) == np.asarray(ref)).all()
+
+
+# --------------------------------------------------------------------------- #
+# residency, stats, eviction
+# --------------------------------------------------------------------------- #
+def _tiny_cache(model, n_slots, **kw):
+    c = BrickCache(model.cfg, grid_shape=(8, 8, 8), brick_edge=8,
+                   budget_bytes=None, trace=True, backend="ref", **kw)
+    # one brick per partition at this geometry; shrink to exactly n_slots
+    return BrickCache(model.cfg, grid_shape=(8, 8, 8), brick_edge=8,
+                      budget_bytes=n_slots * c.slot_bytes, trace=True,
+                      backend="ref", **kw)
+
+
+def _run_trace(cache, model):
+    for ts in (0, 1, 0, 1, 1):
+        cache.ensure(model, timestep=ts)
+    return list(cache.events), dict(cache.stats())
+
+
+def test_cache_trace_determinism_and_novelty_eviction(model):
+    # 3 slots, working set of 2 bricks per (level, timestep): alternating
+    # timesteps force evictions; stale-timestep bricks must go first
+    c1, c2 = _tiny_cache(model, 3), _tiny_cache(model, 3)
+    ev1, st1 = _run_trace(c1, model)
+    ev2, st2 = _run_trace(c2, model)
+    assert ev1 == ev2 and st1 == st2          # fixed trace -> fixed behavior
+    assert st1["evictions"] > 0
+    evicted = [k for kind, k in ev1 if kind == "evict"]
+    # every victim belonged to the OTHER timestep (novelty-prioritized LRU)
+    fills = {k: i for i, (kind, k) in enumerate(ev1) if kind == "fill"}
+    for kind, k in ev1:
+        if kind == "evict":
+            assert k in fills
+    assert all(k[2] in (0, 1) for k in evicted)
+    # final ensure(ts=1) was all hits: both bricks resident
+    last_two = ev1[-2:]
+    assert all(kind == "hit" for kind, _ in last_two)
+    assert st1["lookups"] == st1["hits"] + st1["misses"]
+    assert st1["hit_rate"] == st1["hits"] / st1["lookups"]
+
+
+def test_cache_budget_never_exceeded_closed_form(model):
+    cache = _tiny_cache(model, 3)
+    assert cache.pool_bytes == cache.n_slots * cache.slot_bytes
+    assert cache.pool_bytes <= cache.budget_bytes
+    assert cache.slot_bytes == (cache.brick_edge + 1) ** 3 * 4
+    for ts in range(5):
+        cache.ensure(model, timestep=ts)
+        # the live device pool IS the closed form — never reallocated
+        assert cache.pool.nbytes == cache.pool_bytes
+        assert cache.stats()["resident"] <= cache.n_slots
+    # a working set larger than the pool is a hard error, not silent thrash
+    small = _tiny_cache(model, 1)
+    with pytest.raises(ValueError, match="exceeds"):
+        small.ensure(model)
+
+
+def test_cache_level_of_detail_geometry(model):
+    cache = BrickCache(model.cfg, grid_shape=(32, 32, 32), brick_edge=16,
+                       backend="ref")
+    assert cache.level_grid(0) == (32, 32, 32)
+    assert cache.level_grid(1) == (16, 16, 16)
+    assert cache.level_grid(4) == (2, 2, 2)
+    assert cache.bricks_per_partition(0) == 8
+    assert cache.bricks_per_partition(1) == 1
+    v0 = cache.ensure(model, level=1)
+    assert v0.slots.shape == (2, 1, 1, 1)
+    assert cache.stats()["fills"] == 2
+
+
+# --------------------------------------------------------------------------- #
+# cached-vs-uncached frames
+# --------------------------------------------------------------------------- #
+def _req(w=24, h=24, s=12, **kw):
+    return api.RenderRequest(width=w, height=h, n_samples=s, **kw)
+
+
+def test_cached_frames_bitexact_f32_cold_vs_warm(model):
+    kw = dict(grid_shape=(16, 16, 16), brick_edge=8, backend="ref")
+    warm_cache = BrickCache(model.cfg, **kw)
+    api.render(model, _req(), backend="ref", cache=warm_cache)  # fill
+    warm = api.render(model, _req(), backend="ref", cache=warm_cache)
+    assert warm_cache.stats()["hits"] > 0
+    cold_cache = BrickCache(model.cfg, **kw)                    # decode fresh
+    cold = api.render(model, _req(), backend="ref", cache=cold_cache)
+    assert (np.asarray(warm) == np.asarray(cold)).all()
+    assert np.asarray(warm).dtype == np.float32
+
+
+def test_cached_frames_bf16_within_tolerance(model):
+    kw = dict(grid_shape=(16, 16, 16), brick_edge=8, backend="ref",
+              dtype="bfloat16", compute_dtype="bfloat16")
+    warm_cache = BrickCache(model.cfg, **kw)
+    api.render(model, _req(), backend="ref", cache=warm_cache)
+    warm = api.render(model, _req(), backend="ref", cache=warm_cache)
+    cold = api.render(model, _req(), backend="ref",
+                      cache=BrickCache(model.cfg, **kw))
+    np.testing.assert_allclose(np.asarray(warm), np.asarray(cold), atol=1e-3)
+    # the bf16 pool renders the same field as the f32 pool, loosely
+    f32 = api.render(model, _req(), backend="ref", cache=BrickCache(
+        model.cfg, grid_shape=(16, 16, 16), brick_edge=8, backend="ref"))
+    np.testing.assert_allclose(np.asarray(warm), np.asarray(f32), atol=0.05)
+
+
+def test_cached_render_approximates_direct_inr(model):
+    # the brick pool is a resampling of the INR — frames agree to grid error
+    direct = api.render(model, _req(), backend="ref")
+    cached = api.render(model, _req(), backend="ref", cache=BrickCache(
+        model.cfg, grid_shape=(32, 32, 32), brick_edge=8, backend="ref"))
+    assert np.abs(np.asarray(direct) - np.asarray(cached)).max() < 0.1
+
+
+# --------------------------------------------------------------------------- #
+# render service: batching, parity, temporal
+# --------------------------------------------------------------------------- #
+def test_service_batched_multi_camera_parity(model):
+    svc = RenderService(model, backend="ref",
+                        cache_kw=dict(grid_shape=(16, 16, 16), brick_edge=8))
+    cam = api.Camera()
+    reqs = [_req(camera=cam.orbit(a)) for a in (0.0, 1.1, 2.2)]
+    for r in reqs:
+        svc.submit(r)
+    batch = svc.tick()
+    assert [r.ticket for r in batch] == [0, 1, 2]
+    assert all(r.batch_size == 3 for r in batch)
+    for i, r in enumerate(reqs):
+        single = svc.render(r)                  # per-request path, same cache
+        np.testing.assert_allclose(batch[i].frame, single, atol=1e-5)
+    # mixed shapes split into separate groups but all serve in one tick
+    svc.submit(_req(camera=cam))
+    svc.submit(_req(w=16, h=16, s=8, camera=cam))
+    out = svc.tick()
+    assert len(out) == 2
+    assert {r.frame.shape for r in out} == {(24, 24, 4), (16, 16, 4)}
+
+
+def test_service_temporal_cache_integration(model):
+    from repro.core.temporal import TemporalModelCache
+
+    tc = TemporalModelCache(SMOKE, window=2)
+    # raw-f16 blobs: the error-bounded codecs would round the small bump away
+    tc.append(0, model.stacked_params(), compress=False)
+    bumped = jax.tree.map(lambda t: t + 0.05, model.stacked_params())
+    tc.append(1, bumped, compress=False)
+    sp = tc.stacked_params(1)
+    assert sp["tables"].shape == model.stacked_params()["tables"].shape
+    svc = RenderService(temporal=tc, cfg=SMOKE, parts_meta=_metas(),
+                        backend="ref",
+                        cache_kw=dict(grid_shape=(16, 16, 16), brick_edge=8))
+    f0 = svc.render(_req(timestep=0))
+    f1 = svc.render(_req(timestep=1))
+    assert np.isfinite(f0).all() and np.isfinite(f1).all()
+    assert not np.array_equal(f0, f1)           # different weights, cached apart
+    assert svc.warm_timesteps == [0, 1]
+    svc.render(_req(timestep=0))                # warm-model LRU hit
+    assert svc.warm_timesteps == [1, 0]
+
+
+# --------------------------------------------------------------------------- #
+# API surface: request objects, deprecation shim, meta-array memoization
+# --------------------------------------------------------------------------- #
+def test_render_request_objects_frozen():
+    cam = api.Camera(eye=(2.0, 0.5, 0.5))
+    req = api.RenderRequest(camera=cam, width=8)
+    with pytest.raises((AttributeError, TypeError)):
+        cam.eye = (0, 0, 0)
+    with pytest.raises((AttributeError, TypeError)):
+        req.width = 9
+    assert api.TransferFunction().table_shape is None
+    assert api.TransferFunction(table=np.zeros((7, 4))).table_shape == (7, 4)
+    assert req.camera is cam and req.tf.density == 50.0
+
+
+def test_legacy_render_kwargs_shim_roundtrip(model):
+    new = api.render(model, api.RenderRequest(
+        camera=api.Camera(eye=(2.0, 1.0, 1.2)), width=16, height=16,
+        n_samples=8), backend="ref")
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old = api.render(model, eye=(2.0, 1.0, 1.2), width=16, height=16,
+                         n_samples=8, backend="ref")
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    assert (np.asarray(new) == np.asarray(old)).all()
+    # both forms at once is an error, not a silent pick
+    with pytest.raises(TypeError, match="not both"):
+        api.render(model, api.RenderRequest(), width=16)
+    with pytest.raises(TypeError, match="unexpected"):
+        api.render(model, wdith=16)
+    # the no-argument default path warns nothing
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        api.render(model, api.RenderRequest(width=8, height=8, n_samples=4),
+                   backend="ref")
+
+
+def test_meta_arrays_derived_once_across_renders(model, monkeypatch):
+    calls = {"n": 0}
+    orig = api.DVNRModel._derive_meta_arrays
+
+    def spy(self):
+        calls["n"] += 1
+        return orig(self)
+
+    monkeypatch.setattr(api.DVNRModel, "_derive_meta_arrays", spy)
+    m = api.DVNRModel.init(SMOKE, jax.random.PRNGKey(1), n_partitions=2,
+                           parts_meta=_metas())
+    for _ in range(3):
+        api.render(m, _req(w=8, h=8, s=4), backend="ref")
+    assert calls["n"] == 1                      # memoized, not per render
+    los, exts, vrs = m.meta_arrays()
+    assert los.shape == (2, 3) and vrs.shape == (2, 2)
+    # pytree round trips drop the memo but re-derive lazily on demand
+    leaves, treedef = jax.tree.flatten(m)
+    m2 = jax.tree.unflatten(treedef, leaves)
+    assert m2.meta_arrays()[0].shape == (2, 3)
+    assert calls["n"] == 2
