@@ -69,7 +69,28 @@ def run(quick: bool = False) -> dict:
         print(f"[{r['kernel']}] {r['shape']}: max_err={r['max_err']:.2e} "
               f"roofline={r['roofline_us']:.1f}us")
         assert r["max_err"] < 2e-2, r
-    out = {"rows": rows}
+
+    # grid-exact static traffic model (repro.analysis.traffic) alongside the
+    # hand-derived roofline terms above: per-kernel HBM bytes, FLOPs and
+    # arithmetic intensity from the actual BlockSpec schedules — the numbers
+    # the trace-driven tuner (ROADMAP) calibrates against measured time
+    from repro.analysis.traffic import estimate_traffic_jaxpr
+
+    jx = jax.make_jaxpr(
+        lambda c, t, x, w0, w1, w2, rg: (
+            fused_mlp(hash_encode(c, t, res, "pallas"), [w0, w1, w2],
+                      "pallas"),
+            composite(rg, "pallas")))(coords, tables, x, *ws, rgba)
+    static = [dict(kernel=kt.kernel, grid=list(kt.grid),
+                   hbm_bytes=int(kt.hbm_bytes),
+                   ideal_bytes=int(kt.ideal_bytes), flops=int(kt.flops),
+                   streaming_factor=round(kt.streaming_factor, 3),
+                   intensity=round(kt.intensity, 2))
+              for kt in estimate_traffic_jaxpr(jx)]
+    for s in static:
+        print(f"[static] {s['kernel']} grid={s['grid']}: "
+              f"{s['streaming_factor']}x ideal, {s['intensity']} FLOP/B")
+    out = {"rows": rows, "static_traffic": static}
     save_result("kernels", out)
     return out
 

@@ -16,11 +16,20 @@ check                        level     invariant
 ``rng_gather_placement``     jaxpr     with fuse_sampling=on: no RNG primitive and (on
                                        pallas legs) no gather outside the fused op
 ``donation``                 lowered   the chunked carry is actually donated (aliased)
+``grid_write_safety``        jaxpr     every pallas output block written by exactly one
+                                       program instance (or a declared accumulate /
+                                       last-write pattern); no uncovered outputs, no
+                                       undeclared re-fetches, owner sweeps cover all
+``hbm_traffic``              jaxpr     bytes-moved / FLOP / arithmetic-intensity model
+                                       per kernel; fails past the declared multiple of
+                                       ideal traffic
 ============================ ========= ==================================================
 
-Three entry points:
+Four entry points:
 
 - CLI: ``python -m repro.analysis --config quickstart --backend ref``
+- lockfile: ``python -m repro.analysis lock write|verify`` pins every check's
+  fingerprint in ``ANALYSIS_LOCK.json`` (CI diffs against it)
 - pytest: ``assert_clean(fn, *args, checks=[...], ...)``
 - trainer startup: ``DVNRConfig.static_checks = "off" | "warn" | "error"``
   (``api.train`` refuses violating configs under ``"error"``)
@@ -49,6 +58,21 @@ _LAZY = {
     "KernelFootprint": "repro.analysis.vmem",
     "estimate_jaxpr": "repro.analysis.vmem",
     "footprint_of": "repro.analysis.vmem",
+    # grid discipline / traffic model
+    "GridDiscipline": "repro.analysis.grid",
+    "register_discipline": "repro.analysis.grid",
+    "get_discipline": "repro.analysis.grid",
+    "KernelGridAnalysis": "repro.analysis.grid",
+    "analyze_grid_jaxpr": "repro.analysis.grid",
+    "KernelTraffic": "repro.analysis.traffic",
+    "estimate_traffic_jaxpr": "repro.analysis.traffic",
+    # lockfile
+    "LOCK_MATRIX": "repro.analysis.lock",
+    "compute_lock": "repro.analysis.lock",
+    "write_lock": "repro.analysis.lock",
+    "verify_lock": "repro.analysis.lock",
+    "diff_locks": "repro.analysis.lock",
+    "fingerprint_report": "repro.analysis.lock",
     # checks / runner (importing repro.analysis.checks registers the builtins)
     "CheckContext": "repro.analysis.checks",
     "run_checks": "repro.analysis.checks",
@@ -59,6 +83,8 @@ _LAZY = {
     "build_trainer": "repro.analysis.programs",
     "trainer_programs": "repro.analysis.programs",
     "render_program": "repro.analysis.programs",
+    "cached_render_program": "repro.analysis.programs",
+    "serving_tick_program": "repro.analysis.programs",
     "available_configs": "repro.analysis.programs",
     "get_config": "repro.analysis.programs",
 }

@@ -2,7 +2,7 @@
 
 Examples::
 
-    # all five checks over the quickstart config's train/render programs
+    # all checks over the quickstart config's train/render/serving programs
     python -m repro.analysis --config quickstart --backend ref
     python -m repro.analysis --config quickstart --backend pallas
 
@@ -14,9 +14,15 @@ Examples::
     python -m repro.analysis --config smoke --max-level jaxpr \\
         --checks vmem_budget
 
-    # the known over-budget 256^3 sampling config (exits 1 with the
-    # per-buffer VMEM bill)
+    # the production-scale 256^3 gate (brick-tiled sampling must fit)
     python -m repro.analysis --config production256 --backend pallas
+
+    # the committed lockfile (see repro.analysis.lock)
+    python -m repro.analysis lock write
+    python -m repro.analysis lock verify --backend pallas
+
+Exit codes: 0 clean, 1 violations/drift, 2 usage errors (unknown config or
+check name, missing/malformed lockfile).
 
 ``--devices N`` forces N fake CPU devices (sets ``XLA_FLAGS`` BEFORE jax is
 imported — why this module keeps all jax imports inside ``main``); with more
@@ -30,13 +36,18 @@ import argparse
 import os
 import sys
 
+#: exit code for usage errors (unknown config/check, bad lockfile) — distinct
+#: from 1 so CI can tell "the invariants failed" from "the invocation is wrong"
+EXIT_USAGE = 2
+
 
 def _parse_args(argv):
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="Static verifier for the DVNR stack's systems invariants "
                     "(zero communication, VMEM budget, precision flow, "
-                    "RNG/gather placement, donation).")
+                    "RNG/gather placement, donation, grid write safety, "
+                    "HBM traffic).")
     ap.add_argument("--config", default="quickstart",
                     help="named analysis config (see --list-configs)")
     ap.add_argument("--backend", default="auto",
@@ -59,12 +70,66 @@ def _parse_args(argv):
     ap.add_argument("--mesh", default="auto", choices=("auto", "off"),
                     help="shard the train programs over all devices "
                          "(auto: when --devices > 1)")
+    ap.add_argument("--report-dir", default=None,
+                    help="also write each backend leg's rendered reports to "
+                         "DIR/<config>.<backend>.txt (CI artifact upload)")
     ap.add_argument("--list-checks", action="store_true")
     ap.add_argument("--list-configs", action="store_true")
     return ap.parse_args(argv)
 
 
+def _parse_lock_args(argv):
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis lock",
+        description="Write or verify the committed analysis lockfile "
+                    "(pinned fingerprints of every check over the lock "
+                    "matrix; see repro.analysis.lock).")
+    ap.add_argument("action", choices=("write", "verify"))
+    ap.add_argument("--path", default=None,
+                    help="lockfile path (default: ANALYSIS_LOCK.json)")
+    ap.add_argument("--backend", default=None,
+                    help="verify only these backend(s), comma-separated "
+                         "(a CI leg checks its own backend; write always "
+                         "covers the full matrix)")
+    return ap.parse_args(argv)
+
+
+def _lock_main(argv) -> int:
+    args = _parse_lock_args(argv)
+    from repro.analysis import lock as _lock
+
+    path = args.path or _lock.DEFAULT_LOCK_PATH
+    progress = lambda msg: print(f"[lock] {msg}", flush=True)  # noqa: E731
+    if args.action == "write":
+        lock = _lock.write_lock(path, progress=progress)
+        print(f"wrote {path}: {len(lock['entries'])} program fingerprints")
+        return 0
+    backends = args.backend.split(",") if args.backend else None
+    try:
+        drift = _lock.verify_lock(path, backends=backends, progress=progress)
+    except FileNotFoundError:
+        print(f"error: lockfile {path!r} not found — generate it with "
+              f"`python -m repro.analysis lock write`", file=sys.stderr)
+        return EXIT_USAGE
+    except ValueError as e:
+        print(f"error: malformed lockfile: {e}", file=sys.stderr)
+        return EXIT_USAGE
+    if drift:
+        print(f"analysis lock DRIFT ({len(drift)} difference(s) vs {path}):")
+        for line in drift:
+            print(f"  {line}")
+        print("if the change is intentional, regenerate with "
+              "`python -m repro.analysis lock write` and commit the diff")
+        return 1
+    print(f"analysis lock verified against {path}"
+          + (f" (backends: {args.backend})" if args.backend else ""))
+    return 0
+
+
 def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv and argv[0] == "lock":
+        return _lock_main(argv[1:])
     args = _parse_args(argv)
 
     if args.devices > 1 and "XLA_FLAGS" not in os.environ:
@@ -84,6 +149,19 @@ def main(argv=None) -> int:
         print("\n".join(available_configs()))
         return 0
 
+    if args.config not in available_configs():
+        print(f"error: unknown config {args.config!r}; available: "
+              f"{', '.join(available_configs())}", file=sys.stderr)
+        return EXIT_USAGE
+    checks = args.checks.split(",") if args.checks else None
+    if checks:
+        unknown = sorted(set(checks) - set(available_checks()))
+        if unknown:
+            print(f"error: unknown check(s): {', '.join(unknown)}; "
+                  f"available: {', '.join(available_checks())}",
+                  file=sys.stderr)
+            return EXIT_USAGE
+
     mesh = None
     n_partitions = args.partitions
     if args.mesh == "auto" and args.devices > 1:
@@ -101,11 +179,11 @@ def main(argv=None) -> int:
 
     local_shape = (tuple(int(d) for d in args.local_shape.split(","))
                    if args.local_shape else None)
-    checks = args.checks.split(",") if args.checks else None
 
     ok = True
     for backend in args.backend.split(","):
         print(f"== backend {backend} ==")
+        leg_lines = []
         try:
             reports = analyze_config(
                 args.config, backend=backend, local_shape=local_shape,
@@ -115,11 +193,20 @@ def main(argv=None) -> int:
             # build-time rejection (e.g. the over-budget sampling kernel)
             # counts as a finding, not a crash: report it and fail the run
             print(f"REJECTED at trainer build time:\n{e}")
+            leg_lines.append(f"REJECTED at trainer build time:\n{e}")
             ok = False
-            continue
+            reports = []
         for rep in reports:
-            print(rep.render())
+            text = rep.render()
+            print(text)
+            leg_lines.append(text)
             ok = ok and rep.passed
+        if args.report_dir:
+            os.makedirs(args.report_dir, exist_ok=True)
+            out = os.path.join(args.report_dir,
+                               f"{args.config}.{backend}.txt")
+            with open(out, "w") as f:
+                f.write("\n".join(leg_lines) + "\n")
     print("static analysis:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 

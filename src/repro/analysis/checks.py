@@ -1,4 +1,4 @@
-"""The five named checks of the static verifier, plus ``run_checks`` /
+"""The named checks of the static verifier, plus ``run_checks`` /
 ``assert_clean`` (the pytest integration).
 
 Every check is a structured walk over one of the program artifacts of
@@ -21,7 +21,14 @@ Registered checks (see README "Static analysis" for the user-facing table):
                          outside the fused op, and (pallas legs) no gather
                          outside the ``pallas_call``;
 - ``donation``           the donated carry (params/opt of the scan-fused
-                         chunk) is actually aliased input->output by lowering.
+                         chunk) is actually aliased input->output by lowering;
+- ``grid_write_safety``  every ``pallas_call`` output block is written by
+                         exactly one program instance (or a declared
+                         accumulate/last-write pattern); no uncovered output
+                         regions, no undeclared input re-fetches, declared
+                         owner sweeps cover every block;
+- ``hbm_traffic``        no kernel streams more than its declared multiple of
+                         the ideal HBM traffic (roofline bytes/FLOPs model).
 """
 from __future__ import annotations
 
@@ -54,6 +61,7 @@ class CheckContext:
     expect_pallas: bool = False               # program must contain pallas_call
     donate_argnums: Tuple[int, ...] = ()
     vmem_limit_bytes: Optional[int] = None    # override backend budget
+    expect_master_state: Optional[bool] = None  # None -> precision.needs_master
     extra: dict = field(default_factory=dict)
 
     def resolved_vmem_limit(self) -> Optional[int]:
@@ -109,7 +117,9 @@ def check_zero_collectives(program: ProgramArtifacts,
                 "zero_collectives",
                 f"post-SPMD HLO op {op.opcode!r} ({op.name})", cname))
     return CheckResult("zero_collectives", not violations, violations,
-                       details={"note": f"{n_ops} HLO ops walked"})
+                       details={"note": f"{n_ops} HLO ops walked",
+                                "n_hlo_ops": n_ops,
+                                "n_collectives": len(violations)})
 
 
 # --------------------------------------------------------------------------- #
@@ -181,8 +191,13 @@ def check_precision_flow(program: ProgramArtifacts,
                 site.path or "<top>"))
     # declared f32 master/accumulator state: under a mixed policy every
     # narrow (param-dtype) tensor output must be shadowed by a master-dtype
-    # output of the same shape (the f32 master + moments the policy promises)
-    if prec.needs_master:
+    # output of the same shape (the f32 master + moments the policy promises).
+    # Inference-only programs (render/serving) carry no optimizer state —
+    # their contexts set expect_master_state=False to disable the shadow rule
+    # without weakening the matmul-dtype rule above.
+    needs_master = (ctx.expect_master_state if ctx.expect_master_state
+                    is not None else prec.needs_master)
+    if needs_master:
         pdt, mdt = jnp.dtype(prec.param_dtype), jnp.dtype(prec.master_dtype)
         out_avals = [getattr(v, "aval", v) for v in program.jaxpr.jaxpr.outvars]
         master_shapes = {tuple(a.shape) for a in out_avals
@@ -197,7 +212,9 @@ def check_precision_flow(program: ProgramArtifacts,
                     f"{mdt.name} master/accumulate", "<outputs>"))
     return CheckResult("precision_flow", not violations, violations,
                        details={"note": f"{n_dots} matmul(s) checked against "
-                                        f"{cdt.name}"})
+                                        f"{cdt.name}",
+                                "n_matmuls": n_dots,
+                                "compute_dtype": cdt.name})
 
 
 # --------------------------------------------------------------------------- #
@@ -283,7 +300,128 @@ def check_donation(program: ProgramArtifacts, ctx: CheckContext) -> CheckResult:
             "<entry>"))
     return CheckResult("donation", not violations, violations,
                        details={"note": f"{len(flat_idx) - len(missing)}/"
-                                        f"{len(flat_idx)} buffers aliased"})
+                                        f"{len(flat_idx)} buffers aliased",
+                                "aliased_buffers": len(flat_idx) - len(missing),
+                                "donated_buffers": len(flat_idx)})
+
+
+# --------------------------------------------------------------------------- #
+# (6) grid write-race / coverage detector
+# --------------------------------------------------------------------------- #
+@register_check(
+    "grid_write_safety", level="jaxpr",
+    description="every pallas_call output block is written by exactly one "
+                "program instance (or a declared accumulate/last-write "
+                "pattern); no uncovered outputs, no undeclared re-fetches, "
+                "declared owner sweeps cover every block")
+def check_grid_write_safety(program: ProgramArtifacts,
+                            ctx: CheckContext) -> CheckResult:
+    from repro.analysis import grid as _grid
+
+    _grid.ensure_declarations()
+    analyses = _grid.analyze_jaxpr(program.jaxpr)
+    violations, kernels = [], {}
+    for ka in analyses:
+        kernels[ka.kernel] = ka
+        if ka.skipped:
+            continue
+        disc = _grid.get_discipline(ka.kernel)
+        for acc in ka.operands:
+            loc = f"{ka.kernel}:{acc.name}"
+            if not acc.evaluable:
+                # defensive path: never seen on in-repo kernels; surfaced in
+                # the details so a lock diff shows it appearing
+                continue
+            if acc.oob:
+                violations.append(Violation(
+                    "grid_write_safety",
+                    f"index map emits out-of-range block coordinates over "
+                    f"grid {ka.grid} (array {acc.array_shape}, block "
+                    f"{acc.block_shape})", loc))
+                continue
+            if acc.kind == "out":
+                if acc.refetched:
+                    violations.append(Violation(
+                        "grid_write_safety",
+                        f"WRITE RACE: output block revisited in "
+                        f"{acc.fetches} non-adjacent runs over "
+                        f"{acc.distinct} distinct block(s) — the pipeline "
+                        f"writes the block back between visits, so later "
+                        f"visits clobber earlier ones (grid {ka.grid})", loc))
+                elif acc.multi_visited and \
+                        _grid.declared(disc, "multi_write", acc.name) is None:
+                    violations.append(Violation(
+                        "grid_write_safety",
+                        f"undeclared multi-writer: output block held across "
+                        f"{acc.n_points} grid steps with only {acc.fetches} "
+                        f"write-back(s); declare it "
+                        f"'accumulate' or 'last_write' via "
+                        f"analysis.grid.register_discipline({ka.kernel!r})",
+                        loc))
+                if acc.n_blocks_total and acc.uncovered:
+                    violations.append(Violation(
+                        "grid_write_safety",
+                        f"uncovered output region: only {acc.distinct}/"
+                        f"{acc.n_blocks_total} output blocks are ever "
+                        f"written (the rest keep uninitialized memory)", loc))
+            else:
+                if acc.refetched and \
+                        _grid.declared(disc, "input_refetch", acc.name) is None:
+                    violations.append(Violation(
+                        "grid_write_safety",
+                        f"undeclared input re-fetch: {acc.fetches} DMA "
+                        f"fetches for {acc.distinct} distinct block(s) — "
+                        f"more traffic than the double-buffer schedule "
+                        f"implies; declare it via "
+                        f"analysis.grid.register_discipline({ka.kernel!r}, "
+                        f"input_refetch=...)", loc))
+                if _grid.declared(disc, "full_coverage_inputs", acc.name) \
+                        and acc.n_blocks_total \
+                        and acc.distinct < acc.n_blocks_total:
+                    violations.append(Violation(
+                        "grid_write_safety",
+                        f"declared owner sweep covers only {acc.distinct}/"
+                        f"{acc.n_blocks_total} input blocks — some owner "
+                        f"bricks are never visited, their voxels never "
+                        f"banked", loc))
+    n_ops = sum(len(ka.operands) for ka in analyses)
+    skipped = [ka.kernel for ka in analyses if ka.skipped]
+    return CheckResult(
+        "grid_write_safety", not violations, violations,
+        details={"note": (f"{len(analyses)} kernel(s), {n_ops} operand "
+                          f"window(s) evaluated"
+                          + (f"; skipped {skipped}" if skipped else "")
+                          if analyses else "no pallas_call in program"),
+                 "kernels": kernels})
+
+
+# --------------------------------------------------------------------------- #
+# (7) HBM-traffic / roofline cost model
+# --------------------------------------------------------------------------- #
+@register_check(
+    "hbm_traffic", level="jaxpr",
+    description="no pallas_call streams more than its declared multiple of "
+                "the ideal HBM traffic; bytes/FLOPs/arithmetic-intensity "
+                "reported per kernel")
+def check_hbm_traffic(program: ProgramArtifacts,
+                      ctx: CheckContext) -> CheckResult:
+    from repro.analysis import grid as _grid
+    from repro.analysis import traffic as _traffic
+
+    _grid.ensure_declarations()
+    traffics = _traffic.estimate_jaxpr(program.jaxpr)
+    violations = []
+    for kt in traffics:
+        factor = _grid.get_discipline(kt.kernel).traffic_factor
+        msg = _traffic.over_streaming(kt, factor)
+        if msg is not None:
+            violations.append(Violation("hbm_traffic", msg, kt.kernel))
+    note = (", ".join(
+        f"{kt.kernel}: {kt.streaming_factor:.2f}x ideal, "
+        f"{kt.intensity:.1f} FLOP/B" for kt in traffics)
+        if traffics else "no pallas_call in program")
+    return CheckResult("hbm_traffic", not violations, violations,
+                       details={"note": note, "traffic": traffics})
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,238 @@
+"""Committed analysis lockfile: pinned fingerprints of every static check.
+
+The static verifier proves invariants; the lockfile pins their *numbers*.
+``ANALYSIS_LOCK.json`` (committed at the repo root) records, for every
+(config, backend, program) in :data:`LOCK_MATRIX`, a canonical fingerprint of
+each check's outcome plus its key quantities — collective count, VMEM
+footprints, matmul compute dtype, buffer aliasing, per-operand grid access
+statistics, HBM bytes/FLOPs. CI re-derives the fingerprints and diffs them
+against the committed lock, so a PR that silently changes kernel traffic, the
+grid schedule, a precision policy, or donation shows up as a *readable diff*
+in the failing log — and an intentional change is an explicit
+``python -m repro.analysis lock write`` plus a reviewed lockfile hunk.
+
+Fingerprints contain only quantities that are deterministic functions of the
+traced program (jaxpr/lowered-level numbers, and the HLO *collective count*
+but not raw HLO op totals, which may vary with compiler autotuning across
+hosts). Floats are avoided: bytes and FLOPs are exact integers.
+
+Workflow:
+
+- ``python -m repro.analysis lock write``    regenerate + overwrite the lock
+- ``python -m repro.analysis lock verify``   re-derive and diff (exit 1 on
+  drift, with a per-field diff; exit 2 on a malformed/missing lockfile)
+- CI runs ``lock verify --backend {ref,pallas}`` on the matching full-deps
+  leg, so both backends' fingerprints are enforced per PR.
+
+Import-light on purpose (jax only inside functions).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Tuple
+
+#: lockfile schema version (bump when fingerprint content changes shape)
+LOCK_VERSION = 1
+
+#: default lockfile path, relative to the repo root / CWD
+DEFAULT_LOCK_PATH = "ANALYSIS_LOCK.json"
+
+#: the pinned (config, backends, max_level) matrix. quickstart is small
+#: enough to compile (hlo level: zero_collectives runs); smoke/production256
+#: stop at lowered (their invariants are jaxpr/lowered-level; production256
+#: compiles slowly and is pallas-gated in CI).
+LOCK_MATRIX: Tuple[Tuple[str, Tuple[str, ...], str], ...] = (
+    ("quickstart", ("ref", "pallas"), "hlo"),
+    ("smoke", ("ref", "pallas"), "lowered"),
+    ("production256", ("pallas",), "lowered"),
+)
+
+
+# --------------------------------------------------------------------------- #
+# Fingerprints
+# --------------------------------------------------------------------------- #
+def _fp_zero_collectives(r) -> dict:
+    return {"n_collectives": r.details.get("n_collectives", 0)}
+
+
+def _fp_vmem(r) -> dict:
+    fps = r.details.get("footprints") or []
+    return {"kernels": {fp.kernel: int(fp.total_bytes) for fp in fps}}
+
+
+def _fp_precision(r) -> dict:
+    return {"n_matmuls": r.details.get("n_matmuls", 0),
+            "compute_dtype": r.details.get("compute_dtype", "")}
+
+
+def _fp_donation(r) -> dict:
+    return {"aliased_buffers": r.details.get("aliased_buffers", 0),
+            "donated_buffers": r.details.get("donated_buffers", 0)}
+
+
+def _fp_grid(r) -> dict:
+    kernels = {}
+    for name, ka in (r.details.get("kernels") or {}).items():
+        kernels[name] = {
+            "grid": list(ka.grid),
+            "operands": {
+                acc.name: {"distinct": int(acc.distinct),
+                           "fetches": int(acc.fetches),
+                           "visits": int(acc.n_points),
+                           "blocks": int(acc.n_blocks_total)}
+                for acc in ka.operands if acc.evaluable
+            },
+        }
+    return {"kernels": kernels}
+
+
+def _fp_traffic(r) -> dict:
+    return {"kernels": {
+        kt.kernel: {"hbm_bytes": int(kt.hbm_bytes),
+                    "ideal_bytes": int(kt.ideal_bytes),
+                    "flops": int(kt.flops)}
+        for kt in (r.details.get("traffic") or [])}}
+
+
+_FINGERPRINTERS = {
+    "zero_collectives": _fp_zero_collectives,
+    "vmem_budget": _fp_vmem,
+    "precision_flow": _fp_precision,
+    "donation": _fp_donation,
+    "grid_write_safety": _fp_grid,
+    "hbm_traffic": _fp_traffic,
+}
+
+
+def fingerprint_report(report) -> dict:
+    """Canonical fingerprint of one program's :class:`Report`: per check, the
+    pass/fail/skip status plus that check's key numbers."""
+    out = {}
+    for r in report.results:
+        fp = {"status": "skip" if r.skipped else
+              ("pass" if r.passed else "fail")}
+        if not r.skipped and r.details:
+            extra = _FINGERPRINTERS.get(r.name)
+            if extra is not None:
+                fp.update(extra(r))
+        out[r.name] = fp
+    return out
+
+
+def _program_key(config: str, backend: str, program_name: str) -> str:
+    # "train_chunk[pallas]" -> "quickstart/pallas/train_chunk"
+    base = program_name.split("[")[0]
+    return f"{config}/{backend}/{base}"
+
+
+# --------------------------------------------------------------------------- #
+# Lock computation / IO
+# --------------------------------------------------------------------------- #
+def compute_lock(matrix=LOCK_MATRIX, *, backends: Optional[List[str]] = None,
+                 progress=None) -> dict:
+    """Re-derive the lock content for ``matrix`` (optionally filtered to
+    ``backends``). Runs every registered check over every standard program of
+    every (config, backend) cell."""
+    from repro.analysis.programs import analyze_config
+
+    entries: Dict[str, dict] = {}
+    for config, cfg_backends, max_level in matrix:
+        for b in cfg_backends:
+            if backends and b not in backends:
+                continue
+            if progress:
+                progress(f"analyzing {config} [{b}] (max_level={max_level})")
+            for report in analyze_config(config, backend=b,
+                                         max_level=max_level):
+                key = _program_key(config, b, report.program)
+                entries[key] = fingerprint_report(report)
+    return {
+        "version": LOCK_VERSION,
+        "matrix": {c: {"backends": list(bs), "max_level": lvl}
+                   for c, bs, lvl in matrix},
+        "entries": entries,
+    }
+
+
+def dump_lock(lock: dict) -> str:
+    """Canonical serialization (sorted keys, stable indent, one trailing
+    newline) so lock diffs are minimal and reviewable."""
+    return json.dumps(lock, sort_keys=True, indent=2) + "\n"
+
+
+def write_lock(path: str = DEFAULT_LOCK_PATH, matrix=LOCK_MATRIX,
+               progress=None) -> dict:
+    lock = compute_lock(matrix, progress=progress)
+    with open(path, "w") as f:
+        f.write(dump_lock(lock))
+    return lock
+
+
+def read_lock(path: str = DEFAULT_LOCK_PATH) -> dict:
+    with open(path) as f:
+        lock = json.load(f)
+    if not isinstance(lock, dict) or "entries" not in lock:
+        raise ValueError(f"{path}: not an analysis lockfile (no 'entries')")
+    return lock
+
+
+# --------------------------------------------------------------------------- #
+# Diffing
+# --------------------------------------------------------------------------- #
+def _flatten(d: dict, prefix: str = "") -> Dict[str, object]:
+    flat = {}
+    for k in sorted(d):
+        v = d[k]
+        key = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            flat.update(_flatten(v, key))
+        else:
+            flat[key] = v
+    return flat
+
+
+def diff_locks(committed: dict, current: dict,
+               backends: Optional[List[str]] = None) -> List[str]:
+    """Human-readable field-level differences between the committed lock and
+    freshly derived content. ``backends`` filters which entries are compared
+    (a CI leg only verifies its own backend's programs). Empty list = clean."""
+    def keep(key: str) -> bool:
+        if not backends:
+            return True
+        return key.split("/")[1] in backends
+
+    a = {k: v for k, v in committed.get("entries", {}).items() if keep(k)}
+    b = {k: v for k, v in current.get("entries", {}).items() if keep(k)}
+    lines: List[str] = []
+    if committed.get("version") != current.get("version"):
+        lines.append(f"lock version: committed={committed.get('version')} "
+                     f"current={LOCK_VERSION}")
+    for key in sorted(set(a) - set(b)):
+        lines.append(f"{key}: in lockfile but not derivable from the current "
+                     f"code (program removed or renamed?)")
+    for key in sorted(set(b) - set(a)):
+        lines.append(f"{key}: produced by the current code but missing from "
+                     f"the lockfile (run `python -m repro.analysis lock "
+                     f"write`)")
+    for key in sorted(set(a) & set(b)):
+        fa, fb = _flatten(a[key]), _flatten(b[key])
+        for f in sorted(set(fa) | set(fb)):
+            va, vb = fa.get(f, "<absent>"), fb.get(f, "<absent>")
+            if va != vb:
+                lines.append(f"{key} :: {f}: lock={va} current={vb}")
+    return lines
+
+
+def verify_lock(path: str = DEFAULT_LOCK_PATH,
+                backends: Optional[List[str]] = None,
+                progress=None) -> List[str]:
+    """Diff the committed lockfile against freshly derived fingerprints.
+    Returns the drift lines (empty = verified). Raises ``FileNotFoundError``
+    / ``ValueError`` for a missing/malformed lockfile."""
+    committed = read_lock(path)
+    matrix = tuple(
+        (c, tuple(m["backends"]), m["max_level"])
+        for c, m in sorted(committed.get("matrix", {}).items())
+    ) or LOCK_MATRIX
+    current = compute_lock(matrix, backends=backends, progress=progress)
+    return diff_locks(committed, current, backends=backends)

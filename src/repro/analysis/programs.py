@@ -14,9 +14,15 @@ programs the paper's systems claims are about:
 - ``render``       sort-last distributed rendering (per-rank ray march +
                    depth compositing — the zero-communication render path),
 - ``render_cached``  the same frame through the ``repro.serving`` brick pool
-                   (trilinear gathers, zero INR inference on the hot path).
+                   (trilinear gathers, zero INR inference on the hot path),
+- ``serving_tick``  one :class:`repro.serving.RenderService` tick: the
+                   batched vmapped frame program (many clients, one jit) —
+                   the exact function the service compiles per group.
 
-Named configs for the CLI live in :data:`CONFIGS`.
+Render/serving contexts carry the config's precision policy with
+``expect_master_state=False`` (inference programs have no optimizer state),
+so ``precision_flow`` checks the matmul compute dtype on the serving stack
+too. Named configs for the CLI live in :data:`CONFIGS`.
 """
 from __future__ import annotations
 
@@ -152,20 +158,33 @@ def degraded_chunk_args(trainer, *, n_steps: int = 2):
             copy.deepcopy(params), copy.deepcopy(opt))
 
 
+def _render_ctx(cfg, b) -> CheckContext:
+    """Render/serving check context: the config's precision policy applies to
+    the inference matmuls, but there is no optimizer master state to shadow
+    (``expect_master_state=False``) and nothing is donated."""
+    from repro.precision import resolve_precision
+
+    return CheckContext(backend=b, precision=resolve_precision(cfg.precision),
+                        expect_master_state=False)
+
+
 def render_program(cfg, *, backend="auto", n_partitions: int = 2,
                    width: int = 16, height: int = 16, n_samples: int = 8
                    ) -> Tuple[ProgramArtifacts, CheckContext]:
     """The sort-last render path as an analyzed program: per-rank ray march
-    over the stacked params + exact depth compositing. No donation / RNG /
-    precision context — the render-relevant invariants are zero communication
-    and the VMEM budget of the inference kernels."""
+    over the stacked params + exact depth compositing. No donation / RNG
+    context — the render-relevant invariants are zero communication, the VMEM
+    budget and grid discipline of the inference kernels, and the precision
+    flow of the config's policy (compute dtype threaded into the frame)."""
     import jax
 
     from repro import backends
     from repro.core.inr import init_inr
     from repro.core.render import Camera, _render_distributed
+    from repro.precision import resolve_precision
 
     b = backends.resolve(backend)
+    cdt = resolve_precision(cfg.precision).compute_dtype
     # synthetic partition metadata: a z-split unit box (host-side data only —
     # the traced program is shape-dependent, not value-dependent)
     metas = [{"origin": (0.0, 0.0, p / n_partitions),
@@ -181,10 +200,11 @@ def render_program(cfg, *, backend="auto", n_partitions: int = 2,
 
     def fn(params):
         return _render_distributed(cfg, params, metas, cam, width, height,
-                                   (0.0, 1.0), n_samples=n_samples, impl=b)
+                                   (0.0, 1.0), n_samples=n_samples, impl=b,
+                                   compute_dtype=cdt)
 
     program = capture(fn, stacked, name=f"render[{b.name}]")
-    return program, CheckContext(backend=b)
+    return program, _render_ctx(cfg, b)
 
 
 def cached_render_program(cfg, *, backend="auto", n_partitions: int = 2,
@@ -204,8 +224,10 @@ def cached_render_program(cfg, *, backend="auto", n_partitions: int = 2,
 
     from repro import backends
     from repro.core.render import Camera, _render_distributed_sampled, meta_arrays
+    from repro.precision import resolve_precision
 
     b = backends.resolve(backend)
+    cdt = resolve_precision(cfg.precision).compute_dtype
     metas_h = [{"origin": (0.0, 0.0, p / n_partitions),
                 "extent": (1.0, 1.0, 1.0 / n_partitions),
                 "vmin": 0.0, "vmax": 1.0} for p in range(n_partitions)]
@@ -220,17 +242,70 @@ def cached_render_program(cfg, *, backend="auto", n_partitions: int = 2,
     def fn(pool, slots):
         return _render_distributed_sampled(
             pool, slots, grid_shape, brick_edge, metas, cam, width, height,
-            (0.0, 1.0), n_samples=n_samples, impl=b)
+            (0.0, 1.0), n_samples=n_samples, impl=b, compute_dtype=cdt)
 
     program = capture(fn, pool, slots, name=f"render_cached[{b.name}]")
-    return program, CheckContext(backend=b)
+    return program, _render_ctx(cfg, b)
+
+
+def serving_tick_program(cfg, *, backend="auto", n_partitions: int = 2,
+                         n_clients: int = 3, width: int = 16, height: int = 16,
+                         n_samples: int = 8, grid_shape=(16, 16, 16),
+                         brick_edge: int = 8
+                         ) -> Tuple[ProgramArtifacts, CheckContext]:
+    """One :class:`repro.serving.RenderService` tick as an analyzed program:
+    the exact :func:`repro.serving.service.batched_frame_program` the service
+    jits per request group — ``n_clients`` cameras + transfer functions
+    vmapped over one shared brick pool. Proves the multi-client hot path
+    inherits every single-frame invariant (zero collectives, VMEM budget,
+    grid discipline, precision flow) with the batch dimension on top."""
+    import math
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import backends
+    from repro.core.render import meta_arrays
+    from repro.precision import resolve_precision
+    from repro.serving.service import batched_frame_program
+
+    b = backends.resolve(backend)
+    cdt = resolve_precision(cfg.precision).compute_dtype
+    metas_h = [{"origin": (0.0, 0.0, p / n_partitions),
+                "extent": (1.0, 1.0, 1.0 / n_partitions),
+                "vmin": 0.0, "vmax": 1.0} for p in range(n_partitions)]
+    metas = meta_arrays(metas_h)
+    E = brick_edge + 1
+    nb = tuple(-(-s // brick_edge) for s in grid_shape)
+    n_slots = n_partitions * int(math.prod(nb))
+    B = n_clients
+    eyes = jax.ShapeDtypeStruct((B, 3), jnp.float32)
+    ctrs = jax.ShapeDtypeStruct((B, 3), jnp.float32)
+    ups = jax.ShapeDtypeStruct((B, 3), jnp.float32)
+    tfs = jax.ShapeDtypeStruct((B, 64, 4), jnp.float32)
+    pool = jax.ShapeDtypeStruct((n_slots, E, E, E), jnp.float32)
+    slots = jax.ShapeDtypeStruct((n_partitions,) + nb, jnp.int32)
+    grange = jax.ShapeDtypeStruct((2,), jnp.float32)
+
+    tick = batched_frame_program(
+        cfg, fov=45.0, width=width, height=height, n_samples=n_samples,
+        density=50.0, compute_dtype=cdt, backend=b, cached=True,
+        view_geom=(grid_shape, brick_edge))
+
+    def fn(eyes, ctrs, ups, tfs, pool, slots, grange):
+        return tick(eyes, ctrs, ups, tfs, pool, slots, metas, grange, None)
+
+    program = capture(fn, eyes, ctrs, ups, tfs, pool, slots, grange,
+                      name=f"serving_tick[{b.name}]")
+    return program, _render_ctx(cfg, b)
 
 
 def config_programs(cfg, local_shape, *, backend="auto", n_partitions: int = 2,
                     ghost: int = 1, mesh=None, n_steps: int = 2,
                     ) -> List[Tuple[ProgramArtifacts, CheckContext]]:
-    """All standard programs of one config: train step, train chunk, render
-    (direct INR and brick-cached)."""
+    """All standard programs of one config: train step, train chunk (healthy
+    and degraded), render (direct INR and brick-cached), and one batched
+    serving tick."""
     trainer = build_trainer(cfg, backend=backend, n_partitions=n_partitions,
                             local_shape=local_shape, ghost=ghost, mesh=mesh)
     progs = trainer_programs(trainer, n_steps=n_steps)
@@ -238,6 +313,8 @@ def config_programs(cfg, local_shape, *, backend="auto", n_partitions: int = 2,
                                 n_partitions=n_partitions))
     progs.append(cached_render_program(cfg, backend=trainer.backend,
                                        n_partitions=n_partitions))
+    progs.append(serving_tick_program(cfg, backend=trainer.backend,
+                                      n_partitions=n_partitions))
     return progs
 
 

@@ -1,0 +1,216 @@
+"""HBM-traffic / roofline cost model for ``pallas_call`` kernels.
+
+The static half of the trace-driven autotuning story (ROADMAP): per kernel,
+estimate
+
+- **bytes moved** between HBM and VMEM: each input DMA fetch costs its block
+  bytes, each output write-back run costs its block bytes (the double-buffer
+  pipeline fetches on index *change* and writes a block back when its window
+  moves on — both counts come from the concrete index-map evaluation of
+  :mod:`repro.analysis.grid`);
+- **ideal bytes**: every distinct input block read once + every distinct
+  output block written once (the compulsory traffic of the operand set);
+- **FLOPs**: a structural walk of the kernel jaxpr (``dot_general`` =
+  ``2*M*N*K*batch``, elementwise = output elements, ``cond`` branches
+  contribute their max) times the grid size.
+
+Reported as arithmetic intensity (FLOPs / byte) alongside the VMEM bill; the
+``hbm_traffic`` check fails when ``bytes_moved`` exceeds the kernel's declared
+multiple of ``ideal_bytes`` (:class:`repro.analysis.grid.GridDiscipline`
+``traffic_factor``; ``None`` = report-only). The estimates are the cost-model
+inputs the trace-driven tuner will calibrate against real timings.
+
+Import-light on purpose (jax only inside functions).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+from repro.analysis import grid as _grid
+from repro.analysis.vmem import _fmt_bytes
+
+#: primitives that move/reshape data without arithmetic — zero FLOPs
+_ZERO_FLOP_PRIMS = frozenset({
+    "broadcast_in_dim", "reshape", "transpose", "convert_element_type",
+    "slice", "dynamic_slice", "dynamic_update_slice", "squeeze", "concatenate",
+    "iota", "gather", "scatter", "rev", "pad", "bitcast_convert_type",
+    "copy", "stop_gradient", "get", "swap", "masked_load", "masked_swap",
+    "program_id", "num_programs", "select_n", "and", "or", "not", "xor",
+    "shift_left", "shift_right_logical", "shift_right_arithmetic",
+})
+
+
+# --------------------------------------------------------------------------- #
+# FLOP estimation (structural jaxpr walk)
+# --------------------------------------------------------------------------- #
+def _out_elems(eqn) -> int:
+    n = 0
+    for v in eqn.outvars:
+        shape = getattr(getattr(v, "aval", None), "shape", None)
+        if shape is not None:
+            n += math.prod(shape) if shape else 1
+    return n
+
+
+def _dot_flops(eqn) -> int:
+    # out elements already carry batch x M x N; the contraction adds K
+    ((lc, _rc), _batch) = eqn.params["dimension_numbers"]
+    lhs = eqn.invars[0].aval.shape
+    k = math.prod(lhs[d] for d in lc) if lc else 1
+    out = math.prod(eqn.outvars[0].aval.shape) or 1
+    return 2 * out * k
+
+
+def flops_of_jaxpr(jaxpr) -> int:
+    """Estimated FLOPs of one evaluation of ``jaxpr`` (a kernel body or
+    sub-jaxpr). Structural and deliberately simple: matmuls dominate every
+    in-repo kernel; elementwise ops cost one FLOP per output element;
+    ``cond`` takes the max branch, ``scan`` multiplies by its length."""
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            total += _dot_flops(eqn)
+        elif name == "cond":
+            branches = eqn.params.get("branches", ())
+            total += max((flops_of_jaxpr(b.jaxpr) for b in branches),
+                         default=0)
+        elif name == "scan":
+            length = int(eqn.params.get("length", 1))
+            total += length * flops_of_jaxpr(eqn.params["jaxpr"].jaxpr)
+        elif name == "while":
+            # trip count unknowable statically: charge one iteration of both
+            # bodies (in-repo kernels contain no while loops)
+            total += flops_of_jaxpr(eqn.params["body_jaxpr"].jaxpr)
+        elif name in _ZERO_FLOP_PRIMS:
+            continue
+        else:
+            sub = False
+            for v in eqn.params.values():
+                for x in (v if isinstance(v, (list, tuple)) else [v]):
+                    inner = getattr(x, "jaxpr", None)
+                    if inner is not None:
+                        total += flops_of_jaxpr(inner)
+                        sub = True
+                    elif hasattr(x, "eqns"):
+                        total += flops_of_jaxpr(x)
+                        sub = True
+            if not sub:
+                total += _out_elems(eqn)      # elementwise / reduction
+    return total
+
+
+# --------------------------------------------------------------------------- #
+# Per-kernel traffic estimate
+# --------------------------------------------------------------------------- #
+@dataclass
+class OperandTraffic:
+    """HBM bytes of one operand across the whole grid."""
+
+    name: str
+    kind: str
+    bytes_moved: int
+    ideal_bytes: int
+    note: str = ""
+
+    def row(self) -> str:
+        tag = f" [{self.note}]" if self.note else ""
+        return (f"{self.name:<8s} {self.kind:<4s} "
+                f"{_fmt_bytes(self.bytes_moved):>10s} moved / "
+                f"{_fmt_bytes(self.ideal_bytes):>10s} ideal{tag}")
+
+
+@dataclass
+class KernelTraffic:
+    """The roofline numbers of one ``pallas_call``."""
+
+    kernel: str
+    grid: Tuple[int, ...]
+    flops: int = 0
+    operands: List[OperandTraffic] = field(default_factory=list)
+    skipped: str = ""
+
+    @property
+    def hbm_bytes(self) -> int:
+        return sum(o.bytes_moved for o in self.operands)
+
+    @property
+    def ideal_bytes(self) -> int:
+        return sum(o.ideal_bytes for o in self.operands)
+
+    @property
+    def streaming_factor(self) -> float:
+        """actual/ideal HBM traffic (1.0 = every block moved exactly once)."""
+        return self.hbm_bytes / self.ideal_bytes if self.ideal_bytes else 1.0
+
+    @property
+    def intensity(self) -> float:
+        """Arithmetic intensity in FLOPs per HBM byte actually moved."""
+        return self.flops / self.hbm_bytes if self.hbm_bytes else 0.0
+
+    def breakdown(self) -> str:
+        head = (f"pallas_call {self.kernel} grid={self.grid}: "
+                f"{_fmt_bytes(self.hbm_bytes)} HBM "
+                f"({self.streaming_factor:.2f}x ideal), "
+                f"{self.flops:,} FLOPs, "
+                f"{self.intensity:.1f} FLOP/B")
+        if self.skipped:
+            return f"{head} [SKIPPED: {self.skipped}]"
+        return "\n".join([head] + ["  " + o.row() for o in self.operands])
+
+
+def traffic_of_analysis(ka: _grid.KernelGridAnalysis,
+                        kernel_jaxpr) -> KernelTraffic:
+    """Price one kernel's grid analysis: fetch/run counts x block bytes,
+    plus the FLOP walk of its body."""
+    kt = KernelTraffic(kernel=ka.kernel, grid=ka.grid, skipped=ka.skipped)
+    if ka.skipped:
+        return kt
+    for acc in ka.operands:
+        if not acc.evaluable:
+            # conservative worst case: a fresh DMA at every grid point
+            moved = ka.n_points * acc.block_bytes
+            note = "unevaluable index map: worst-case estimate"
+            ideal = acc.block_bytes
+        else:
+            moved = acc.fetches * acc.block_bytes
+            ideal = acc.distinct * acc.block_bytes
+            note = ""
+        kt.operands.append(OperandTraffic(
+            name=acc.name, kind=acc.kind, bytes_moved=moved,
+            ideal_bytes=ideal, note=note))
+    kt.flops = ka.n_points * flops_of_jaxpr(kernel_jaxpr)
+    return kt
+
+
+def estimate_eqn(eqn) -> KernelTraffic:
+    """Traffic estimate of one traced ``pallas_call`` equation."""
+    return traffic_of_analysis(_grid.analyze_eqn(eqn), eqn.params["jaxpr"])
+
+
+def estimate_jaxpr(jaxpr) -> List[KernelTraffic]:
+    """Traffic estimates of every ``pallas_call`` reachable from a jaxpr."""
+    from repro.analysis.vmem import iter_pallas_eqns
+
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    return [estimate_eqn(e) for e in iter_pallas_eqns(inner)]
+
+
+def over_streaming(kt: KernelTraffic,
+                   factor: Optional[float]) -> Optional[str]:
+    """``None`` if ``kt`` fits the declared streaming factor, else the full
+    per-operand failure message (``factor=None`` = report-only)."""
+    if kt.skipped or factor is None or not kt.ideal_bytes:
+        return None
+    if kt.hbm_bytes <= factor * kt.ideal_bytes:
+        return None
+    return (f"streams {_fmt_bytes(kt.hbm_bytes)} HBM, "
+            f"{kt.streaming_factor:.2f}x its {_fmt_bytes(kt.ideal_bytes)} "
+            f"ideal traffic (declared max {factor:.2f}x)\n{kt.breakdown()}")
+
+
+#: package-level alias (``repro.analysis.estimate_traffic_jaxpr``) — the bare
+#: ``estimate_jaxpr`` name collides with vmem's at the package root
+estimate_traffic_jaxpr = estimate_jaxpr

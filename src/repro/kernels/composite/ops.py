@@ -28,3 +28,16 @@ def vmem_footprint(rgba, impl: backends.BackendLike = "pallas"):
 
     b = backends.resolve(impl)
     return footprint_of(lambda r: composite(r, b), rgba)
+
+
+# --------------------------------------------------------------------------- #
+# Grid-access contract (repro.analysis grid_write_safety / hbm_traffic)
+# --------------------------------------------------------------------------- #
+from repro.analysis.grid import register_discipline  # noqa: E402
+
+register_discipline(
+    "_composite_kernel",
+    # each ray block's output window is held across the whole sample-block
+    # sweep and stored once under pl.when(j == n_s_blocks - 1)
+    multi_write={"out[0]": "last_write"},
+    note="front-to-back accumulation in scratch; one store per ray block")

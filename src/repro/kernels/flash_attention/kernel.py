@@ -34,7 +34,7 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or getattr(pltpu, "TPUCompilerParams")
 
 
-def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
             causal: bool, window, sq: int, sk: int, dh: int, n_k: int):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
@@ -107,7 +107,7 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True, window=None,
     Sq_p, Sk_p = Sq + pad_q, Sk + pad_k
     n_q, n_k = Sq_p // BLOCK_Q, Sk_p // BLOCK_K
 
-    kernel = functools.partial(_kernel, causal=causal, window=window,
+    kernel = functools.partial(_flash_kernel, causal=causal, window=window,
                                sq=Sq, sk=Sk, dh=dh, n_k=n_k)
     out = pl.pallas_call(
         kernel,

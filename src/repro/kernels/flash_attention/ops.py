@@ -74,3 +74,20 @@ def _vjp_bwd(causal, window, backend, res, g):
 
 
 _flash_attention.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+# --------------------------------------------------------------------------- #
+# Grid-access contract (repro.analysis grid_write_safety / hbm_traffic)
+# --------------------------------------------------------------------------- #
+from repro.analysis.grid import register_discipline  # noqa: E402
+
+register_discipline(
+    "_flash_kernel",
+    # online softmax: the output window rides the whole k-block sweep and is
+    # stored on the final k block; k/v blocks are re-streamed once per query
+    # block (and once per GQA query head sharing them) — traffic scales with
+    # n_q by design, so the streaming factor is report-only here
+    multi_write={"out[0]": "last_write"},
+    input_refetch=("in[1]", "in[2]"),
+    traffic_factor=None,
+    note="flash-style k/v re-streaming; factor scales with query blocks")

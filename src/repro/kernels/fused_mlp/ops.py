@@ -86,3 +86,21 @@ def _bwd(backend, res, g):
 
 
 _fused_mlp.defvjp(_fwd, _bwd)
+
+
+# --------------------------------------------------------------------------- #
+# Grid-access contract (repro.analysis grid_write_safety / hbm_traffic)
+# --------------------------------------------------------------------------- #
+from repro.analysis.grid import register_discipline  # noqa: E402
+
+register_discipline(
+    "_fwd_kernel",
+    note="weights VMEM-pinned (trivial window); x/out stream single-pass")
+register_discipline(
+    "_bwd_kernel",
+    # dW outputs are whole-array pinned blocks accumulated (`+=`) across the
+    # batch-tile grid, zero-initialized at pl.when(first) — the sequential
+    # TPU grid makes the accumulation safe (the MXU-friendly atomicAdd)
+    multi_write={"out[1]": "accumulate", "out[2]": "accumulate",
+                 "out[3]": "accumulate"},
+    note="dW pinned accumulators across batch tiles; dx streams per tile")

@@ -332,7 +332,7 @@ def fused_train_step_pallas(coords, target, params, moments_m, moments_v,
         return pl.BlockSpec((1, BLOCK_N) + shape,
                             lambda p, i, *_: (p, i) + (0,) * len(shape))
 
-    def kernel(res_ref, sc_ref, coords_ref, target_ref, *refs):
+    def _step_kernel(res_ref, sc_ref, coords_ref, target_ref, *refs):
         _train_step_core(res_ref, sc_ref, coords_ref[0], target_ref[0],
                          refs[:-5], *refs[-5:],
                          p=pl.program_id(0), i=pl.program_id(1),
@@ -342,7 +342,7 @@ def fused_train_step_pallas(coords, target, params, moments_m, moments_v,
                          has_master=has_master)
 
     outs = pl.pallas_call(
-        kernel,
+        _step_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=(P, n_tiles),
@@ -388,7 +388,7 @@ def fused_train_step_sampling_pallas(volumes, seeds, params, moments_m,
     _, state_specs, out_specs, out_shape, operands, scratch = \
         _state_layout(params, moments_m, moments_v, masters, P)
 
-    def kernel(res_ref, sc_ref, seed_ref, vol_ref, *refs):
+    def _sampling_kernel(res_ref, sc_ref, seed_ref, vol_ref, *refs):
         p = pl.program_id(0)
         i = pl.program_id(1)
         rows = i * BLOCK_N + jax.lax.broadcasted_iota(
@@ -406,7 +406,7 @@ def fused_train_step_sampling_pallas(volumes, seeds, params, moments_m,
                          has_master=has_master)
 
     outs = pl.pallas_call(
-        kernel,
+        _sampling_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(P, n_tiles),
@@ -507,7 +507,7 @@ def fused_train_step_sampling_tiled_pallas(volumes, seeds, params, moments_m,
         lo = jnp.clip(jnp.floor(pos), 0.0, jnp.float32(ax_dim - 2))
         return lo.astype(jnp.int32), jnp.clip(pos - lo, 0.0, 1.0)
 
-    def kernel(res_ref, sc_ref, seed_ref, vol_ref, *refs):
+    def _tiled_sampling_kernel(res_ref, sc_ref, seed_ref, vol_ref, *refs):
         p = pl.program_id(0)
         s = pl.program_id(1)
         coords_scr, corners_scr = refs[-2], refs[-1]
@@ -576,7 +576,7 @@ def fused_train_step_sampling_tiled_pallas(volumes, seeds, params, moments_m,
                              has_master=has_master)
 
     outs = pl.pallas_call(
-        kernel,
+        _tiled_sampling_kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=(P, n_bricks + n_tiles),

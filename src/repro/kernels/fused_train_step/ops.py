@@ -397,3 +397,31 @@ def fused_train_step_sampling(params, opt, volumes, seeds, gate, *,
     new_params, new_opt = _rebuild(opt, step, new_p, new_m, new_v, new_mw,
                                    n_hidden)
     return new_params, new_opt, loss
+
+
+# --------------------------------------------------------------------------- #
+# Grid-access contract (repro.analysis grid_write_safety / hbm_traffic)
+# --------------------------------------------------------------------------- #
+from repro.analysis.grid import register_discipline  # noqa: E402
+
+# All three variants share the state layout: every param/moment/master output
+# (and the loss) is a partition-indexed window held across that partition's
+# whole tile sweep, written ONCE by the AdamW update under
+# pl.when(i == n_tiles - 1) — the canonical last-tile-write pattern.
+register_discipline(
+    "_step_kernel",
+    multi_write={"out[*]": "last_write"},
+    note="state written once per partition on the last batch tile")
+register_discipline(
+    "_sampling_kernel",
+    multi_write={"out[*]": "last_write"},
+    note="volume pinned per partition; state written on the last batch tile")
+register_discipline(
+    "_tiled_sampling_kernel",
+    multi_write={"out[*]": "last_write"},
+    # the PR 8 owner invariant, statically: the brick sweep must visit EVERY
+    # brick of the (P x brick-grid) volume exactly once (each corner voxel's
+    # owner banks it; the jnp.minimum re-park keeps the window adjacent, so
+    # fetches == distinct == all bricks)
+    full_coverage_inputs=("in[0]",),
+    note="HBM volume streamed brick-by-brick; owner sweep covers all bricks")

@@ -114,3 +114,19 @@ def _bwd(resolutions, backend, res, g):
 
 
 _hash_encode.defvjp(_fwd, _bwd)
+
+
+# --------------------------------------------------------------------------- #
+# Grid-access contract (repro.analysis grid_write_safety / hbm_traffic)
+# --------------------------------------------------------------------------- #
+from repro.analysis.grid import register_discipline  # noqa: E402
+
+register_discipline(
+    "_encode_kernel",
+    # the (BLOCK_N, 3) coords block is re-streamed once per hash level (the
+    # level axis is the outer grid dim); table and output blocks single-pass.
+    # Worst-case actual/ideal traffic is 1 + 12(L-1)/(12 + 4F*L) < 2.5 for
+    # any level count at F >= 2 (the output array grows with L too).
+    input_refetch=("in[0]",),
+    traffic_factor=2.5,
+    note="coords re-fetched per level; table/output blocks move once")

@@ -123,6 +123,67 @@ class BrickCache:
         test asserts against the live array."""
         return self.n_slots * self.slot_bytes
 
+    def decode_vmem_closed_form(self, n_bricks: int = 1) -> list:
+        """Closed-form VMEM bill of one batched decode (``n_bricks`` bricks =
+        ``n_bricks * (edge+1)^3`` coords through hash encode + fused MLP), as
+        :class:`repro.analysis.vmem.KernelFootprint`\\ s — NO tracing. The
+        blocks mirror the kernels' BlockSpecs: grid-varying coord/feature
+        tiles are double-buffered, the per-level table slice streams per
+        level, the MLP weight stack is VMEM-pinned. Parity with the traced
+        :meth:`decode_vmem_footprint` is asserted in the test suite."""
+        from repro.analysis.vmem import KernelFootprint, VmemBuffer
+        from repro.kernels.fused_mlp.kernel import BLOCK_N as MLP_BN
+        from repro.kernels.hash_encoding.kernel import BLOCK_N as ENC_BN
+
+        cfg = self.cfg
+        L, T, F = cfg.n_levels, cfg.table_size, cfg.n_features_per_level
+        W, H = cfg.n_neurons, cfg.n_hidden_layers
+        cdt = jnp.dtype(self.compute_dtype or jnp.float32).name
+        N = n_bricks * (self.brick_edge + 1) ** 3
+        enc = KernelFootprint(
+            kernel="_encode_kernel", grid=(L, _ceil_div(N, ENC_BN)),
+            buffers=[
+                # coords stay f32 (hash-grid positions need the mantissa)
+                VmemBuffer("in[0]", "in", (ENC_BN, 3), "float32",
+                           pipelined=True),
+                VmemBuffer("in[1]", "in", (1, T, F), cdt, pipelined=True),
+                VmemBuffer("out[0]", "out", (ENC_BN, 1, F), cdt,
+                           pipelined=True),
+            ])
+        mlp = KernelFootprint(
+            kernel="_fwd_kernel", grid=(_ceil_div(N, MLP_BN),),
+            buffers=[
+                VmemBuffer("in[0]", "in", (MLP_BN, L * F), cdt,
+                           pipelined=True),
+                VmemBuffer("in[1]", "in", (L * F, W), cdt),
+                # ops._stack pads the hidden stack to >= 1 layer (a (0,W,W)
+                # array cannot be a BlockSpec operand)
+                VmemBuffer("in[2]", "in", (max(1, H - 1), W, W), cdt),
+                VmemBuffer("in[3]", "in", (W, cfg.out_dim), cdt),
+                VmemBuffer("out[0]", "out", (MLP_BN, cfg.out_dim), cdt,
+                           pipelined=True),
+            ])
+        return [enc, mlp]
+
+    def decode_vmem_footprint(self, n_bricks: int = 1) -> list:
+        """Traced VMEM bill of the same batched decode: abstractly traces
+        :meth:`_decode_impl` and reads the actual ``pallas_call`` block
+        mappings (empty on non-pallas backends — they emit no kernels)."""
+        from repro.analysis.vmem import footprint_of
+
+        cfg = self.cfg
+        L, T, F = cfg.n_levels, cfg.table_size, cfg.n_features_per_level
+        W, H = cfg.n_neurons, cfg.n_hidden_layers
+        dims = [L * F] + [W] * H + [cfg.out_dim]
+        params = {
+            "tables": jax.ShapeDtypeStruct((L, T, F), jnp.float32),
+            "mlp": [jax.ShapeDtypeStruct((a, b), jnp.float32)
+                    for a, b in zip(dims[:-1], dims[1:])],
+        }
+        N = n_bricks * (self.brick_edge + 1) ** 3
+        coords = jax.ShapeDtypeStruct((N, 3), jnp.float32)
+        return footprint_of(self._decode_impl, params, coords)
+
     def level_grid(self, level: int) -> Tuple[int, int, int]:
         """Decode resolution at LOD ``level`` (>= 2 voxels per axis)."""
         return tuple(max(2, _ceil_div(s, 1 << level)) for s in self.grid_shape)

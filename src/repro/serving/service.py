@@ -33,6 +33,40 @@ from repro.core.render import (_render_distributed, _render_distributed_sampled,
 from repro.serving.cache import BrickCache
 
 
+def batched_frame_program(cfg, *, fov: float, width: int, height: int,
+                          n_samples: int, density: float,
+                          compute_dtype=None, out_dtype=None,
+                          backend=None, cached: bool = True,
+                          view_geom=None):
+    """The one-tick frame program: one frame per client, vmapped over the
+    per-client camera (eye/center/up) and transfer-function arrays, sharing
+    the pool/slot-map/meta/param operands.
+
+    ``cached=True`` samples the :class:`BrickCache` pool (``view_geom`` =
+    ``(grid_shape, brick_edge)`` of the cache view; ``params`` unused);
+    ``cached=False`` renders through direct INR inference (``pool``/``slots``
+    unused). Module-level (not a service method) so ``repro.analysis`` can
+    capture the exact serving-tick program the service jits
+    (:func:`repro.analysis.programs.serving_tick_program`)."""
+    def one_frame(eye, center, up, tf_table, pool, slots, metas, grange,
+                  params):
+        rays = rays_from_arrays(eye, center, up, fov, width, height)
+        if cached:
+            grid_shape, brick_edge = view_geom
+            return _render_distributed_sampled(
+                pool, slots, grid_shape, brick_edge, metas,
+                None, width, height, grange, n_samples=n_samples,
+                impl=backend, tf_table=tf_table, density=density,
+                compute_dtype=compute_dtype, out_dtype=out_dtype, rays=rays)
+        return _render_distributed(
+            cfg, params, None, None, width, height, grange,
+            n_samples=n_samples, impl=backend, tf_table=tf_table,
+            density=density, compute_dtype=compute_dtype,
+            out_dtype=out_dtype, metas=metas, rays=rays)
+
+    return jax.vmap(one_frame, in_axes=(0, 0, 0, 0) + (None,) * 5)
+
+
 @dataclass(frozen=True, eq=False)
 class RenderResponse:
     """One served frame plus enough context to route it back to its client."""
@@ -166,26 +200,13 @@ class RenderService:
         fn = self._batch_fns.get(fn_key)
         if fn is not None:
             return fn
-        backend = self.backend
         cached = view is not None
-
-        def one_frame(eye, center, up, tf_table, pool, slots, metas, grange,
-                      params):
-            rays = rays_from_arrays(eye, center, up, fov, W, H)
-            if cached:
-                return _render_distributed_sampled(
-                    pool, slots, view.grid_shape, view.brick_edge, metas,
-                    None, W, H, grange, n_samples=S, impl=backend,
-                    tf_table=tf_table, density=density, compute_dtype=cdt,
-                    out_dtype=odt, rays=rays)
-            return _render_distributed(
-                self.cfg, params, None, None, W, H, grange, n_samples=S,
-                impl=backend, tf_table=tf_table, density=density,
-                compute_dtype=cdt, out_dtype=odt, metas=metas, rays=rays)
-
-        fn = jax.jit(jax.vmap(
-            one_frame,
-            in_axes=(0, 0, 0, 0) + (None,) * 5))
+        fn = jax.jit(batched_frame_program(
+            self.cfg, fov=fov, width=W, height=H, n_samples=S,
+            density=density, compute_dtype=cdt, out_dtype=odt,
+            backend=self.backend, cached=cached,
+            view_geom=((view.grid_shape, view.brick_edge) if cached
+                       else None)))
         self._batch_fns[fn_key] = fn
         return fn
 

@@ -24,10 +24,11 @@ SDS = jax.ShapeDtypeStruct
 # registry / report plumbing
 # --------------------------------------------------------------------------- #
 
-def test_registry_has_the_five_checks():
+def test_registry_has_the_seven_checks():
     assert list(available_checks()) == [
         "zero_collectives", "vmem_budget", "precision_flow",
-        "rng_gather_placement", "donation"]
+        "rng_gather_placement", "donation", "grid_write_safety",
+        "hbm_traffic"]
 
 
 def test_static_check_error_is_an_assertion_error():
